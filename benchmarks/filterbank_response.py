@@ -1,0 +1,75 @@
+"""Fig. 4 + Fig. 6 reproduction: filter-bank gain response to a chirp.
+
+Fig. 4 claim: with octave downsampling, fixed 16-tap filters resolve every
+band (without it, the low bands need ~200 taps). Fig. 6: the MP filter bank
+shows the same band structure with some approximation distortion.
+
+We quantify "resolves the band" as band selectivity: energy in the peak
+filter / mean energy, per octave, for octave-matched tones.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.core.filterbank import (FilterBank, FilterBankConfig,
+                                   design_bandpass)
+from repro.data.acoustic import chirp
+
+FS = 16000.0
+
+
+def selectivity(fb, tone_hz, n=4096):
+    t = np.arange(n) / FS
+    x = jnp.asarray(np.sin(2 * np.pi * tone_hz * t,
+                           dtype=np.float64).astype(np.float32))[None]
+    s = np.asarray(fb.accumulate(x))[0]
+    return float(s.max() / (s.mean() + 1e-9)), int(s.argmax())
+
+
+def main():
+    cfg = FilterBankConfig(fs=FS, num_octaves=6, filters_per_octave=5,
+                           bp_taps=16, mode="mac")
+    fb = FilterBank(cfg)
+    tones = [6000, 3000, 1500, 750, 375, 190]  # one per octave
+    for o, tone in enumerate(tones):
+        sel, peak = selectivity(fb, tone)
+        row(f"fig4.downsampled_16tap.octave{o+1}", 0.0,
+            f"tone={tone}Hz selectivity={sel:.1f} peak_filter={peak} "
+            f"peak_octave={fb.octave_of[peak]+1}")
+
+    # counterfactual: NO downsampling — a 16-tap bank at the full rate
+    # cannot separate the low bands (this is why the paper downsamples)
+    lo, hi = 125.0, 250.0
+    h16 = design_bandpass(16, lo, hi, FS)       # full-rate 16 taps
+    h200 = design_bandpass(200, lo, hi, FS)     # what full rate would need
+    freqs = np.linspace(50, 1000, 96)
+    def resp(h):
+        n = np.arange(len(h))
+        return np.array([abs(np.sum(h * np.exp(-2j * np.pi * f / FS * n)))
+                         for f in freqs])
+    r16, r200 = resp(h16), resp(h200)
+    inband = (freqs >= lo) & (freqs <= hi)
+    c16 = r16[inband].mean() / (r16[~inband].mean() + 1e-9)
+    c200 = r200[inband].mean() / (r200[~inband].mean() + 1e-9)
+    row("fig4.fullrate_16tap_lowband", 0.0, f"contrast={c16:.2f}")
+    row("fig4.fullrate_200tap_lowband", 0.0,
+        f"contrast={c200:.2f} (16-tap needs downsampling: "
+        f"{'confirmed' if c200 > 3 * c16 else 'NOT confirmed'})")
+
+    # Fig. 6: MP-domain response to a chirp tracks the MAC response
+    x = jnp.asarray(chirp(8192, FS, 100, 7500))[None]
+    mac = np.asarray(fb.accumulate(x))[0]
+    fb_mp = FilterBank(cfg._replace(mode="mp", gamma_f=4.0))
+    mp_ = np.asarray(fb_mp.accumulate(x))[0]
+    corr = float(np.corrcoef(mac, mp_)[0, 1])
+    row("fig6.mp_vs_mac_chirp_corr", 0.0,
+        f"corr={corr:.3f} (distortion present but structure preserved)")
+    return corr
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Table I/II analogue: hardware operation census.
+
+The paper's headline is resource count: the MP design uses 0 DSPs and <1K
+slices because it is multiplierless. We can't synthesize Verilog here, but
+we can count the primitive operations each inference performs by walking
+the traced jaxpr of (a) the MP in-filter classifier and (b) the MAC
+baseline, and convert multiplier counts to LUT-equivalents with the paper's
+own figures (8x8 signed Baugh-Wooley multiplier = 72 LUTs; adds/compares
+= ~8 LUTs at 8 bit).
+
+Multiplications by power-of-two literals are classified as shifts (the MP
+bisection's halving step), exactly as the FPGA implements them.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.filterbank import FilterBank, FilterBankConfig
+from repro.core import kernel_machine as km
+from repro.core import mp as mp_mod
+
+FS = 16000.0
+N = 16000  # 1 s
+
+
+def _literal_pow2(eqn) -> bool:
+    from jax._src.core import Literal
+    for v in eqn.invars:
+        if isinstance(v, Literal):
+            try:
+                val = float(np.ravel(v.val)[0])
+            except Exception:
+                return False
+            if val != 0 and abs(math.log2(abs(val)) % 1.0) < 1e-9:
+                return True
+    return False
+
+
+def _out_elems(eqn) -> int:
+    tot = 0
+    for v in eqn.outvars:
+        if hasattr(v.aval, "shape"):
+            n = 1
+            for d in v.aval.shape:
+                n *= d
+            tot += n
+    return tot
+
+
+MUL_OPS = {"mul"}
+ADD_OPS = {"add", "sub"}
+CMP_OPS = {"max", "min", "gt", "lt", "ge", "le", "select_n", "eq"}
+
+
+def census(fn, *args) -> Counter:
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    counts: Counter = Counter()
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            n = _out_elems(eqn)
+            if name in ("pjit", "closed_call", "custom_vjp_call",
+                        "custom_jvp_call", "remat", "checkpoint"):
+                for sub in eqn.params.values():
+                    if hasattr(sub, "jaxpr"):
+                        walk(sub.jaxpr if hasattr(sub.jaxpr, "eqns")
+                             else sub)
+                continue
+            if name in ("scan", "while"):
+                length = eqn.params.get("length", 1) or 1
+                inner = eqn.params.get("jaxpr")
+                if inner is not None:
+                    before = counts.copy()
+                    walk(inner.jaxpr if hasattr(inner, "jaxpr") else inner)
+                    for k in counts:
+                        counts[k] = before.get(k, 0) + \
+                            (counts[k] - before.get(k, 0)) * length
+                continue
+            if name == "conv_general_dilated":
+                # MACs: out elems x kernel taps (per output channel)
+                rhs = eqn.invars[1].aval.shape
+                k_elems = 1
+                for d in rhs:
+                    k_elems *= d
+                counts["multiply"] += n * max(k_elems // max(rhs[0], 1), 1)
+                counts["add"] += n * max(k_elems // max(rhs[0], 1), 1)
+            elif name == "dot_general":
+                # MACs: out elems x contraction size
+                lhs = eqn.invars[0].aval.shape
+                ((lc, _), _) = eqn.params["dimension_numbers"]
+                contract = 1
+                for d in lc:
+                    contract *= lhs[d]
+                counts["multiply"] += n * contract
+                counts["add"] += n * contract
+            elif name in MUL_OPS:
+                if _literal_pow2(eqn):
+                    counts["shift"] += n
+                else:
+                    counts["multiply"] += n
+            elif name in ADD_OPS:
+                counts["add"] += n
+            elif name in CMP_OPS:
+                counts["compare"] += n
+            elif name in ("exp", "log", "tanh", "logistic", "rsqrt", "sqrt",
+                          "div", "integer_pow"):
+                counts["transcendental_or_div"] += n
+
+    walk(jaxpr.jaxpr)
+    return counts
+
+
+def lut_estimate(c: Counter) -> float:
+    """8-bit LUT-equivalents using the paper's conversion factors."""
+    return (c["multiply"] * 72          # 8x8 Baugh-Wooley (paper: 72 LUTs)
+            + c["add"] * 8
+            + c["compare"] * 8
+            + c["shift"] * 0            # wiring on FPGA
+            + c["transcendental_or_div"] * 200)
+
+
+def main():
+    x = jnp.zeros((1, N), jnp.float32)
+    P = 30
+
+    # --- MP in-filter path (bisection filtering + MP classifier) ---
+    fb_mp = FilterBank(FilterBankConfig(fs=FS, num_octaves=6, mode="mp",
+                                        gamma_f=4.0))
+    params = km.init_params(jax.random.PRNGKey(0), P, 10)
+
+    def mp_infer(x):
+        s = fb_mp.accumulate(x)
+        return km.forward(params, s)
+
+    # --- MAC baseline (conv filtering + linear classifier) ---
+    fb_mac = FilterBank(FilterBankConfig(fs=FS, num_octaves=6, mode="mac"))
+    w = jnp.zeros((P, 10))
+    b = jnp.zeros((10,))
+
+    def mac_infer(x):
+        s = fb_mac.accumulate(x)
+        return km.forward_baseline(w, b, s)
+
+    for tag, fn in [("mp_infilter", mp_infer), ("mac_baseline", mac_infer)]:
+        c = census(fn, x)
+        per = {k: v / N for k, v in c.items()}  # per input sample
+        row(f"hw.{tag}.mult_per_sample", 0.0, f"{per.get('multiply', 0):.1f}")
+        row(f"hw.{tag}.add_per_sample", 0.0, f"{per.get('add', 0):.1f}")
+        row(f"hw.{tag}.cmp_per_sample", 0.0, f"{per.get('compare', 0):.1f}")
+        row(f"hw.{tag}.shift_per_sample", 0.0, f"{per.get('shift', 0):.1f}")
+        row(f"hw.{tag}.lut_weighted_ops_per_sample", 0.0,
+            f"{lut_estimate(c) / N:.0f} (ops-weighted; the FPGA time-"
+            f"multiplexes 3 MP modules so unit count is far lower)")
+    row("hw.reference", 0.0,
+        "paper Table I: 0 DSP, 1503 LUT, 2376 FF, 17mW@50MHz; "
+        "[6] CAR-IHC uses 4 DSPs (~890 LUT-equiv). Key check: MP path "
+        "multiplies/sample == 0 (multiplierless), MAC baseline > 0")
+
+
+if __name__ == "__main__":
+    main()

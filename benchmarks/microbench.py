@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks (CPU wall time; interpret-mode Pallas).
+
+Timings here are NOT the TPU performance story (that is the §Roofline
+analysis) — they are regression tracking for the reference implementations
+and a check that the exact and bisection solvers have sane relative cost.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import mp as mp_mod
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+
+    for rows_, m in [(1024, 64), (4096, 64), (1024, 512)]:
+        L = jax.random.normal(key, (rows_, m))
+        f_exact = jax.jit(lambda L: mp_mod.mp_exact(L, 2.0))
+        f_bis = jax.jit(lambda L: mp_mod.mp_bisect(L, 2.0))
+        us_e = time_fn(f_exact, L)
+        us_b = time_fn(f_bis, L)
+        row(f"mp_exact.{rows_}x{m}", us_e,
+            f"{rows_ * m / us_e:.0f} elem/us")
+        row(f"mp_bisect.{rows_}x{m}", us_b,
+            f"{rows_ * m / us_b:.0f} elem/us")
+
+    x = jax.random.normal(key, (64, 256))
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 128))
+    f_mp = jax.jit(lambda x, w: mp_mod.mp_linear(x, w, 1.0, exact=False))
+    f_mac = jax.jit(lambda x, w: x @ w)
+    us_mp = time_fn(f_mp, x, w)
+    us_mac = time_fn(f_mac, x, w)
+    row("mp_linear.64x256x128", us_mp, f"vs_mac={us_mp/us_mac:.1f}x")
+    row("mac_linear.64x256x128", us_mac, "")
+
+    sig = jax.random.normal(key, (8, 4096))
+    h = jax.random.normal(jax.random.PRNGKey(2), (16,)) * 0.3
+    f_fir = jax.jit(lambda x: mp_mod.mp_conv1d(x, h, 4.0, exact=False))
+    us_fir = time_fn(f_fir, sig)
+    row("mp_fir.8x4096xM16", us_fir, f"{8*4096/us_fir:.0f} samples/us")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [names...]
+
+Emits ``name,us_per_call,derived`` CSV rows. Modules:
+  accuracy_esc10       Table III  (ESC-10-like accuracy, 3 systems)
+  accuracy_fsdd        Table IV   (speaker ID)
+  bitwidth_sweep       Fig. 8     (accuracy vs bit width)
+  filterbank_response  Fig. 4/6   (downsampling + MP distortion)
+  hardware_cost        Table I/II (op census -> LUT equivalents)
+  microbench           kernel reference timings
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "microbench",
+    "filterbank_response",
+    "hardware_cost",
+    "accuracy_fsdd",
+    "bitwidth_sweep",
+    "accuracy_esc10",
+]
+
+
+def main() -> None:
+    names = sys.argv[1:] or MODULES
+    failures = []
+    for name in names:
+        print(f"# === benchmarks.{name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", flush=True)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

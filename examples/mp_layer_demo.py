@@ -1,0 +1,54 @@
+"""The paper's technique as a first-class LM layer mode: run the same tiny
+transformer with standard matmuls and with multiplierless MP projections
+(eq. 9 through the fused Pallas kernel), and train the MP version a few
+steps — demonstrating that backprop through the water-filling works at the
+transformer scale too.
+
+    PYTHONPATH=src python examples/mp_layer_demo.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.steps import make_train_step
+from repro.models.transformer import ArchConfig
+from repro.models import transformer as T
+from repro.optim import AdamWConfig
+
+
+def main():
+    base = ArchConfig(
+        name="mp-demo", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512,
+        remat=False, q_chunk=32, kv_chunk=32)
+
+    toks = jax.random.randint(jax.random.PRNGKey(0), (4, 32), 0, 512)
+    batch = {"tokens": toks}
+
+    params = T.init(base, jax.random.PRNGKey(1))
+    logits_std = T.forward(params, base, batch)
+
+    mp_cfg = dataclasses.replace(base, mp_mode=True, mp_gamma=8.0)
+    logits_mp = T.forward(params, mp_cfg, batch)
+    print("standard logits std :", float(logits_std.std()))
+    print("MP-mode logits std  :", float(logits_mp.std()))
+    print("(different by design — MP approximates each inner product; "
+          "training absorbs the error:)")
+
+    init_state, train_step = make_train_step(
+        mp_cfg, AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=20))
+    state = init_state(jax.random.PRNGKey(1))
+    step = jax.jit(train_step)
+    losses = []
+    for _ in range(10):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    print("MP-mode training loss:", " -> ".join(f"{l:.3f}" for l in losses[::3]))
+    assert losses[-1] < losses[0]
+    print("OK: backprop through the MP water-filling trains the transformer")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Dump the largest tensor shapes in a compiled cell's HLO."""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import dataclasses, re, sys
+from collections import Counter
+import jax
+from repro.configs import get_arch
+from repro.launch import specs as S
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "glm4-9b"
+nl = int(sys.argv[2]) if len(sys.argv) > 2 else 4
+cfg = dataclasses.replace(get_arch(arch), num_layers=nl)
+cell = S.SHAPES["train_4k"]
+mesh = make_production_mesh()
+with mesh:
+    comp = lower_cell(cfg, cell, mesh).compile()
+text = comp.as_text()
+TYPES = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1, "u32": 4, "s8": 1}
+sizes = Counter()
+for m in re.finditer(r"(\w+)\[([\d,]+)\]", text):
+    dt, dims = m.group(1), m.group(2)
+    if dt not in TYPES:
+        continue
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    b = n * TYPES[dt]
+    if b > 2**28:  # > 256MB
+        sizes[f"{dt}[{dims}]"] += 1
+print(f"{arch} L={nl}: temp={comp.memory_analysis().temp_size_in_bytes/2**30:.1f}GiB")
+for shape, count in sorted(sizes.items(),
+                           key=lambda kv: -eval(kv[0].split('[')[1][:-1].replace(',', '*'))
+                           * TYPES[kv[0].split('[')[0]]):
+    n = 1
+    for d in shape.split("[")[1][:-1].split(","):
+        n *= int(d)
+    gb = n * TYPES[shape.split("[")[0]] / 2**30
+    print(f"  {gb:8.2f} GiB x{count:4d}  {shape}")

@@ -1,0 +1,46 @@
+"""Memory-term bisection on the production mesh: lower train/prefill
+variants of glm4-9b and print memory_analysis + roofline terms."""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import dataclasses
+import sys
+
+import jax
+
+from repro.configs import get_arch
+from repro.distributed import sharding as sh
+from repro.distributed.steps import make_train_step
+from repro.launch import specs as S
+from repro.launch.dryrun import lower_cell, roofline
+from repro.launch.mesh import make_production_mesh
+from repro.optim import AdamWConfig
+
+variants = {
+    "train": dict(),
+    "train_noremat": dict(remat=False),
+    "train_L4": dict(num_layers=4),
+    "train_L8": dict(num_layers=8),
+    "prefill_like_train": None,  # forward only at train shapes
+}
+
+which = sys.argv[1:] or list(variants)
+mesh = make_production_mesh()
+for name in which:
+    ov = variants[name]
+    cfg = get_arch("glm4-9b")
+    cell = S.SHAPES["train_4k"]
+    if ov is None:
+        cell = S.ShapeCell("p", 4096, 256, "prefill")
+    else:
+        cfg = dataclasses.replace(cfg, **ov)
+    with mesh:
+        lowered = lower_cell(cfg, cell, mesh)
+        comp = lowered.compile()
+    m = comp.memory_analysis()
+    r = roofline(comp, comp.as_text(), 256, cfg, cell)
+    print(f"{name}: temp={m.temp_size_in_bytes/2**30:.1f}GiB "
+          f"args={m.argument_size_in_bytes/2**30:.1f}GiB "
+          f"comp={r['compute_s']:.2f} mem={r['memory_s']:.2f} "
+          f"coll={r['collective_s']:.2f} useful={r['useful_flops_ratio']:.3f}",
+          flush=True)

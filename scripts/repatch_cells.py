@@ -1,0 +1,34 @@
+"""Re-run specific dry-run cells (after targeted fixes) and merge the
+records into the sweep JSONs."""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import json
+import sys
+
+from repro.launch.dryrun import run_cell
+
+CELLS = [
+    ("mixtral-8x22b", "train_4k"),
+    ("jamba-v0.1-52b", "train_4k"),
+    ("mixtral-8x22b", "prefill_32k"),
+    ("jamba-v0.1-52b", "prefill_32k"),
+    ("deepseek-moe-16b", "train_4k"),
+    ("deepseek-moe-16b", "prefill_32k"),
+]
+
+multi = "--multi-pod" in sys.argv
+path = ("results/dryrun_multi_pod.json" if multi
+        else "results/dryrun_single_pod.json")
+records = json.load(open(path))
+for arch, shape in CELLS:
+    rec = run_cell(arch, shape, multi_pod=multi)
+    status = rec["status"]
+    t = rec.get("memory", {}).get("temp_bytes", 0) / 2**30
+    print(f"{arch} {shape}: {status} temp={t:.1f}GiB", flush=True)
+    for i, r in enumerate(records):
+        if r["arch"] == arch and r["shape"] == shape:
+            records[i] = rec
+with open(path, "w") as f:
+    json.dump(records, f, indent=1)
+print("patched", path)

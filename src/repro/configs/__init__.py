@@ -1,0 +1,48 @@
+"""Architecture registry: one module per assigned architecture + the
+paper's own acoustic configuration. `get_arch(name)` returns an ArchConfig;
+`get_smoke(name)` returns the reduced same-family config used by CPU smoke
+tests (full configs are only exercised abstractly via the dry-run)."""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_NAMES = [
+    "deepseek_moe_16b",
+    "mixtral_8x22b",
+    "mamba2_2p7b",
+    "jamba_v0p1_52b",
+    "internvl2_2b",
+    "hubert_xlarge",
+    "glm4_9b",
+    "qwen3_8b",
+    "qwen2_72b",
+    "command_r_35b",
+]
+
+# canonical ids as assigned (dash form) -> module name
+ARCH_IDS = {
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "jamba-v0.1-52b": "jamba_v0p1_52b",
+    "internvl2-2b": "internvl2_2b",
+    "hubert-xlarge": "hubert_xlarge",
+    "glm4-9b": "glm4_9b",
+    "qwen3-8b": "qwen3_8b",
+    "qwen2-72b": "qwen2_72b",
+    "command-r-35b": "command_r_35b",
+}
+
+
+def _module(name: str):
+    mod_name = ARCH_IDS.get(name, name)
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def get_arch(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str):
+    return _module(name).SMOKE

@@ -1,0 +1,28 @@
+"""The paper's own configuration: multiplierless in-filter acoustic
+classifier (30-filter multirate MP FIR bank + MP kernel machine), as
+deployed on the Spartan-7 FPGA (Table I)."""
+
+from repro.core.filterbank import FilterBankConfig
+from repro.core.trainer import TrainConfig
+
+FILTERBANK = FilterBankConfig(
+    fs=16000.0,
+    num_octaves=6,
+    filters_per_octave=5,     # 30 filters, Table III
+    bp_taps=16,               # BP window size 16
+    lp_taps=6,                # LP window size 6
+    mode="mp",
+    gamma_f=4.0,
+)
+
+FILTERBANK_MAC_BASELINE = FILTERBANK._replace(mode="mac")
+
+TRAIN = TrainConfig(
+    num_steps=600,
+    lr=0.5,
+    gamma_anneal_start=4.0,
+    gamma_anneal_steps=200,
+)
+
+# deployment quantization (Fig. 8: stable down to 8 bits)
+QUANT_BITS = 8

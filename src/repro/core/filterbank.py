@@ -1,0 +1,209 @@
+"""Multirate FIR filter bank used as feature extractor AND kernel (paper §III-C/D).
+
+Structure (Fig. 3): the input (fs = 16 kHz) feeds octave 1's band-pass
+filters directly; a low-pass anti-aliasing filter + ÷2 downsampler feeds each
+successive octave. Every octave holds `filters_per_octave` band-pass FIR
+filters with cutoffs equally spaced inside the octave (optionally
+Greenwood-warped). Downsampling keeps every band-pass at a fixed low order
+(M = 16 taps) instead of orders up to 200 (Fig. 4).
+
+Per-filter kernel value (Appendix A):
+    B_p(n) = FIR(x, h_p)         -- MP domain (eq. 9) or MAC baseline
+    d_p(n) = max(0, B_p(n))      -- HWR
+    s_p    = sum_n d_p(n)        -- accumulate over the clip
+    Phi_p  = (s_p - mu_p)/sigma_p  -- standardized over the training set
+
+The filters are PRECOMPUTED constants (paper: "coefficients are precomputed
+and provided as inputs"); only the classifier trains, absorbing the MP
+approximation error. Feature extraction therefore uses the fast
+non-differentiable `mp_bisect` path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mp as mp_mod
+from repro.core.quant import fake_quant
+
+__all__ = [
+    "FilterBankConfig",
+    "FilterBank",
+    "design_lowpass",
+    "design_bandpass",
+    "greenwood",
+]
+
+
+# ---------------------------------------------------------------------------
+# FIR design (windowed sinc; no scipy available/needed)
+# ---------------------------------------------------------------------------
+
+
+def _hamming(M: int) -> np.ndarray:
+    n = np.arange(M)
+    return 0.54 - 0.46 * np.cos(2 * np.pi * n / (M - 1))
+
+
+def design_lowpass(num_taps: int, cutoff: float, fs: float) -> np.ndarray:
+    """Windowed-sinc low-pass FIR, cutoff in Hz."""
+    fc = cutoff / fs  # normalized (cycles/sample)
+    n = np.arange(num_taps) - (num_taps - 1) / 2.0
+    h = 2 * fc * np.sinc(2 * fc * n)
+    h = h * _hamming(num_taps)
+    return (h / h.sum()).astype(np.float32)  # unity DC gain
+
+
+def design_bandpass(num_taps: int, f_lo: float, f_hi: float, fs: float) -> np.ndarray:
+    """Band-pass as difference of two low-passes, Hamming windowed."""
+    n = np.arange(num_taps) - (num_taps - 1) / 2.0
+    h = (2 * (f_hi / fs) * np.sinc(2 * (f_hi / fs) * n)
+         - 2 * (f_lo / fs) * np.sinc(2 * (f_lo / fs) * n))
+    h = h * _hamming(num_taps)
+    # normalize peak gain at center frequency to ~1
+    fc = (f_lo + f_hi) / 2.0
+    w = 2 * np.pi * fc / fs
+    gain = np.abs(np.sum(h * np.exp(-1j * w * np.arange(num_taps))))
+    return (h / max(gain, 1e-6)).astype(np.float32)
+
+
+def greenwood(x: np.ndarray, fmin: float = 100.0, fmax: float = 8000.0) -> np.ndarray:
+    """Greenwood cochlear frequency-position map scaled to [fmin, fmax].
+
+    f(x) = A (10^(a x) - k), x in [0,1]; constants from Greenwood (1990)
+    (A=165.4, a=2.1, k=0.88 for human), rescaled to the requested range.
+    """
+    A, a, k = 165.4, 2.1, 0.88
+    raw = A * (10 ** (a * x) - k)
+    lo, hi = raw.min(), raw.max()
+    return fmin + (raw - lo) * (fmax - fmin) / (hi - lo)
+
+
+# ---------------------------------------------------------------------------
+# Filter bank
+# ---------------------------------------------------------------------------
+
+
+class FilterBankConfig(NamedTuple):
+    fs: float = 16000.0
+    num_octaves: int = 6
+    filters_per_octave: int = 5
+    bp_taps: int = 16          # paper: BP window size 16 (order 15)
+    lp_taps: int = 6           # paper: LP window size 6
+    mode: Literal["mp", "mac"] = "mp"
+    gamma_f: float = 4.0       # MP parameter for the filtering operation
+    use_pallas: bool = False   # route MP FIR through the fused Pallas kernel
+    spacing: Literal["octave", "greenwood"] = "octave"
+    quant_bits: int | None = None  # quantize taps + signal (Fig. 8 sweep)
+
+    @property
+    def num_filters(self) -> int:
+        return self.num_octaves * self.filters_per_octave
+
+
+class FilterBank:
+    """Precomputed multirate filter bank. Call `features(x)` on (B, N) audio."""
+
+    def __init__(self, config: FilterBankConfig):
+        self.config = config
+        c = config
+        # Octave o (0-indexed) covers [nyq/2^(o+1), nyq/2^o] at rate fs/2^o.
+        nyq = c.fs / 2.0
+        self.bp_taps: list[np.ndarray] = []   # per filter, grouped by octave
+        self.octave_of: list[int] = []
+        for o in range(c.num_octaves):
+            f_hi, f_lo = nyq / (2 ** o), nyq / (2 ** (o + 1))
+            rate = c.fs / (2 ** o)
+            if c.spacing == "octave":
+                edges = np.linspace(f_lo, f_hi, c.filters_per_octave + 1)
+            else:
+                edges = greenwood(np.linspace(0, 1, c.filters_per_octave + 1),
+                                  f_lo, f_hi)
+            for p in range(c.filters_per_octave):
+                h = design_bandpass(c.bp_taps, edges[p], edges[p + 1], rate)
+                self.bp_taps.append(h)
+                self.octave_of.append(o)
+        # Anti-aliasing LP for each ÷2 stage, cutoff at fs_stage/4.
+        self.lp_tap_list = [
+            design_lowpass(c.lp_taps, (c.fs / 2 ** o) / 4.0, c.fs / 2 ** o)
+            for o in range(c.num_octaves - 1)
+        ]
+        if c.quant_bits is not None:
+            self.bp_taps = [np.asarray(fake_quant(jnp.asarray(h), c.quant_bits))
+                            for h in self.bp_taps]
+            self.lp_tap_list = [np.asarray(fake_quant(jnp.asarray(h), c.quant_bits))
+                                for h in self.lp_tap_list]
+        # stacked per-octave taps: (filters_per_octave, bp_taps)
+        self._bp_by_octave = [
+            jnp.stack([jnp.asarray(self.bp_taps[o * c.filters_per_octave + p])
+                       for p in range(c.filters_per_octave)])
+            for o in range(c.num_octaves)
+        ]
+        self._lp = [jnp.asarray(h) for h in self.lp_tap_list]
+
+    # -- filtering primitives ------------------------------------------------
+
+    def _fir(self, x: jax.Array, h: jax.Array) -> jax.Array:
+        """x: (B, N), h: (M,) -> (B, N). MP or MAC per config."""
+        if self.config.mode == "mac":
+            return _mac_fir(x, h)
+        if self.config.use_pallas:
+            from repro.kernels import fir_mp  # lazy: keeps core import light
+            return fir_mp(x, h, self.config.gamma_f)
+        return mp_mod.mp_conv1d(x, h, self.config.gamma_f, exact=False)
+
+    def band_outputs(self, x: jax.Array) -> list[jax.Array]:
+        """Raw band-pass outputs per filter (list of (B, N_o) arrays)."""
+        c = self.config
+        if c.quant_bits is not None:
+            x = fake_quant(x, c.quant_bits)
+        outs: list[jax.Array] = []
+        x_o = x
+        for o in range(c.num_octaves):
+            taps = self._bp_by_octave[o]  # (F, M)
+            y = jax.vmap(lambda h: self._fir(x_o, h))(taps)  # (F, B, N_o)
+            outs.extend([y[p] for p in range(taps.shape[0])])
+            if o < c.num_octaves - 1:
+                x_o = self._fir(x_o, self._lp[o])[..., ::2]  # LP + decimate
+        return outs
+
+    def accumulate(self, x: jax.Array) -> jax.Array:
+        """s_p = sum_n HWR(B_p(n)) for every filter. x: (B, N) -> (B, P).
+
+        Octave o has N/2^o samples; we renormalize by 2^o so every band
+        contributes at the same scale (the FPGA's per-band accumulators are
+        read out raw, but the STD stage removes scale anyway; renormalizing
+        keeps the pre-STD dynamic range uniform for fixed-point analysis).
+        """
+        outs = self.band_outputs(x)
+        s = []
+        for p, y in enumerate(outs):
+            o = self.octave_of[p]
+            s.append(jnp.sum(jnp.maximum(y, 0.0), axis=-1) * (2.0 ** o))
+        return jnp.stack(s, axis=-1)
+
+    def features(self, x: jax.Array, mu: jax.Array | None = None,
+                 sigma: jax.Array | None = None):
+        """Kernel vector Phi (B, P). If mu/sigma are None they are computed
+        from x (training); pass the training statistics at inference."""
+        s = self.accumulate(x)
+        if mu is None:
+            mu = jnp.mean(s, axis=0)
+            sigma = jnp.std(s, axis=0, ddof=1) + 1e-6
+        phi = (s - mu) / sigma
+        return phi, mu, sigma
+
+
+def _mac_fir(x: jax.Array, h: jax.Array) -> jax.Array:
+    """Baseline multiplier-based FIR via conv (causal, zero initial state)."""
+    M = h.shape[0]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(M - 1, 0)])
+    return jax.lax.conv_general_dilated(
+        xp[:, None, :], h[::-1][None, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NCH", "OIH", "NCH"))[:, 0, :]

@@ -1,0 +1,83 @@
+"""Template-based kernel machine classifier in the MP domain (paper §III-B).
+
+Decision function (baseline, eq. 1):      f(x) = w^T K + b
+MP domain (eq. 2-7):
+    z+ = MP([w+ + K+, w- + K-, b+], gamma1)
+    z- = MP([w+ + K-, w- + K+, b-], gamma1)
+    z  = MP([z+, z-], gamma_n),  gamma_n = 1
+    p+ = [z+ - z]_+ ;  p- = [z- - z]_+ ;  p = p+ - p-
+
+with K+ = K, K- = -K, w = w+ - w- (w+, w- >= 0 stored separately as in the
+hardware ROMs). `p` lives in [-1, 1] and p+ + p- = 1 by the reverse
+water-filling property with gamma_n = 1, so p acts as a signed confidence.
+
+All classifier math goes through `mp_exact` so gradients flow (the paper's
+"integrated training using MP-based approximation").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mp import mp_exact
+
+__all__ = ["MPKernelMachineParams", "init_params", "forward", "forward_baseline"]
+
+
+class MPKernelMachineParams(NamedTuple):
+    w_pos: jax.Array   # (P, C) nonnegative
+    w_neg: jax.Array   # (P, C)
+    b_pos: jax.Array   # (C,)
+    b_neg: jax.Array   # (C,)
+    log_gamma1: jax.Array  # scalar, gamma1 = softplus-free exp for positivity
+
+
+def init_params(key: jax.Array, num_templates: int, num_classes: int,
+                gamma1: float = 8.0) -> MPKernelMachineParams:
+    k1, k2 = jax.random.split(key)
+    scale = 0.5
+    return MPKernelMachineParams(
+        w_pos=jax.random.uniform(k1, (num_templates, num_classes)) * scale,
+        w_neg=jax.random.uniform(k2, (num_templates, num_classes)) * scale,
+        b_pos=jnp.zeros((num_classes,)),
+        b_neg=jnp.zeros((num_classes,)),
+        log_gamma1=jnp.log(jnp.asarray(gamma1)),
+    )
+
+
+def forward(params: MPKernelMachineParams, K: jax.Array,
+            gamma_scale: float = 1.0) -> jax.Array:
+    """K: (B, P) kernel vector -> p: (B, C) signed confidence in [-1, 1].
+
+    gamma_scale multiplies gamma1 — the handle used by gamma annealing
+    (anneal from a large, nearly-linear MP towards the target gamma).
+    """
+    wp = jax.nn.relu(params.w_pos)  # keep the ROM entries nonnegative
+    wn = jax.nn.relu(params.w_neg)
+    gamma1 = jnp.exp(params.log_gamma1) * gamma_scale
+    Kp = K[:, :, None]          # (B, P, 1)
+    Kn = -K[:, :, None]
+
+    # operand lists: 2P + 1 entries reduced by MP along the last axis
+    def z_of(a, b, bias):  # a, b: (P, C); pairs (a_i + K_i, b_i - K_i)
+        ops = jnp.concatenate([a[None] + Kp, b[None] + Kn], axis=1)  # (B,2P,C)
+        bias_col = jnp.broadcast_to(bias[None, None, :],
+                                    (ops.shape[0], 1, ops.shape[2]))
+        ops = jnp.concatenate([ops, bias_col], axis=1)  # (B, 2P+1, C)
+        return mp_exact(jnp.moveaxis(ops, 1, -1), gamma1)  # (B, C)
+
+    z_pos = z_of(wp, wn, params.b_pos)      # MP([w+ + K, w- - K, b+])
+    z_neg = z_of(wn, wp, params.b_neg)      # MP([w+ - K, w- + K, b-])
+    # normalize: z = MP([z+, z-], gamma_n=1)
+    z = mp_exact(jnp.stack([z_pos, z_neg], axis=-1), 1.0)
+    p_pos = jax.nn.relu(z_pos - z)
+    p_neg = jax.nn.relu(z_neg - z)
+    return p_pos - p_neg
+
+
+def forward_baseline(w: jax.Array, b: jax.Array, K: jax.Array) -> jax.Array:
+    """Full-precision template kernel machine, eq. (1): the 'Normal SVM'."""
+    return K @ w + b

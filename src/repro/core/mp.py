@@ -1,0 +1,238 @@
+"""Margin Propagation (MP) primitives — the paper's core contribution.
+
+The MP function ``z = MP(L, gamma)`` is defined implicitly by the *reverse
+water-filling* constraint (Gu [40], Chakrabartty & Cauwenberghs [26]):
+
+    sum_i [L_i - z]_+  =  gamma,        gamma > 0
+
+Two solvers are provided:
+
+* :func:`mp_exact` — closed form via sort/cumsum/threshold-count. This is the
+  mathematically exact solution (identical to the threshold in a simplex
+  projection of ``L`` onto the scaled simplex ``{p >= 0, sum p = gamma}``).
+  Differentiable through a ``custom_vjp`` using the known subgradient
+  ``dz/dL_i = 1{L_i > z} / |support|``, ``dz/dgamma = -1/|support|``.
+  Used for training (the paper trains *through* the MP approximation).
+
+* :func:`mp_bisect` — the hardware-faithful iterative solver: bisection on
+  ``z`` inside ``[max(L) - gamma, max(L)]`` using only add/subtract/compare
+  and halving (a shift in fixed point). A fixed iteration count makes it a
+  static ``fori_loop`` — this is what the Pallas TPU kernels implement
+  (no sort needed; sorts are expensive on the TPU VPU, compares are cheap).
+
+Multiplierless inner products (paper eq. 9): for ``u = w + x``, ``v = w - x``
+(elementwise),
+
+    w.x  ~=  mpabs(u, gamma) - mpabs(v, gamma),
+    mpabs(u, gamma) := MP([u; -u], gamma)
+
+since ``[w+ + x+, w- + x-] = [u; -u]`` and ``[w+ + x-, w- + x+] = [v; -v]``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "mp_exact",
+    "mp",
+    "mp_bisect",
+    "mpabs",
+    "mp_dot",
+    "mp_linear",
+    "mp_conv1d",
+    "DEFAULT_BISECT_ITERS",
+]
+
+DEFAULT_BISECT_ITERS = 26  # |interval| * 2^-26 < 1e-7 * gamma: fp32-parity
+
+
+# ---------------------------------------------------------------------------
+# Exact solver (sort based) with custom VJP
+# ---------------------------------------------------------------------------
+
+
+def _mp_exact_fwd_impl(L: jax.Array, gamma: jax.Array) -> jax.Array:
+    """Exact reverse water-filling along the last axis.
+
+    L: (..., m); gamma: broadcastable to (...,). Returns z: (...,).
+    """
+    m = L.shape[-1]
+    # sort descending
+    s = jnp.flip(jnp.sort(L, axis=-1), axis=-1)
+    cs = jnp.cumsum(s, axis=-1)
+    k = jnp.arange(1, m + 1, dtype=L.dtype)
+    gamma_b = jnp.asarray(gamma, dtype=L.dtype)[..., None]
+    z_k = (cs - gamma_b) / k
+    # support size k* = #{k : s_k > z_k}; monotone as in simplex projection.
+    valid = s > z_k
+    k_star = jnp.maximum(jnp.sum(valid, axis=-1), 1)
+    cs_sel = jnp.take_along_axis(cs, (k_star - 1)[..., None], axis=-1)[..., 0]
+    z = (cs_sel - jnp.asarray(gamma, dtype=L.dtype)) / k_star.astype(L.dtype)
+    return z
+
+
+@jax.custom_vjp
+def mp_exact(L: jax.Array, gamma: jax.Array) -> jax.Array:
+    """z = MP(L, gamma) along the last axis (exact, differentiable)."""
+    return _mp_exact_fwd_impl(L, gamma)
+
+
+def _mp_exact_fwd(L, gamma):
+    z = _mp_exact_fwd_impl(L, gamma)
+    return z, (L, z)
+
+
+def _mp_exact_bwd(res, g):
+    L, z = res
+    support = (L > z[..., None]).astype(L.dtype)
+    k = jnp.maximum(jnp.sum(support, axis=-1), 1.0)
+    dL = g[..., None] * support / k[..., None]
+    # dz/dgamma = -1/k ; reduce to gamma's shape via broadcasting rules.
+    dgamma_full = -g / k
+    dgamma = dgamma_full.sum()  # gamma is scalar in all our uses
+    return dL, jnp.asarray(dgamma, dtype=jnp.result_type(dgamma_full))
+
+
+mp_exact.defvjp(_mp_exact_fwd, _mp_exact_bwd)
+
+# Public alias: `mp` is the trainable exact form.
+mp = mp_exact
+
+
+def mp_bisect(
+    L: jax.Array,
+    gamma: jax.Array,
+    iters: int = DEFAULT_BISECT_ITERS,
+) -> jax.Array:
+    """Hardware-faithful MP via bisection (add/compare/shift only).
+
+    The constraint function h(z) = sum_i [L_i - z]_+ is continuous, strictly
+    decreasing where positive. h(max L) = 0 <= gamma and at
+    z = max(L) - gamma the max element alone contributes gamma, so the root
+    lies in [max(L) - gamma, max(L)].
+    """
+    gamma = jnp.asarray(gamma, dtype=L.dtype)
+    hi = jnp.max(L, axis=-1)
+    lo = hi - gamma
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) * jnp.asarray(0.5, L.dtype)  # shift in fixed point
+        h = jnp.sum(jnp.maximum(L - mid[..., None], 0), axis=-1)
+        too_low = h > gamma  # z too small -> move lo up
+        lo = jnp.where(too_low, mid, lo)
+        hi = jnp.where(too_low, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return (lo + hi) * jnp.asarray(0.5, L.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Multiplierless inner products
+# ---------------------------------------------------------------------------
+
+
+def mpabs(u: jax.Array, gamma: jax.Array, exact: bool = True,
+          iters: int = DEFAULT_BISECT_ITERS) -> jax.Array:
+    """MP([u; -u], gamma) along the last axis, without materializing [u;-u].
+
+    Materialization-free for the bisect path: h(z) over [u;-u] equals
+    sum [u - z]_+ + sum [-u - z]_+. For the exact path we concatenate (the
+    training path; XLA fuses it).
+    """
+    if exact:
+        return mp_exact(jnp.concatenate([u, -u], axis=-1), gamma)
+    gamma = jnp.asarray(gamma, dtype=u.dtype)
+    a = jnp.abs(u)  # |u| = max(u, -u): compare/select, allowed primitive
+    hi = jnp.max(a, axis=-1)
+    lo = hi - gamma
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) * jnp.asarray(0.5, u.dtype)
+        h = (jnp.sum(jnp.maximum(u - mid[..., None], 0), axis=-1)
+             + jnp.sum(jnp.maximum(-u - mid[..., None], 0), axis=-1))
+        too_low = h > gamma
+        lo = jnp.where(too_low, mid, lo)
+        hi = jnp.where(too_low, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return (lo + hi) * jnp.asarray(0.5, u.dtype)
+
+
+def mp_dot(x: jax.Array, w: jax.Array, gamma: jax.Array,
+           exact: bool = True) -> jax.Array:
+    """Multiplierless approximation of the inner product <x, w> (eq. 9).
+
+    x, w: (..., d) broadcast-compatible. Returns (...,).
+    """
+    u = w + x
+    v = w - x
+    return mpabs(u, gamma, exact=exact) - mpabs(v, gamma, exact=exact)
+
+
+def mp_linear(
+    x: jax.Array,
+    w: jax.Array,
+    gamma: jax.Array,
+    b: Optional[jax.Array] = None,
+    exact: bool = True,
+    block_out: int = 128,
+) -> jax.Array:
+    """Multiplierless matrix-vector/matrix product: (..., d) @ (d, out).
+
+    Each output scalar y[..., o] = mpabs(w[:,o] + x) - mpabs(w[:,o] - x).
+    Blocks over the output dim to bound the (..., block_out, d) intermediate.
+    This is the pure-jnp reference path; the Pallas kernel
+    (repro.kernels.mp_linear) is the TPU production path.
+    """
+    d, out = w.shape
+    assert x.shape[-1] == d, (x.shape, w.shape)
+
+    def block(wb):  # wb: (d, bo)
+        u = wb.T + x[..., None, :]  # (..., bo, d)
+        v = wb.T - x[..., None, :]
+        return mpabs(u, gamma, exact=exact) - mpabs(v, gamma, exact=exact)
+
+    if out <= block_out:
+        y = block(w)
+    else:
+        pad = (-out) % block_out
+        wp = jnp.pad(w, ((0, 0), (0, pad)))
+        nb = wp.shape[1] // block_out
+        wblocks = wp.reshape(d, nb, block_out).transpose(1, 0, 2)
+        y = jax.lax.map(lambda wb: block(wb), wblocks)  # (nb, ..., bo)
+        y = jnp.moveaxis(y, 0, -2).reshape(*x.shape[:-1], nb * block_out)
+        y = y[..., :out]
+    if b is not None:
+        y = y + b
+    return y
+
+
+def mp_conv1d(
+    x: jax.Array,
+    h: jax.Array,
+    gamma: jax.Array,
+    exact: bool = True,
+) -> jax.Array:
+    """Multiplierless FIR filtering (paper eq. 8 + 9): y(n) = MP-dot(h, x[n-M+1..n]).
+
+    x: (..., N) signal; h: (M,) taps. 'Valid' part is y[M-1:]; we left-pad
+    with zeros so y has the same length as x (matches streaming hardware that
+    starts from zeroed register banks).
+    """
+    M = h.shape[0]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(M - 1, 0)])
+    # windows: (..., N, M) — window n holds x[n-M+1..n] with taps reversed to
+    # implement the convolution sum h(k) x(n-k).
+    idx = jnp.arange(x.shape[-1])[:, None] + jnp.arange(M)[None, :]
+    win = xp[..., idx]  # gather windows
+    hr = h[::-1]
+    return mp_dot(win, hr, gamma, exact=exact)

@@ -1,0 +1,76 @@
+"""Fixed-point quantization utilities (paper §V, Fig. 8).
+
+The FPGA datapath is 8-bit fixed point with a 10-bit internal path. We
+simulate symmetric fixed point Q(s, bits): values are round(x / s) clamped to
+[-(2^(b-1)), 2^(b-1)-1], stored as float carrying integer values so kernels
+remain dtype-uniform (the "counters + adders" semantics of the paper; MP only
+ever adds/compares these, so no precision explosion — §III-A).
+
+`fake_quant` is the straight-through-estimator used for quantization-aware
+training of the MP system (forward quantized, gradient passes through).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QuantSpec", "quantize", "dequantize", "fake_quant", "spec_for"]
+
+
+class QuantSpec(NamedTuple):
+    bits: int
+    scale: float  # LSB size
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+
+def spec_for(x: jax.Array, bits: int) -> QuantSpec:
+    """Symmetric per-tensor spec covering max |x|."""
+    amax = float(jnp.max(jnp.abs(x)))
+    amax = amax if amax > 0 else 1.0
+    return QuantSpec(bits=bits, scale=amax / ((1 << (bits - 1)) - 1))
+
+
+def quantize(x: jax.Array, spec: QuantSpec) -> jax.Array:
+    q = jnp.round(x / spec.scale)
+    return jnp.clip(q, spec.qmin, spec.qmax)
+
+
+def dequantize(q: jax.Array, spec: QuantSpec) -> jax.Array:
+    return q * spec.scale
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant(x: jax.Array, bits: int, amax: float | None = None) -> jax.Array:
+    """Quantize-dequantize with straight-through gradient (QAT)."""
+    if amax is None:
+        amax = jax.lax.stop_gradient(jnp.max(jnp.abs(x)))
+        amax = jnp.where(amax > 0, amax, 1.0)
+    scale = amax / ((1 << (bits - 1)) - 1)
+    q = _ste_round(x / scale)
+    q = jnp.clip(q, -(1 << (bits - 1)), (1 << (bits - 1)) - 1)
+    return q * scale

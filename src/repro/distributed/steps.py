@@ -1,0 +1,156 @@
+"""Train / serve step builders shared by the launcher, dry-run and tests.
+
+`make_train_step(cfg, opt)` -> (init_state, train_step) where train_step is
+pjit-able: state and batch come in with shardings attached (in_shardings at
+jit time), the loss/grad/update graph is pure.
+
+`make_serve_step(cfg)` -> decode_step wrapper producing next-token ids +
+updated cache (greedy by default; temperature sampling with a key).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+__all__ = ["TrainState", "make_train_step", "make_serve_step", "make_loss_fn"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+
+def _labels_and_logits(cfg, batch, logits):
+    """Align logits with next-token labels per modality."""
+    if cfg.audio_frontend:
+        # masked-unit prediction: labels provided per frame
+        return logits, batch["labels"]
+    if cfg.vlm_patches:
+        logits = logits[:, cfg.vlm_patches:]
+    tokens = batch["tokens"]
+    return logits[:, :-1], tokens[:, 1:]
+
+
+def make_loss_fn(cfg, seq_chunk: int = 1024):
+    """Chunked cross-entropy: the LM head + CE run inside a remat'ed scan
+    over sequence chunks, so the (B, S, V) logits tensor never materializes
+    (at 152k vocab x 4k seq that is the single largest train-time buffer).
+
+    The vocab axis also stays model-sharded through the loss: the reductions
+    (max / sum-exp / one-hot contraction) partial-reduce per shard. A
+    take_along_axis gather would force XLA to all-gather full-vocab f32
+    logits per device (~40 GiB) — measured as the dominant temp consumer
+    before this was rewritten.
+    """
+
+    def loss_fn(params, batch):
+        from repro.distributed.sharding import constrain_activations
+        from repro.models import layers as L
+
+        h = T.forward(params, cfg, batch, return_hidden=True)
+        if cfg.audio_frontend:
+            labels = batch["labels"]
+        else:
+            if cfg.vlm_patches:
+                h = h[:, cfg.vlm_patches:]
+            h = h[:, :-1]
+            labels = batch["tokens"][:, 1:]
+        head = (params["tok_embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+
+        B, S2, D = h.shape
+        C = min(seq_chunk, S2)
+        pad = (-S2) % C
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        n = (S2 + pad) // C
+        hc = h.reshape(B, n, C, D).transpose(1, 0, 2, 3)
+        lc = labels.reshape(B, n, C).transpose(1, 0, 2)
+
+        def chunk_ce(tot, xs):
+            hcc, lcc = xs                                # (B, C, D), (B, C)
+            logits = L.linear(hcc, head, mp_mode=cfg.mp_mode,
+                              mp_gamma=cfg.mp_gamma,
+                              compute_dtype=L.cdt(cfg))
+            logits = constrain_activations(logits, (None, "model"))
+            logits = logits.astype(jnp.float32)
+            m = jax.lax.stop_gradient(
+                jnp.max(logits, axis=-1, keepdims=True))
+            logz = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+            onehot = jax.nn.one_hot(lcc, logits.shape[-1],
+                                    dtype=logits.dtype)
+            gold = jnp.sum(logits * onehot, axis=-1)
+            w = (lcc >= 0).astype(jnp.float32)
+            return tot + jnp.sum((logz - gold) * w), None
+
+        tot, _ = jax.lax.scan(jax.checkpoint(chunk_ce), jnp.zeros(()),
+                              (hc, lc))
+        return tot / jnp.maximum(jnp.sum(labels >= 0).astype(jnp.float32), 1)
+
+    return loss_fn
+
+
+def make_train_step(cfg, opt: AdamWConfig, accum: int = 1):
+    """accum > 1 enables gradient accumulation: the global batch is split
+    into `accum` microbatches, grads are averaged across them in a scan
+    (activation memory / accum), and the optimizer applies ONCE."""
+    loss_fn = make_loss_fn(cfg)
+
+    def init_state(key) -> TrainState:
+        params = T.init(cfg, key)
+        return TrainState(params=params, opt=adamw_init(params),
+                          step=jnp.zeros((), jnp.int32))
+
+    def grads_of(params, batch):
+        from repro.distributed.sharding import constrain_grads
+        if accum == 1:
+            loss, g = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, constrain_grads(g)
+        micro = jax.tree.map(
+            lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+            batch)
+
+        def one(carry, mb):
+            loss_sum, gsum = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            # reduce-scatter each microbatch's partial grads straight into
+            # the FSDP-sharded accumulator (see sharding.constrain_grads)
+            g = constrain_grads(g)
+            return (loss_sum + loss,
+                    jax.tree.map(jnp.add, gsum, g)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, gsum), _ = jax.lax.scan(one, (jnp.zeros(()), zeros), micro)
+        scale = 1.0 / accum
+        return loss_sum * scale, jax.tree.map(lambda g: g * scale, gsum)
+
+    def train_step(state: TrainState, batch):
+        loss, grads = grads_of(state.params, batch)
+        new_params, new_opt, om = adamw_update(opt, grads, state.opt,
+                                               state.params)
+        metrics = {"loss": loss, **om}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return init_state, train_step
+
+
+def make_serve_step(cfg, temperature: float = 0.0):
+    def serve_step(params, tokens, cache, cur_pos, key=None):
+        logits, cache = T.decode_step(params, cfg, tokens, cache, cur_pos)
+        logits = logits[:, 0, : cfg.vocab_size].astype(jnp.float32)
+        if temperature > 0.0 and key is not None:
+            next_tok = jax.random.categorical(key, logits / temperature)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok.astype(jnp.int32)[:, None], logits, cache
+
+    return serve_step

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the MP (Margin Propagation) hot spots.
+
+Each kernel ships three layers:
+  <name>.py  - pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ops.py     - jit'd public wrappers (padding, interpret-mode fallback, vjp)
+  ref.py     - pure-jnp oracles the tests assert against
+
+Kernels:
+  mp_waterfill - row-wise reverse water-filling z = MP(L, gamma) by bisection
+  mp_linear    - fused multiplierless MVM: y = mpabs(w+x) - mpabs(w-x)
+  fir_mp       - in-filter MP FIR: sliding windows formed in VMEM (no HBM
+                 window matrix), both MP states solved in one pass, optional
+                 fused HWR+accumulate (the paper's s_p readout)
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    mp_waterfill,
+    mp_linear,
+    fir_mp,
+    fir_mp_accumulate,
+)

@@ -1,0 +1,127 @@
+"""Public jit'd wrappers around the Pallas MP kernels.
+
+Responsibilities:
+  * interpret-mode fallback on CPU (this container) vs compiled on TPU;
+  * shape canonicalization (leading batch dims flattened);
+  * a custom VJP for `mp_linear` so the multiplierless layer is trainable
+    end-to-end: forward runs the fused Pallas kernel, backward applies the
+    water-filling subgradient (support-set masks recomputed from z — the
+    same trick as softmax-recompute in flash attention: cheaper to rebuild
+    the mask than to store it).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fir_mp as _fir
+from repro.kernels import mp_linear as _lin
+from repro.kernels import mp_waterfill as _wf
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# mp_waterfill
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def mp_waterfill(L: jax.Array, gamma, *, iters: int = _wf.DEFAULT_ITERS):
+    """z = MP(L, gamma) along the last axis; any leading batch shape."""
+    lead = L.shape[:-1]
+    L2 = L.reshape(-1, L.shape[-1])
+    z = _wf.mp_waterfill_pallas(L2, gamma, iters=iters, interpret=_interpret())
+    return z.reshape(lead)
+
+
+# ---------------------------------------------------------------------------
+# mp_linear with custom VJP
+# ---------------------------------------------------------------------------
+
+
+def _mp_linear_fwd_impl(x2, w, gamma, iters):
+    return _lin.mp_linear_pallas(x2, w, gamma, iters=iters,
+                                 interpret=_interpret())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _mp_linear_core(x2, w, gamma, iters):
+    return _mp_linear_fwd_impl(x2, w, gamma, iters)
+
+
+def _mp_linear_vjp_fwd(x2, w, gamma, iters):
+    y = _mp_linear_fwd_impl(x2, w, gamma, iters)
+    return y, (x2, w, gamma)
+
+
+def _mp_linear_vjp_bwd(iters, res, g):
+    x2, w, gamma = res
+    gamma = jnp.asarray(gamma, x2.dtype)
+    # Recompute the two water-fill levels exactly (small: sort over d per
+    # (b, o) pair) and form support masks.
+    u = x2[:, None, :] + w.T[None, :, :]          # (B, O, d)
+    v = x2[:, None, :] - w.T[None, :, :]
+
+    def z_and_masks(t):
+        L = jnp.concatenate([t, -t], axis=-1)
+        from repro.core.mp import mp_exact
+        z = mp_exact(L, gamma)
+        s_pos = (t > z[..., None]).astype(x2.dtype)     # d/dt_i of z over +t
+        s_neg = (-t > z[..., None]).astype(x2.dtype)    # over -t branch
+        k = jnp.maximum(jnp.sum(s_pos + s_neg, -1), 1.0)
+        return (s_pos - s_neg) / k[..., None]           # dz/dt_i
+
+    du = z_and_masks(u)       # dz_u/du_i
+    dv = z_and_masks(v)       # dz_v/dv_i
+    # y = z_u - z_v;  du/dx=+1, du/dw=+1, dv/dx=+1, dv/dw=-1 (v = x - w?) --
+    # NOTE: kernel uses u = x + w, v = x - w (see mp_linear kernel).
+    gy = g[..., None]                                  # (B, O, 1)
+    dx = jnp.sum(gy * (du - dv), axis=1)               # (B, d)
+    dw = jnp.sum(gy * (du + dv), axis=0).T             # (d, O)
+    # dz/dgamma = -1/k for each solve
+    dgamma = jnp.zeros((), x2.dtype)  # gamma non-trained in the kernel path
+    return dx, dw, dgamma
+
+
+_mp_linear_core.defvjp(_mp_linear_vjp_fwd, _mp_linear_vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def mp_linear(x: jax.Array, w: jax.Array, gamma,
+              *, iters: int = _lin.DEFAULT_ITERS):
+    """Multiplierless (..., d) @ (d, O) via the fused Pallas kernel."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _mp_linear_core(x2, w, jnp.asarray(gamma, x.dtype), iters)
+    return y.reshape(*lead, w.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# fir_mp
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def fir_mp(x: jax.Array, h: jax.Array, gamma, *, iters: int = _fir.DEFAULT_ITERS):
+    """In-filter MP FIR: x (..., N), h (M,) -> y (..., N)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _fir.fir_mp_pallas(x2, h, gamma, iters=iters, interpret=_interpret())
+    return y.reshape(*lead, x.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def fir_mp_accumulate(x: jax.Array, h: jax.Array, gamma,
+                      *, iters: int = _fir.DEFAULT_ITERS):
+    """Fused FIR + HWR + accumulate: x (..., N), h (M,) -> s (...)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    s = _fir.fir_mp_pallas(x2, h, gamma, accumulate=True, iters=iters,
+                           interpret=_interpret())
+    return s.reshape(lead)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert against these)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mp as mp_mod
+
+
+def mp_waterfill_ref(L: jax.Array, gamma) -> jax.Array:
+    """Exact sort-based reverse water-filling; the bisection kernel must
+    converge to this within interval/2^iters."""
+    return mp_mod.mp_exact(L, gamma)
+
+
+def mp_linear_ref(x: jax.Array, w: jax.Array, gamma) -> jax.Array:
+    """(B, d) @ (d, O) in the MP domain via the exact solver."""
+    return mp_mod.mp_linear(x, w, gamma, exact=True)
+
+
+def fir_mp_ref(x: jax.Array, h: jax.Array, gamma) -> jax.Array:
+    """Windowed exact MP FIR, same zero initial state as the kernel."""
+    return mp_mod.mp_conv1d(x, h, gamma, exact=True)
+
+
+def fir_mp_accumulate_ref(x: jax.Array, h: jax.Array, gamma) -> jax.Array:
+    y = fir_mp_ref(x, h, gamma)
+    return jnp.sum(jnp.maximum(y, 0.0), axis=-1)

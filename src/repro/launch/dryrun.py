@@ -1,0 +1,249 @@
+"""Multi-pod dry-run: prove the distribution config lowers + compiles for
+every (architecture x input shape x mesh) cell, and extract roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+        --out results/dryrun.json
+
+The XLA host-device override below MUST run before any other import touches
+jax (device count locks on first init). It is local to this entry point:
+tests and benches see the real single device.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_arch                    # noqa: E402
+from repro.distributed import sharding as sh                    # noqa: E402
+from repro.distributed.steps import make_train_step             # noqa: E402
+from repro.launch.hlo_cost import analyze_hlo                   # noqa: E402
+from repro.launch import specs as S                             # noqa: E402
+from repro.launch.mesh import HW, make_production_mesh          # noqa: E402
+from repro.models import transformer as T                       # noqa: E402
+from repro.optim import AdamWConfig                             # noqa: E402
+
+def model_flops(cfg: T.ArchConfig, cell: S.ShapeCell) -> float:
+    """6*N*D (dense) / 6*N_active*D; decode counts D = new tokens only.
+    Train counts fwd+bwd (3x fwd); prefill/decode count fwd (2*N*D)."""
+    n_active = T.active_param_count(cfg, S.params_specs(cfg))
+    if cfg.tie_embeddings is False and not cfg.audio_frontend:
+        pass  # full param count already includes head
+    tokens = cell.global_batch * (1 if cell.kind == "decode" else cell.seq_len)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def pick_accum(cfg: T.ArchConfig, cell: S.ShapeCell, mesh) -> int:
+    """Microbatch count for train cells: smallest power of two such that
+    the estimated per-device activation footprint fits comfortably in a
+    16 GiB v5e. Estimate: residual-stream bytes x layers x a family factor
+    calibrated against measured memory_analysis (dense ~2.5, MoE ~6 for
+    dispatch buffers, SSM ~3 after chunk-remat, hybrid ~5)."""
+    if cell.kind != "train":
+        return 1
+    n_data = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_data *= mesh.shape[a]
+    b_loc = max(cell.global_batch // n_data, 1)
+    stream = b_loc * cell.seq_len * cfg.d_model * 2
+    k = {"dense": 2.5, "vlm": 2.5, "audio": 2.5,
+         "moe": 6.0, "ssm": 3.0, "hybrid": 5.0}[cfg.family]
+    est = stream * cfg.num_layers * k
+    accum = 1
+    while est / accum > 10e9 and accum < min(16, b_loc):
+        accum *= 2
+    return accum
+
+
+def lower_cell(cfg: T.ArchConfig, cell: S.ShapeCell, mesh, accum: int = 1):
+    """Returns the jax Lowered for one cell on one mesh."""
+    ins = S.input_specs(cfg, cell)
+    if cell.kind == "train":
+        _, train_step = make_train_step(cfg, AdamWConfig(), accum=accum)
+        state = S.state_specs(cfg)
+        state_shardings = sh.tree_shardings(
+            sh.param_specs(state, mesh), mesh)
+        batch_shardings = sh.tree_shardings(
+            sh.batch_specs(ins["batch"], mesh), mesh)
+        fn = jax.jit(train_step,
+                     in_shardings=(state_shardings, batch_shardings),
+                     donate_argnums=(0,))
+        return fn.lower(state, ins["batch"])
+    if cell.kind == "prefill":
+        params = S.params_specs(cfg)
+        p_shard = sh.tree_shardings(sh.param_specs(params, mesh), mesh)
+        b_shard = sh.tree_shardings(sh.batch_specs(ins["batch"], mesh), mesh)
+        fwd = lambda p, b: T.forward(p, cfg, b)
+        fn = jax.jit(fwd, in_shardings=(p_shard, b_shard))
+        return fn.lower(params, ins["batch"])
+    # decode
+    params = S.params_specs(cfg)
+    p_shard = sh.tree_shardings(sh.param_specs(params, mesh), mesh)
+    c_shard = sh.tree_shardings(sh.cache_specs(ins["cache"], mesh), mesh)
+    t_shard = sh.tree_shardings(sh.batch_specs(
+        {"tokens": ins["tokens"], "cur_pos": ins["cur_pos"]}, mesh), mesh)
+    step = lambda p, t, c, cp: T.decode_step(p, cfg, t, c, cp)
+    fn = jax.jit(step,
+                 in_shardings=(p_shard, t_shard["tokens"], c_shard,
+                               t_shard["cur_pos"]),
+                 donate_argnums=(2,))
+    return fn.lower(params, ins["tokens"], ins["cache"], ins["cur_pos"])
+
+
+def roofline(compiled, hlo_text: str, n_chips: int, cfg, cell) -> dict:
+    """Three roofline terms from the compiled SPMD module.
+
+    The scan-aware analyzer (repro.launch.hlo_cost) multiplies while bodies
+    by their known trip counts — XLA's own HloCostAnalysis visits each body
+    once, which under-counts scan-over-layers models by ~L. All quantities
+    are PER DEVICE (the module is the per-device program); the terms divide
+    by per-chip peaks accordingly. ``xla_cost_analysis`` records XLA's raw
+    numbers for reference.
+    """
+    per_dev = analyze_hlo(hlo_text)
+    flops = per_dev["flops"]
+    coll = per_dev["collective_bytes"]
+    # Memory model: the CPU-backend module fuses far less than TPU XLA, so
+    # summing operand+output bytes per instruction ("unfused") massively
+    # overstates TPU HBM traffic. The headline memory term assumes producer-
+    # consumer fusion: every materialized tensor is written once and read
+    # once (2 x sum of outputs) plus the entry arguments read once. The
+    # unfused number is recorded alongside as the pessimistic bound.
+    mem_args = compiled.memory_analysis().argument_size_in_bytes
+    membytes = 2.0 * per_dev["bytes_out"] + mem_args
+    membytes_unfused = per_dev["bytes_accessed"]
+    t_compute = flops / HW.PEAK_FLOPS_BF16
+    t_memory = membytes / HW.HBM_BW
+    t_coll = coll["total"] / HW.ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, cell)  # global
+    global_flops = flops * n_chips
+    ca = compiled.cost_analysis()
+    return {
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": membytes,
+        "hlo_bytes_per_device_unfused": membytes_unfused,
+        "memory_s_unfused": membytes_unfused / HW.HBM_BW,
+        "transcendentals_per_device": per_dev["transcendentals"],
+        "collective_bytes": coll,
+        **terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / global_flops) if global_flops else None,
+        "bound_step_s": max(terms.values()),
+        "roofline_fraction": (t_compute / max(terms.values())
+                              if max(terms.values()) > 0 else None),
+        "xla_cost_analysis": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+    }
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             arch_overrides=None) -> dict:
+    cfg = get_arch(arch_id)
+    if arch_overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **arch_overrides)
+    cell = S.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec = {"arch": arch_id, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "n_chips": n_chips}
+    accum = pick_accum(cfg, cell, mesh)
+    rec["grad_accum"] = accum
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = lower_cell(cfg, cell, mesh, accum=accum)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            hlo = compiled.as_text()
+            rec.update(
+                status="ok",
+                lower_s=round(t_lower, 1),
+                compile_s=round(t_compile, 1),
+                memory=dict(
+                    argument_bytes=int(mem.argument_size_in_bytes),
+                    output_bytes=int(mem.output_size_in_bytes),
+                    temp_bytes=int(mem.temp_size_in_bytes),
+                    gen_code_bytes=int(mem.generated_code_size_in_bytes),
+                ),
+                roofline=roofline(compiled, hlo, n_chips, cfg, cell),
+            )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc(limit=20))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=sorted(S.SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    jobs = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for arch_id in ARCH_IDS:
+            cfg = get_arch(arch_id)
+            for shape_name, status, reason in S.cell_table(cfg):
+                for mp in meshes:
+                    if status == "run":
+                        jobs.append((arch_id, shape_name, mp))
+                    else:
+                        print(f"SKIP {arch_id} x {shape_name}: {reason}")
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        jobs = [(args.arch, args.shape, mp) for mp in meshes]
+
+    results = []
+    for arch_id, shape_name, mp in jobs:
+        rec = run_cell(arch_id, shape_name, multi_pod=mp)
+        results.append(rec)
+        tag = "OK " if rec["status"] == "ok" else "FAIL"
+        extra = ""
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            extra = (f" dom={r['dominant']} comp={r['compute_s']:.4f}s "
+                     f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+                     f"frac={r['roofline_fraction']:.2f}")
+        else:
+            extra = " " + rec["error"][:160]
+        print(f"{tag} {arch_id:18s} {shape_name:12s} mesh={rec['mesh']}{extra}",
+              flush=True)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    n_fail = sum(r["status"] != "ok" for r in results)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,344 @@
+"""Scan-aware cost analysis over compiled HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` (XLA HloCostAnalysis) visits a
+``while`` body ONCE, so any model built with scan-over-layers (ours — the
+thing that keeps 80-layer HLO small) under-counts FLOPs/bytes/collectives by
+the trip count (verified: flops for glm4 smoke barely change from 2 to 16
+layers). The compiled HLO text carries ``backend_config=
+{"known_trip_count":{"n":"80"}}`` on each while op, so an exact fix is to
+re-walk the module and multiply while-body costs by their trip counts —
+including nested scans (flash-attention q/kv chunk loops, SSD chunk loops)
+that sit inside the layer loop.
+
+Cost model (deliberate divergences from HloCostAnalysis, documented):
+  * flops: 2*prod(out)*prod(contract) per dot; 1/elem for elementwise;
+    transcendentals tracked separately.
+  * bytes: operands + outputs per instruction; fusions count only their
+    boundary (internal traffic stays in registers/VMEM); gather /
+    dynamic-(update-)slice count only the *touched* slice, not the full
+    buffer (in-place cache updates would otherwise dwarf everything).
+  * collectives: output bytes per op type, multiplied by enclosing trip
+    counts; ``-start`` counted, ``-done`` free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Optional
+
+__all__ = ["analyze_hlo", "CostResult"]
+
+_TYPE_BYTES = {"f64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2,
+               "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+               "u64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+               "s4": 1, "u4": 1, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "atan2", "is-finite",
+}
+_TRANSCENDENTAL = {"exponential", "exponential-minus-one", "log", "log-plus-one",
+                   "tanh", "rsqrt", "sqrt", "power", "logistic", "sine",
+                   "cosine", "tan", "erf", "cbrt", "expm1"}
+_FREE = {"parameter", "tuple", "get-tuple-element", "bitcast", "after-all",
+         "constant", "iota", "partition-id", "replica-id", "opt-barrier",
+         "domain"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    """Total (elements, bytes) over every array in a (possibly tuple) shape."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _TYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _TYPE_BYTES[dt]
+    return elems, nbytes
+
+
+def _array_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str           # output shape string (may be tuple)
+    op: str
+    operands: list
+    attrs: str           # raw trailing attribute text
+
+
+@dataclasses.dataclass
+class CostResult:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes_accessed: float = 0.0
+    bytes_out: float = 0.0   # outputs only: basis of the fusion-adjusted model
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "CostResult", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.bytes_out += other.bytes_out * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] += v * mult
+
+    def as_dict(self) -> dict:
+        coll = dict(self.collective_bytes)
+        coll["total"] = sum(coll.values())
+        return {"flops": self.flops, "transcendentals": self.transcendentals,
+                "bytes_accessed": self.bytes_accessed,
+                "bytes_out": self.bytes_out,
+                "collective_bytes": coll}
+
+
+# instruction line:  %name = SHAPE op(...), attrs   (comments pre-stripped)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\)|\S+?))\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+
+
+def parse_module(text: str) -> tuple[dict, Optional[str]]:
+    """-> ({comp_name: [Instr]}, entry_name).
+
+    Computation headers sit at column 0 (``%name (...) -> ... {`` or
+    ``ENTRY ...``); instructions are indented. ``/*index=n*/`` comments are
+    stripped before matching (they otherwise break the shape grammar)."""
+    comps: dict[str, list[Instr]] = {}
+    entry = None
+    cur: Optional[list] = None
+    for raw in text.splitlines():
+        line = _COMMENT_RE.sub("", raw.rstrip())
+        if not line or line.startswith("HloModule"):
+            continue
+        if not line[0].isspace() and line.endswith("{"):
+            token = line.split()[1] if line.startswith("ENTRY") else line.split()[0]
+            name = token.lstrip("%").split("(")[0]
+            comps[name] = []
+            cur = comps[name]
+            if line.startswith("ENTRY"):
+                entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape, op, operand_str, attrs = m.groups()
+        operands = [mo.group(1) for mo in _OPERAND_RE.finditer(operand_str)]
+        cur.append(Instr(name, shape, op, operands, attrs))
+    return comps, entry
+
+
+class _Analyzer:
+    def __init__(self, comps: dict):
+        self.comps = comps
+        self.symtab = {c: {i.name: i.shape for i in instrs}
+                       for c, instrs in comps.items()}
+        self._memo: dict[str, CostResult] = {}
+
+    def computation_cost(self, comp_name: str) -> CostResult:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        total = CostResult()
+        # memoize BEFORE recursion to break accidental cycles (none expected)
+        self._memo[comp_name] = total
+        for ins in self.comps.get(comp_name, []):
+            total.add(self.instr_cost(ins, comp_name))
+        return total
+
+    def _operand_bytes(self, ins: Instr, comp: str) -> float:
+        st = self.symtab[comp]
+        b = 0
+        for o in ins.operands:
+            sh = st.get(o)
+            if sh:
+                b += _shape_elems_bytes(sh)[1]
+        return b
+
+    def instr_cost(self, ins: Instr, comp: str) -> CostResult:
+        r = CostResult()
+        op = ins.op
+        out_elems, out_bytes = _shape_elems_bytes(ins.shape)
+
+        if op in _FREE or op.endswith("-done"):
+            return r
+
+        if op == "while":
+            trip = 1
+            m = _TRIP_RE.search(ins.attrs)
+            if m:
+                trip = int(m.group(1))
+            body = _BODY_RE.search(ins.attrs)
+            if body:
+                r.add(self.computation_cost(body.group(1)), mult=trip)
+            r.bytes_accessed += out_bytes  # loop-carried tuple once
+            return r
+
+        if op == "fusion":
+            callee = _CALLS_RE.search(ins.attrs)
+            if callee:
+                inner = self.computation_cost(callee.group(1))
+                r.flops += inner.flops
+                r.transcendentals += inner.transcendentals
+                # internal bytes stay on-chip; boundary traffic only
+            r.bytes_accessed += out_bytes + self._operand_bytes(ins, comp)
+            r.bytes_out += out_bytes
+            return r
+
+        if op in ("call", "async-start"):
+            callee = _TO_APPLY_RE.search(ins.attrs) or _CALLS_RE.search(ins.attrs)
+            if callee:
+                r.add(self.computation_cost(callee.group(1)))
+            return r
+
+        if op == "conditional":
+            branches = re.findall(r"branch_computations=\{([^}]*)\}", ins.attrs)
+            names = []
+            if branches:
+                names = _OPERAND_RE.findall(branches[0])
+            else:
+                names = [m.group(1) for m in
+                         re.finditer(r"(?:true|false)_computation=%?([\w.\-]+)",
+                                     ins.attrs)]
+            sub = [self.computation_cost(n) for n in names]
+            if sub:
+                worst = max(sub, key=lambda c: c.flops)
+                r.add(worst)
+            r.bytes_accessed += out_bytes
+            return r
+
+        base_op = op.replace("-start", "")
+        if base_op in _COLLECTIVES:
+            r.collective_bytes[base_op] += out_bytes
+            r.bytes_accessed += out_bytes + self._operand_bytes(ins, comp)
+            r.bytes_out += out_bytes
+            return r
+
+        if op == "dot":
+            lhs_shape = self.symtab[comp].get(ins.operands[0], "")
+            lhs_dims = _array_dims(lhs_shape)
+            cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+            contract = 1
+            if cdims and lhs_dims:
+                for d in cdims.group(1).split(","):
+                    if d:
+                        contract *= lhs_dims[int(d)]
+            r.flops += 2.0 * out_elems * contract
+            r.bytes_accessed += out_bytes + self._operand_bytes(ins, comp)
+            r.bytes_out += out_bytes
+            return r
+
+        if op == "convolution":
+            # rare here; approximate via kernel size
+            rhs_shape = self.symtab[comp].get(ins.operands[1], "")
+            k_elems = _shape_elems_bytes(rhs_shape)[0]
+            r.flops += 2.0 * out_elems * max(k_elems, 1) ** 0.5
+            r.bytes_accessed += out_bytes + self._operand_bytes(ins, comp)
+            return r
+
+        if op in ("gather", "dynamic-slice"):
+            r.bytes_accessed += 2 * out_bytes  # touched slice read + written
+            r.bytes_out += out_bytes
+            return r
+        if op in ("dynamic-update-slice", "scatter"):
+            upd = ins.operands[1] if len(ins.operands) > 1 else None
+            upd_bytes = 0
+            if upd:
+                sh = self.symtab[comp].get(upd)
+                if sh:
+                    upd_bytes = _shape_elems_bytes(sh)[1]
+            r.bytes_accessed += 2 * upd_bytes
+            r.bytes_out += upd_bytes
+            if op == "scatter":
+                r.flops += out_elems  # combiner adds
+            return r
+
+        if op == "sort":
+            dims = _array_dims(ins.shape)
+            n = dims[-1] if dims else 1
+            r.flops += out_elems * max(math.log2(max(n, 2)), 1.0)
+            r.bytes_accessed += out_bytes + self._operand_bytes(ins, comp)
+            r.bytes_out += out_bytes
+            return r
+
+        if op in _TRANSCENDENTAL:
+            r.transcendentals += out_elems
+            r.bytes_accessed += out_bytes + self._operand_bytes(ins, comp)
+            r.bytes_out += out_bytes
+            return r
+
+        if op == "copy":
+            # XLA-CPU inserts loop-carried buffer copies that TPU's buffer
+            # forwarding elides; count the write, not the read. Excluded from
+            # the fusion-adjusted model entirely.
+            r.bytes_accessed += out_bytes
+            return r
+
+        if op in _ELEMENTWISE or op in ("reduce", "reduce-window", "map",
+                                        "convert", "broadcast", "reshape",
+                                        "transpose", "concatenate",
+                                        "pad", "slice", "reverse", "rng",
+                                        "rng-bit-generator", "cumsum",
+                                        "clz", "popcnt", "real", "imag"):
+            if op in _ELEMENTWISE or op in ("reduce", "reduce-window", "map"):
+                r.flops += out_elems if op not in ("reduce", "reduce-window") \
+                    else out_elems + self._operand_elems(ins, comp)
+            r.bytes_accessed += out_bytes + self._operand_bytes(ins, comp)
+            r.bytes_out += out_bytes
+            return r
+
+        # unknown op: count bytes, no flops
+        r.bytes_accessed += out_bytes + self._operand_bytes(ins, comp)
+        r.bytes_out += out_bytes
+        return r
+
+    def _operand_elems(self, ins: Instr, comp: str) -> float:
+        st = self.symtab[comp]
+        n = 0
+        for o in ins.operands:
+            sh = st.get(o)
+            if sh:
+                n += _shape_elems_bytes(sh)[0]
+        return n
+
+
+def analyze_hlo(text: str) -> dict:
+    """Full-module scan-aware cost. Returns flops / transcendentals /
+    bytes_accessed / collective_bytes (all PER DEVICE for SPMD modules)."""
+    comps, entry = parse_module(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    az = _Analyzer(comps)
+    return az.computation_cost(entry).as_dict()

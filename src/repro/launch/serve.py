@@ -1,0 +1,84 @@
+"""Serving launcher: batched autoregressive decode with a sharded KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+        --batch 4 --prompt-len 16 --gen 32
+
+Request flow: a batch of prompts is prefetched (prefill via the forward
+pass teacher-forcing the prompt tokens through decode_step slots), then
+tokens are generated one step at a time with the jitted serve_step. The
+cache is donated across steps (no per-token reallocation).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_arch, get_smoke
+from repro.distributed.steps import make_serve_step
+from repro.models import transformer as T
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCH_IDS), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+    assert not cfg.vlm_patches, "serve demo uses text-only prompts"
+
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init(cfg, key)
+    B = args.batch
+    total = args.prompt_len + args.gen
+    cache_len = total if cfg.sliding_window is None \
+        else min(total, cfg.sliding_window)
+    cache = T.init_cache(cfg, B, cache_len)
+    serve_step = jax.jit(make_serve_step(cfg, args.temperature),
+                         donate_argnums=(2,), static_argnums=())
+
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab_size, (B, args.prompt_len))
+    out_tokens = [prompts]
+
+    # prefill: feed prompt tokens through decode slots (teacher forcing)
+    t0 = time.time()
+    tok = jnp.asarray(prompts[:, :1], jnp.int32)
+    for i in range(args.prompt_len):
+        pos = jnp.full((B,), i, jnp.int32)
+        nxt, _, cache = serve_step(params, jnp.asarray(prompts[:, i:i+1],
+                                                       jnp.int32), cache, pos)
+    prefill_s = time.time() - t0
+
+    # generate
+    t0 = time.time()
+    tok = nxt
+    gen = []
+    for i in range(args.gen):
+        pos = jnp.full((B,), args.prompt_len + i, jnp.int32)
+        key, sk = jax.random.split(key)
+        tok, logits, cache = serve_step(params, tok, cache, pos, sk)
+        gen.append(np.asarray(tok))
+    gen_s = time.time() - t0
+    gen_arr = np.concatenate(gen, axis=1)
+    print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} gen={args.gen}")
+    print(f"prefill {prefill_s*1e3:.0f} ms, decode {gen_s*1e3:.0f} ms "
+          f"({args.gen*B/max(gen_s,1e-9):.1f} tok/s)")
+    print("sample generation:", gen_arr[0][:16].tolist())
+    return gen_arr
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation: everything here is abstract. The same specs drive the
+dry-run (.lower().compile()), the roofline accounting, and the launcher's
+shape validation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+__all__ = ["SHAPES", "ShapeCell", "input_specs", "state_specs", "cell_table",
+           "runnable_cells"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fwd_batch_specs(cfg: T.ArchConfig, B: int, S: int, with_labels: bool):
+    """Batch specs for a full-sequence pass (train / prefill)."""
+    if cfg.audio_frontend:
+        b = {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16)}
+        if with_labels:
+            b["labels"] = _sds((B, S), jnp.int32)
+        return b
+    if cfg.vlm_patches:
+        return {"tokens": _sds((B, S - cfg.vlm_patches), jnp.int32),
+                "patches": _sds((B, cfg.vlm_patches, cfg.d_model),
+                                jnp.bfloat16)}
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def cache_len_for(cfg: T.ArchConfig, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def input_specs(cfg: T.ArchConfig, shape: ShapeCell) -> dict:
+    """Abstract inputs for the cell's step function."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": _fwd_batch_specs(cfg, B, S, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": _fwd_batch_specs(cfg, B, S, with_labels=False)}
+    # decode: one new token against a cache of length S
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, B, cache_len_for(cfg, S)))
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "cache": cache,
+        "cur_pos": _sds((B,), jnp.int32),
+    }
+
+
+def state_specs(cfg: T.ArchConfig):
+    """Abstract TrainState (params + adam moments + step)."""
+    from repro.distributed.steps import make_train_step
+    from repro.optim import AdamWConfig
+    init_state, _ = make_train_step(cfg, AdamWConfig())
+    return jax.eval_shape(lambda: init_state(jax.random.PRNGKey(0)))
+
+
+def params_specs(cfg: T.ArchConfig):
+    return jax.eval_shape(lambda: T.init(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# cell enumeration with documented skips
+# ---------------------------------------------------------------------------
+
+
+def cell_table(cfg: T.ArchConfig):
+    """[(shape_name, status, reason)] for one arch. status: run | skip."""
+    rows = []
+    for name, cell in SHAPES.items():
+        if cell.kind == "decode" and not cfg.supports_decode:
+            rows.append((name, "skip", "encoder-only: no decode step"))
+        elif name == "long_500k" and not cfg.subquadratic:
+            rows.append((name, "skip",
+                         "pure full attention: 512k dense decode does not "
+                         "fit HBM; arch defines no sparse variant"))
+        else:
+            rows.append((name, "run", ""))
+    return rows
+
+
+def runnable_cells(cfg: T.ArchConfig):
+    return [name for name, status, _ in cell_table(cfg) if status == "run"]

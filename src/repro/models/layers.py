@@ -1,0 +1,418 @@
+"""Shared neural-net layers for the architecture zoo (pure functional JAX).
+
+Conventions:
+  * params are plain nested dicts of jnp arrays;
+  * every init_* returns (params, ...) given a PRNG key;
+  * activations flow (B, S, D); attention uses (B, S, H, hd);
+  * compute dtype = bf16 (configurable), params f32, reductions f32;
+  * `linear()` is the universal projection and dispatches to the paper's
+    multiplierless MP path when `mp=(gamma, iters)` is requested — the MP
+    kernel machine technique as a first-class layer mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# initializers / basic ops
+# ---------------------------------------------------------------------------
+
+
+def cdt(cfg):
+    """The arch's compute dtype (bf16 default; f32 for exactness tests)."""
+    return jnp.dtype(getattr(cfg, "compute_dtype", "bfloat16"))
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def linear(x, w, b=None, *, mp_mode: bool = False, mp_gamma: float = 8.0,
+           compute_dtype=jnp.bfloat16):
+    """y = x @ w (+ b). With mp_mode, uses the paper's multiplierless MP
+    approximation (eq. 9) through the fused Pallas kernel."""
+    if mp_mode:
+        from repro.kernels import mp_linear as mp_linear_kernel
+        y = mp_linear_kernel(x.astype(jnp.float32), w.astype(jnp.float32),
+                             mp_gamma)
+        y = y.astype(compute_dtype)
+    else:
+        y = jnp.dot(x.astype(compute_dtype), w.astype(compute_dtype),
+                    preferred_element_type=compute_dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    ang = pos[..., None] * freqs[None, None, :]        # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# memory-efficient attention (flash-style double-chunked online softmax)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+):
+    """Flash attention in pure JAX with a custom VJP (GQA-aware).
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, Hk, hd), H % Hk == 0.
+    Forward: online softmax over kv chunks inside a scan over q chunks;
+    only (out, LSE) are saved. Backward: recomputes p blockwise and
+    accumulates dq/dk/dv — O(S) memory instead of the O(S^2 / chunks)
+    residual stack a plain scan transpose would save. This is what lets
+    prefill_32k / train_4k fit HBM without a fused TPU kernel, and it is
+    the memory-term hillclimb lever (score blocks never round-trip HBM as
+    saved residuals).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, Hk, _ = k.shape
+    G = H // Hk
+    scale = 1.0 / math.sqrt(hd)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    qp = (-Sq) % q_chunk
+    kp = (-Skv) % kv_chunk
+    nq = (Sq + qp) // q_chunk
+    nk = (Skv + kp) // kv_chunk
+
+    # positions are always 0..S-1 here (training / prefill, no packing);
+    # computed from STATIC lengths with numpy so the custom_vjp closure
+    # holds constants, never tracers.
+    import numpy as _np
+    # plain numpy (NOT jnp): these are closure constants for the custom_vjp
+    # and must not be bound to any single trace (the bwd rule runs under a
+    # different trace than the fwd).
+    qpos_c = _np.pad(_np.arange(Sq, dtype=_np.int32), (0, qp),
+                     constant_values=-1).reshape(nq, q_chunk)
+    kpos_c = _np.pad(_np.arange(Skv, dtype=_np.int32), (0, kp),
+                     constant_values=2**30).reshape(nk, kv_chunk)
+
+    def block_mask(qpos_i, kpos_j):
+        mask = jnp.ones((q_chunk, kv_chunk), bool)
+        if causal:
+            mask &= qpos_i[:, None] >= kpos_j[None, :]
+        if window is not None:
+            mask &= (qpos_i[:, None] - kpos_j[None, :]) < window
+        return mask
+
+    # padded, chunked, grouped layouts (leading chunk axis for scan)
+    def chunk_q(x):
+        xp = jnp.pad(x, ((0, 0), (0, qp), (0, 0), (0, 0)))
+        return xp.reshape(B, nq, q_chunk, Hk, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    def chunk_kv(x):
+        xp = jnp.pad(x, ((0, 0), (0, kp), (0, 0), (0, 0)))
+        return xp.reshape(B, nk, kv_chunk, Hk, hd).transpose(1, 0, 2, 3, 4)
+
+    def unchunk_q(xg):  # (nq, B, qc, Hk, G, hd) -> (B, Sq, H, hd)
+        x = xg.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_chunk, H, hd)
+        return x[:, :Sq]
+
+    def unchunk_kv(xg):
+        x = xg.transpose(1, 0, 2, 3, 4).reshape(B, nk * kv_chunk, Hk, hd)
+        return x[:, :Skv]
+
+    def scores(qc, kc, qpos_i, kpos_j):
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        return jnp.where(block_mask(qpos_i, kpos_j)[None, None, None],
+                         s, -1e30)
+
+    @jax.custom_vjp
+    def flash(qh, kh, vh):
+        out, _ = _flash_fwd(qh, kh, vh)
+        return out
+
+    def _flash_fwd(qh, kh, vh):
+        qg, kg, vg = chunk_q(qh), chunk_kv(kh), chunk_kv(vh)
+
+        def q_step(_, qi):
+            qc, qpos_i = qi
+
+            def kv_step(carry, ki):
+                m, l, acc = carry
+                kc, vc, kpos_j = ki
+                s = scores(qc, kc, qpos_i, kpos_j)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l = l * corr + jnp.sum(p, axis=-1)
+                pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vc.dtype),
+                                vc, preferred_element_type=jnp.float32)
+                acc = acc * corr[..., None] + pv
+                return (m_new, l, acc), None
+
+            m0 = jnp.full((B, Hk, G, q_chunk), -jnp.inf, jnp.float32)
+            l0 = jnp.zeros((B, Hk, G, q_chunk), jnp.float32)
+            a0 = jnp.zeros((B, Hk, G, q_chunk, hd), jnp.float32)
+            (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kg, vg, kpos_c))
+            l_safe = jnp.maximum(l, 1e-30)
+            o = (acc / l_safe[..., None]).transpose(0, 3, 1, 2, 4)
+            lse = m + jnp.log(l_safe)                   # (B, Hk, G, qc)
+            return None, (o.astype(qh.dtype), lse)
+
+        _, (outs, lses) = lax.scan(q_step, None, (qg, qpos_c))
+        out = unchunk_q(outs.transpose(0, 1, 2, 3, 4, 5))
+        return out, lses                                # lses: (nq,B,Hk,G,qc)
+
+    def _fwd_rule(qh, kh, vh):
+        out, lses = _flash_fwd(qh, kh, vh)
+        return out, (qh, kh, vh, out, lses)
+
+    def _bwd_rule(res, dout):
+        qh, kh, vh, out, lses = res
+        qg, kg, vg = chunk_q(qh), chunk_kv(kh), chunk_kv(vh)
+        dog = chunk_q(dout)
+        og = chunk_q(out)
+        # D_i = rowsum(dout * out)  (B, Hk, G, qc) per q chunk
+        Dg = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), -1) \
+            .transpose(0, 1, 3, 4, 2)                   # (nq,B,Hk,G,qc)
+
+        def kv_step(dq_acc, ki):
+            kc, vc, kpos_j = ki
+
+            def q_step(carry, qi):
+                dk, dv = carry
+                qc, doc, lse, Dc, qpos_i = qi
+                s = scores(qc, kc, qpos_i, kpos_j)
+                p = jnp.exp(s - lse[..., None])         # (B,Hk,G,qc,kvc)
+                dp = jnp.einsum("bqkgd,bckd->bkgqc",
+                                doc.astype(jnp.float32),
+                                vc.astype(jnp.float32))
+                ds = p * (dp - Dc[..., None]) * scale
+                pb = p.astype(vc.dtype)
+                dsb = ds.astype(qc.dtype)
+                dv = dv + jnp.einsum("bkgqc,bqkgd->bckd", pb, doc,
+                                     preferred_element_type=jnp.float32)
+                dk = dk + jnp.einsum("bkgqc,bqkgd->bckd", dsb, qc,
+                                     preferred_element_type=jnp.float32)
+                dq_i = jnp.einsum("bkgqc,bckd->bqkgd", dsb, kc,
+                                  preferred_element_type=jnp.float32)
+                return (dk, dv), dq_i
+
+            dk0 = jnp.zeros((B, kv_chunk, Hk, hd), jnp.float32)
+            dv0 = jnp.zeros((B, kv_chunk, Hk, hd), jnp.float32)
+            (dk, dv), dq_parts = lax.scan(
+                q_step, (dk0, dv0), (qg, dog, lses, Dg, qpos_c))
+            return dq_acc + dq_parts, (dk, dv)
+
+        dq0 = jnp.zeros((nq, B, q_chunk, Hk, G, hd), jnp.float32)
+        dqg, (dks, dvs) = lax.scan(kv_step, dq0, (kg, vg, kpos_c))
+        dq = unchunk_q(dqg.astype(qh.dtype))
+        dk = unchunk_kv(dks.astype(kh.dtype))
+        dv = unchunk_kv(dvs.astype(vh.dtype))
+        return dq, dk, dv
+
+    flash.defvjp(_fwd_rule, _bwd_rule)
+    return flash(q, k, v)
+
+
+def decode_attention(q, k_cache, v_cache, cur_pos, *, window=None):
+    """Single-token decode: q (B, 1, H, hd) against a (B, S, Hk, hd) cache.
+
+    cur_pos: (B,) int32 — index of the token being generated; cache slots
+    > cur_pos (and outside the sliding window) are masked.
+    """
+    B, _, H, hd = q.shape
+    _, S, Hk, _ = k_cache.shape
+    G = H // Hk
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Hk, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)[None, :]                       # (1, S)
+    mask = pos <= cur_pos[:, None]
+    if window is not None:
+        mask &= (cur_pos[:, None] - pos) < window
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (init + apply)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg) -> dict:
+    ks = jax.random.split(key, 6)
+    hd = cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.num_heads * hd),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.num_kv_heads * hd),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.num_kv_heads * hd),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, cfg.d_model),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,))
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,))
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,))
+        p["k_norm"] = jnp.ones((hd,))
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = linear(x, p["wq"], p.get("bq"), mp_mode=cfg.mp_mode,
+               mp_gamma=cfg.mp_gamma, compute_dtype=cdt(cfg)).reshape(B, S, cfg.num_heads, hd)
+    k = linear(x, p["wk"], p.get("bk"), mp_mode=cfg.mp_mode,
+               mp_gamma=cfg.mp_gamma, compute_dtype=cdt(cfg)).reshape(B, S, cfg.num_kv_heads, hd)
+    v = linear(x, p["wv"], p.get("bv"), mp_mode=cfg.mp_mode,
+               mp_gamma=cfg.mp_gamma, compute_dtype=cdt(cfg)).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p, x, cfg, positions, *, q_chunk=512, kv_chunk=1024):
+    """Full-sequence attention (training / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = chunked_attention(
+        q, k, v, causal=not cfg.is_encoder, window=cfg.sliding_window,
+        q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return linear(out, p["wo"], mp_mode=cfg.mp_mode, mp_gamma=cfg.mp_gamma, compute_dtype=cdt(cfg))
+
+
+def attention_decode(p, x, cfg, cache, cur_pos):
+    """x: (B, 1, D). cache: {"k": (B, S, Hk, hd), "v": ...}. Returns
+    (out (B,1,D), new_cache)."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg, cur_pos[:, None])
+    # write the new kv at cur_pos (sliding windows use modular slots)
+    S = cache["k"].shape[1]
+    slot = cur_pos % S
+
+    def write(c, new):
+        return jax.vmap(
+            lambda cb, nb, sb: lax.dynamic_update_slice_in_dim(cb, nb, sb, 0)
+        )(c, new, slot)
+
+    k_cache = write(cache["k"], k.astype(cache["k"].dtype))
+    v_cache = write(cache["v"], v.astype(cache["v"].dtype))
+    # For sliding-window caches the absolute positions rotate; decode masking
+    # uses stored positions per slot.
+    pos_cache = write(cache["pos"][..., None],
+                      cur_pos[:, None, None])[..., 0]
+    qg = q
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    G = cfg.num_heads // cfg.num_kv_heads
+    qh = qg.reshape(B, cfg.num_kv_heads, G, cfg.head_dim)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    valid = pos_cache <= cur_pos[:, None]
+    if cfg.sliding_window is not None:
+        valid &= (cur_pos[:, None] - pos_cache) < cfg.sliding_window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr, v_cache.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+    out = linear(out, p["wo"], mp_mode=cfg.mp_mode, mp_gamma=cfg.mp_gamma, compute_dtype=cdt(cfg))
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache}
+    return out, new_cache
+
+
+def init_attn_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, cache_len), 2**30, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff),
+        "wi_up": dense_init(k2, d_model, d_ff),
+        "wo": dense_init(k3, d_ff, d_model),
+    }
+
+
+def swiglu(p, x, cfg):
+    g = linear(x, p["wi_gate"], mp_mode=cfg.mp_mode, mp_gamma=cfg.mp_gamma, compute_dtype=cdt(cfg))
+    u = linear(x, p["wi_up"], mp_mode=cfg.mp_mode, mp_gamma=cfg.mp_gamma, compute_dtype=cdt(cfg))
+    return linear(jax.nn.silu(g) * u, p["wo"], mp_mode=cfg.mp_mode,
+                  mp_gamma=cfg.mp_gamma, compute_dtype=cdt(cfg))
+
+
+def init_gelu_mlp(key, d_model, d_ff):
+    k1, k2 = jax.random.split(key)
+    return {"wi": dense_init(k1, d_model, d_ff),
+            "bi": jnp.zeros((d_ff,)),
+            "wo": dense_init(k2, d_ff, d_model),
+            "bo": jnp.zeros((d_model,))}
+
+
+def gelu_mlp(p, x, cfg):
+    h = jax.nn.gelu(linear(x, p["wi"], p["bi"], mp_mode=cfg.mp_mode,
+                           mp_gamma=cfg.mp_gamma, compute_dtype=cdt(cfg)))
+    return linear(h, p["wo"], p["bo"], mp_mode=cfg.mp_mode,
+                  mp_gamma=cfg.mp_gamma, compute_dtype=cdt(cfg))

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts layer with capacity-based gather dispatch.
+
+Dispatch strategy (MaxText/GShard-style but gather-based): tokens are
+grouped, each (group, expert) pair gets a static capacity
+C = ceil(Sg * k / E * capacity_factor); per group we argsort token->expert
+assignments so each expert's tokens are contiguous, then *gather* them into
+the (G, E, C, D) expert batch. Gathers cost bytes, not FLOPs — unlike the
+one-hot dispatch einsum, which costs G*Sg*E*C*D MACs and would dominate the
+compute roofline for fine-grained MoE (deepseek: 64 experts of d_ff=1408).
+Overflowing tokens are dropped (keep their residual path only), standard
+Switch behaviour; combine scatters expert outputs back weighted by the
+softmax gate.
+
+Supports shared experts (DeepSeek-MoE: always-on dense experts fused into
+one SwiGLU of width shared*d_ff) and top-k routed experts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+__all__ = ["init_moe", "moe_block"]
+
+
+def init_moe(key, cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(ks[0], d, e),
+        "wi_gate": jax.vmap(lambda k: L.dense_init(k, d, f))(
+            jax.random.split(ks[1], e)),
+        "wi_up": jax.vmap(lambda k: L.dense_init(k, d, f))(
+            jax.random.split(ks[2], e)),
+        "wo": jax.vmap(lambda k: L.dense_init(k, f, d))(
+            jax.random.split(ks[3], e)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = L.init_swiglu(ks[4], d, f * cfg.num_shared_experts)
+    return p
+
+
+def moe_block(p, x, cfg):
+    """x: (B, S, D) -> (B, S, D).
+
+    Capacity policy comes from cfg.moe_capacity_factor: a float gives
+    Switch-style C = ceil(g*K/E * cf) with overflow dropping; None gives the
+    no-drop mode (C = g, exact — every assignment is honoured; used at
+    decode and in parity tests)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    capacity_factor = cfg.moe_capacity_factor
+    T = B * S
+    xf = x.reshape(T, D)
+
+    g = min(cfg.moe_group_size, T)
+    G = T // g
+    assert T % g == 0, (T, g)
+    if capacity_factor is None:
+        C = g  # no-drop: a token can land on an expert at most once
+    else:
+        C = max(int(g * K / E * capacity_factor), 1)
+        # pad C to a friendly lane multiple when large enough to matter
+        if C > 16:
+            C = -(-C // 8) * 8
+        C = min(C, g)
+
+    logits = L.linear(xf, p["router"]).astype(jnp.float32)   # (T, E)
+    top_val, top_idx = lax.top_k(logits, K)                  # (T, K)
+    gates = jax.nn.softmax(top_val, axis=-1)
+
+    xg = xf.reshape(G, g, D)
+    eid = top_idx.reshape(G, g * K)          # flattened (token, choice)
+    gate_flat = gates.reshape(G, g * K)
+    tok_of = jnp.tile(jnp.arange(g)[:, None], (1, K)).reshape(g * K)
+
+    def dispatch_group(eid_g):
+        # stable sort assignments by expert id; returns the permutation
+        order = jnp.argsort(eid_g, stable=True)              # (g*K,)
+        sorted_eid = eid_g[order]
+        # rank of each assignment within its expert = position - start[e]
+        counts = jnp.bincount(eid_g, length=E)               # (E,)
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+        pos = jnp.arange(g * K)
+        rank = pos - starts[sorted_eid]
+        keep = rank < C
+        # slot index into the (E*C) expert buffer; dropped -> sentinel E*C
+        slot = jnp.where(keep, sorted_eid * C + rank, E * C)
+        return order, slot
+
+    order, slot = jax.vmap(dispatch_group)(eid)              # (G, g*K)
+
+    # scatter token ids into the (G, E*C+1) buffer (last = drop bin)
+    tok_sorted = jnp.take_along_axis(
+        jnp.broadcast_to(tok_of[None, :], eid.shape), order, axis=1)
+    gate_sorted = jnp.take_along_axis(gate_flat, order, axis=1)
+    buf_tok = jnp.full((G, E * C + 1), 0, jnp.int32)
+    buf_gate = jnp.zeros((G, E * C + 1), jnp.float32)
+    gidx = jnp.broadcast_to(jnp.arange(G)[:, None], order.shape)
+    buf_tok = buf_tok.at[gidx, slot].set(tok_sorted, mode="drop")
+    buf_gate = buf_gate.at[gidx, slot].set(gate_sorted, mode="drop")
+    buf_tok = buf_tok[:, : E * C]
+    buf_gate = buf_gate[:, : E * C]                          # 0 for empty slots
+
+    # gather -> expert FFNs -> weighted scatter, processed in group-chunks:
+    # the (Gc, E, C, F) hidden transient is the largest MoE buffer (5+ GiB
+    # per layer at mixtral prefill_32k if all G groups run at once); a
+    # lax.map over chunks of groups bounds it to Gc/G of that.
+    def run_groups(args):
+        xg_c, tok_c, gate_c = args                 # (Gc,g,D),(Gc,E*C),(Gc,E*C)
+        Gc = xg_c.shape[0]
+        xe = jnp.take_along_axis(xg_c, tok_c[..., None], axis=1)
+        xe = xe.reshape(Gc, E, C, D)
+
+        def expert_ffn(x_e, wg, wu, wo):
+            h = jax.nn.silu(jnp.einsum("gcd,df->gcf", x_e,
+                                       wg.astype(x_e.dtype)))
+            h = h * jnp.einsum("gcd,df->gcf", x_e, wu.astype(x_e.dtype))
+            return jnp.einsum("gcf,fd->gcd", h, wo.astype(x_e.dtype))
+
+        ye = jax.vmap(expert_ffn, in_axes=(1, 0, 0, 0), out_axes=1)(
+            xe, p["wi_gate"], p["wi_up"], p["wo"])           # (Gc, E, C, D)
+        ye = ye.reshape(Gc, E * C, D) * gate_c[..., None].astype(ye.dtype)
+        cidx = jnp.broadcast_to(jnp.arange(Gc)[:, None], (Gc, E * C))
+        yg = jnp.zeros((Gc, g, D), ye.dtype)
+        return yg.at[cidx, tok_c].add(ye)
+
+    gchunk = max(min(cfg.moe_group_chunk, G), 1)
+    if G % gchunk != 0:
+        gchunk = 1
+    if gchunk == G:
+        yg = run_groups((xg, buf_tok, buf_gate))
+    else:
+        nch = G // gchunk
+        # remat the chunk body: lax.map is a scan, and its transpose would
+        # otherwise SAVE each chunk's gathered (Gc,E,C,D) tokens — undoing
+        # the memory cap in training (prefill is unaffected either way)
+        body = jax.checkpoint(run_groups) if getattr(cfg, "remat", False) \
+            else run_groups
+        yg = jax.lax.map(
+            body,
+            (xg.reshape(nch, gchunk, g, D),
+             buf_tok.reshape(nch, gchunk, E * C),
+             buf_gate.reshape(nch, gchunk, E * C)))
+        yg = yg.reshape(G, g, D)
+    y = yg.reshape(B, S, D)
+
+    if cfg.num_shared_experts:
+        y = y + L.swiglu(p["shared"], x, cfg)
+    return y.astype(x.dtype)

@@ -1,0 +1,188 @@
+"""Mamba-2 (SSD — state-space duality) blocks, pure JAX.
+
+Chunked SSD forward (Dao & Gu, arXiv:2405.21060, Listing 1 adapted):
+the sequence is split into chunks of length Q; within a chunk the output is
+a masked quadratic (attention-like) form — MXU-friendly — and across chunks
+a tiny recurrent state (H heads x P headdim x N state) is carried by a scan.
+This is the sub-quadratic path that makes the long_500k cells feasible.
+
+Decode maintains the recurrent state exactly:
+    h <- exp(dt*A) h + dt * (B outer x);   y = C . h + D*x
+
+Block layout follows Mamba-2: in_proj -> [z | x | B | C | dt], short causal
+depthwise conv on (x, B, C), SSD, gated RMSNorm, out_proj.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+__all__ = ["init_mamba", "mamba_block", "mamba_decode", "init_ssm_cache"]
+
+CONV_W = 4  # depthwise conv width
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    return d_inner, nheads
+
+
+def init_mamba(key, cfg) -> dict:
+    d_inner, nheads = _dims(cfg)
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * N + nheads
+    return {
+        "in_proj": L.dense_init(ks[0], cfg.d_model, in_dim),
+        "conv_w": jax.random.normal(ks[1], (CONV_W, conv_dim)) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)),   # A = -exp(a_log)
+        "dt_bias": jnp.full((nheads,), math.log(math.e - 1) * 0.0),
+        "D": jnp.ones((nheads,)),
+        "norm": jnp.ones((d_inner,)),
+        "out_proj": L.dense_init(ks[3], d_inner, cfg.d_model),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, nheads = _dims(cfg)
+    N = cfg.ssm_state
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    return z, xin, Bc, Cc, dt
+
+
+def _causal_dwconv(x, w, b):
+    """x: (B, S, C), w: (W, C) depthwise causal conv."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def mamba_block(p, x, cfg, *, chunk: int = 256):
+    """x: (B, S, D) -> (B, S, D) via chunked SSD.
+
+    The chunk-scan body is remat'ed (cfg.remat): without it, the scan
+    transpose saves the (B, Q, Q, H) intra-chunk quadratic tensors for every
+    chunk — ~multi-GiB per layer at 4k x 80 heads; with it only the chunk
+    inputs and the carried (H, N, P) state are saved."""
+    B, S, D = x.shape
+    d_inner, H = _dims(cfg)
+    P = cfg.ssm_headdim
+    N = cfg.ssm_state
+
+    zxbcdt = L.linear(x, p["in_proj"], mp_mode=cfg.mp_mode,
+                      mp_gamma=cfg.mp_gamma, compute_dtype=L.cdt(cfg))
+    z, xin, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_dwconv(jnp.concatenate([xin, Bc, Cc], -1).astype(jnp.float32),
+                         p["conv_w"], p["conv_b"])
+    xin, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["a_log"])                                      # (H,)
+    xh = xin.reshape(B, S, H, P)
+
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    # scan over chunks: intra-chunk quadratic form + carried recurrent state.
+    # Keeps peak memory at one (B, Q, Q, H) score block instead of nc of them.
+    def chunk_step(h, inp):
+        xc, Bcc, Ccc, dtc = inp     # (B,Q,H,P), (B,Q,N), (B,Q,N), (B,Q,H)
+        dA = dtc * A                                              # (B,Q,H)
+        dAcs = jnp.cumsum(dA, axis=1)
+        # intra: Lmat[i,j] = exp(dAcs_i - dAcs_j), i >= j. Mask BEFORE the
+        # exp: the upper triangle has dAcs_i - dAcs_j > 0 (dAcs decreases)
+        # and exp overflows there; where() after exp would still propagate
+        # inf through the gradient (inf * 0 cotangent = NaN).
+        diff = dAcs[:, :, None, :] - dAcs[:, None, :, :]          # (B,Q,Q,H)
+        diff = jnp.where(causal[None, :, :, None], diff, -jnp.inf)
+        Lmat = jnp.exp(diff)
+        CB = jnp.einsum("bqn,bkn->bqk", Ccc, Bcc)                 # (B,Q,Q)
+        W_ = CB[..., None] * Lmat                                 # (B,Q,Q,H)
+        y_intra = jnp.einsum("bqkh,bkh,bkhp->bqhp", W_, dtc, xc)
+        # inter: contribution of the carried state
+        y_inter = jnp.einsum("bqn,bqh,bhnp->bqhp",
+                             Ccc, jnp.exp(dAcs), h)
+        # state update for the next chunk
+        seg = jnp.exp(dAcs[:, -1:, :] - dAcs)                     # (B,Q,H)
+        st = jnp.einsum("bkn,bkh,bkhp->bhnp", Bcc, dtc * seg, xc)
+        h_new = h * jnp.exp(dAcs[:, -1])[..., None, None] + st
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    inputs = (
+        xh.reshape(B, nc, Q, H, P).transpose(1, 0, 2, 3, 4),
+        Bc.reshape(B, nc, Q, N).transpose(1, 0, 2, 3),
+        Cc.reshape(B, nc, Q, N).transpose(1, 0, 2, 3),
+        dt.reshape(B, nc, Q, H).transpose(1, 0, 2, 3),
+    )
+    step = jax.checkpoint(chunk_step) if getattr(cfg, "remat", False) \
+        else chunk_step
+    _, ys = lax.scan(step, h0, inputs)                            # (nc,B,Q,H,P)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"],
+                   cfg.norm_eps)
+    return L.linear(y.astype(x.dtype), p["out_proj"], mp_mode=cfg.mp_mode,
+                    mp_gamma=cfg.mp_gamma, compute_dtype=L.cdt(cfg))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg, batch, dtype=jnp.float32):
+    d_inner, H = _dims(cfg)
+    N = cfg.ssm_state
+    P = cfg.ssm_headdim
+    conv_dim = d_inner + 2 * N
+    return {
+        "h": jnp.zeros((batch, H, N, P), dtype),
+        "conv": jnp.zeros((batch, CONV_W - 1, conv_dim), dtype),
+    }
+
+
+def mamba_decode(p, x, cfg, cache):
+    """x: (B, 1, D) single step. Returns (y (B,1,D), new_cache)."""
+    B = x.shape[0]
+    d_inner, H = _dims(cfg)
+    P, N = cfg.ssm_headdim, cfg.ssm_state
+
+    zxbcdt = L.linear(x[:, 0], p["in_proj"], mp_mode=cfg.mp_mode,
+                      mp_gamma=cfg.mp_gamma, compute_dtype=L.cdt(cfg))
+    z, xin, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([xin, Bc, Cc], -1).astype(jnp.float32)
+    conv_win = jnp.concatenate([cache["conv"], xbc_new[:, None]], axis=1)
+    xbc = jax.nn.silu(jnp.sum(conv_win * p["conv_w"][None], axis=1)
+                      + p["conv_b"])
+    xin, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dt * A)                                          # (B,H)
+    xh = xin.reshape(B, H, P)
+    dBx = jnp.einsum("bn,bh,bhp->bhnp", Bc, dt, xh)
+    h = cache["h"] * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cc, h)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"],
+                   cfg.norm_eps)
+    y = L.linear(y.astype(x.dtype), p["out_proj"], mp_mode=cfg.mp_mode,
+                 mp_gamma=cfg.mp_gamma, compute_dtype=L.cdt(cfg))
+    return y[:, None], {"h": h, "conv": conv_win[:, 1:]}

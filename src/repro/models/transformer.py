@@ -1,0 +1,505 @@
+"""Architecture zoo: config schema + functional model assembly.
+
+One `ArchConfig` describes every assigned architecture (dense / MoE / SSM /
+hybrid / encoder / VLM-backbone). Models are built functionally:
+
+    params = init(cfg, key)                  # nested dict, f32 masters
+    logits = forward(params, cfg, batch)     # training / prefill
+    logits, cache = decode_step(params, cfg, tokens, cache, pos)
+
+Scan-over-layers everywhere: per-layer params are stacked on a leading axis
+and consumed by `lax.scan`, so HLO size (and SPMD-partitioner time) is O(1)
+in depth — an 80-layer 72B model lowers as fast as a 24-layer 2B one. Hybrid
+(Jamba) scans over period-groups (1 attention + 7 mamba sublayers, MoE on
+alternate FFNs).
+
+Modality frontends are stubs per the assignment: `[vlm]` consumes
+precomputed patch embeddings, `[audio]` consumes precomputed frame
+embeddings (the transformer BACKBONE is what the cells exercise).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+
+__all__ = ["ArchConfig", "init", "forward", "decode_step", "init_cache",
+           "param_count", "active_param_count"]
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    # attention options
+    use_rope: bool = True
+    rope_theta: float = 1e6
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None
+    is_encoder: bool = False
+    norm: str = "rms"              # rms | ln
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0    # deepseek: leading dense FFN layers
+    moe_every: int = 1             # jamba: MoE on every 2nd FFN
+    moe_group_size: int = 512      # dispatch group (tokens)
+    moe_group_chunk: int = 16      # groups per expert-FFN chunk (memory cap)
+    moe_capacity_factor: Optional[float] = 1.25   # None -> no-drop (exact)
+    moe_decode_capacity_factor: Optional[float] = None  # decode: no-drop
+    # SSM
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    attn_every: int = 0            # hybrid: one attn per this many layers
+    # modality stubs
+    vlm_patches: int = 0           # [vlm]: number of patch embeddings
+    audio_frontend: bool = False   # [audio]: frames (B, S, D) input
+    # misc
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    mp_mode: bool = False          # paper technique on linear layers
+    mp_gamma: float = 8.0
+    compute_dtype: str = "bfloat16"   # activations/matmul dtype (f32 for
+                                      # exactness tests; params stay f32)
+    sequence_parallel: bool = False   # Megatron-SP residual stream (dense
+                                      # archs only; SSD wants full seq)
+    remat: bool = True
+    # attention chunking (memory-efficient attention block sizes)
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    ssm_chunk: int = 256
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // max(self.num_heads, 1))
+        if self.num_experts and not self.moe_d_ff:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def supports_decode(self) -> bool:
+        return not self.is_encoder
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can run long_500k: SSM/hybrid or sliding-window attention."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window is not None
+
+
+# ---------------------------------------------------------------------------
+# per-family layer stacks
+# ---------------------------------------------------------------------------
+
+
+def _init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+    return {"scale": jnp.ones((d,))}
+
+
+def _norm(p, x, cfg):
+    if cfg.norm == "ln":
+        return L.layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return L.rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def _init_ffn(key, cfg, layer_is_moe: bool):
+    if layer_is_moe:
+        return moe_mod.init_moe(key, cfg)
+    if cfg.norm == "ln":  # encoder family uses biased GELU MLP
+        return L.init_gelu_mlp(key, cfg.d_model, cfg.d_ff)
+    return L.init_swiglu(key, cfg.d_model, cfg.d_ff)
+
+
+def _ffn(p, x, cfg, layer_is_moe: bool):
+    if layer_is_moe:
+        return moe_mod.moe_block(p, x, cfg)
+    if cfg.norm == "ln":
+        return L.gelu_mlp(p, x, cfg)
+    return L.swiglu(p, x, cfg)
+
+
+def _has_ffn(cfg, layer_is_moe: bool) -> bool:
+    return layer_is_moe or cfg.d_ff > 0
+
+
+def _init_block(key, cfg, *, mixer: str, layer_is_moe: bool) -> dict:
+    """One residual block: norm -> mixer [-> norm -> ffn] (pre-norm).
+    Pure-SSM archs (mamba2) have no FFN: the mixer IS the block."""
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": _init_norm(cfg)}
+    if mixer == "attn":
+        p["attn"] = L.init_attention(k1, cfg)
+    else:
+        p["mamba"] = ssm_mod.init_mamba(k1, cfg)
+    if _has_ffn(cfg, layer_is_moe):
+        p["norm2"] = _init_norm(cfg)
+        p["ffn"] = _init_ffn(k2, cfg, layer_is_moe)
+    return p
+
+
+def _block(p, x, cfg, positions, *, mixer: str, layer_is_moe: bool):
+    h = _norm(p["norm1"], x, cfg)
+    if mixer == "attn":
+        h = L.attention_block(p["attn"], h, cfg, positions,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    else:
+        h = ssm_mod.mamba_block(p["mamba"], h, cfg, chunk=cfg.ssm_chunk)
+    x = x + h
+    if _has_ffn(cfg, layer_is_moe):
+        h = _norm(p["norm2"], x, cfg)
+        h = _ffn(p["ffn"], h, cfg, layer_is_moe)
+        x = x + h
+    return x
+
+
+def _block_decode(p, x, cfg, cache, cur_pos, *, mixer: str, layer_is_moe: bool):
+    h = _norm(p["norm1"], x, cfg)
+    if mixer == "attn":
+        h, cache = L.attention_decode(p["attn"], h, cfg, cache, cur_pos)
+    else:
+        h, cache = ssm_mod.mamba_decode(p["mamba"], h, cfg, cache)
+    x = x + h
+    if _has_ffn(cfg, layer_is_moe):
+        h = _norm(p["norm2"], x, cfg)
+        h = _ffn(p["ffn"], h, cfg, layer_is_moe)
+        x = x + h
+    return x, cache
+
+
+# Layer plan: which (mixer, is_moe) each layer uses, and how they group for
+# the scan. Homogeneous families scan over all layers; special layers
+# (deepseek's first dense FFN) are peeled off; hybrid scans over periods.
+
+
+def _layer_plan(cfg: ArchConfig):
+    if cfg.family == "hybrid":
+        period = cfg.attn_every
+        assert cfg.num_layers % period == 0
+        subs = []
+        for i in range(period):
+            mixer = "attn" if i == 0 else "mamba"
+            is_moe = (cfg.num_experts > 0) and (i % cfg.moe_every == 1)
+            subs.append((mixer, is_moe))
+        return {"kind": "periodic", "period": period, "subs": subs,
+                "n_groups": cfg.num_layers // period}
+    if cfg.family == "ssm":
+        return {"kind": "uniform", "mixer": "mamba", "is_moe": False,
+                "n_scan": cfg.num_layers, "n_prefix": 0}
+    is_moe = cfg.num_experts > 0
+    return {"kind": "uniform", "mixer": "attn", "is_moe": is_moe,
+            "n_scan": cfg.num_layers - cfg.first_dense_layers,
+            "n_prefix": cfg.first_dense_layers}
+
+
+# ---------------------------------------------------------------------------
+# init / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: ArchConfig, key: jax.Array) -> dict:
+    plan = _layer_plan(cfg)
+    k_embed, k_layers, k_head, k_prefix = jax.random.split(key, 4)
+    params: dict[str, Any] = {}
+    if not cfg.audio_frontend:
+        params["tok_embed"] = (jax.random.normal(
+            k_embed, (cfg.padded_vocab, cfg.d_model)) * 0.02)
+    else:  # stub frontend: a projection applied to precomputed frames
+        params["frame_proj"] = L.dense_init(k_embed, cfg.d_model, cfg.d_model)
+
+    if plan["kind"] == "uniform":
+        if plan["n_prefix"]:
+            # peeled dense-FFN layers (deepseek first layer): full d_ff dense
+            dense_cfg = dataclasses.replace(cfg, num_experts=0)
+            params["prefix_layers"] = [
+                _init_block(k, dense_cfg, mixer=plan["mixer"], layer_is_moe=False)
+                for k in jax.random.split(k_prefix, plan["n_prefix"])]
+        keys = jax.random.split(k_layers, plan["n_scan"])
+        params["layers"] = jax.vmap(
+            lambda k: _init_block(k, cfg, mixer=plan["mixer"],
+                                  layer_is_moe=plan["is_moe"]))(keys)
+    else:  # periodic (jamba)
+        n_g = plan["n_groups"]
+        group_params = []
+        for i, (mixer, is_moe) in enumerate(plan["subs"]):
+            keys = jax.random.split(jax.random.fold_in(k_layers, i), n_g)
+            group_params.append(jax.vmap(
+                lambda k: _init_block(k, cfg, mixer=mixer, layer_is_moe=is_moe)
+            )(keys))
+        params["period_layers"] = group_params
+
+    params["final_norm"] = _init_norm(cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.padded_vocab)
+    return params
+
+
+def _embed(params, cfg, batch):
+    """Returns (x (B,S,D), positions (S,), text_offset)."""
+    if cfg.audio_frontend:
+        x = L.linear(batch["frames"], params["frame_proj"],
+                     compute_dtype=L.cdt(cfg))
+        S = x.shape[1]
+        return x, jnp.arange(S), 0
+    tok = params["tok_embed"]
+    x = tok[batch["tokens"]].astype(L.cdt(cfg))
+    if cfg.vlm_patches:
+        patches = batch["patches"].astype(L.cdt(cfg))   # (B, P, D)
+        x = jnp.concatenate([patches, x], axis=1)
+        return x, jnp.arange(x.shape[1]), cfg.vlm_patches
+    return x, jnp.arange(x.shape[1]), 0
+
+
+def _maybe_remat(f, cfg):
+    return jax.checkpoint(f) if cfg.remat else f
+
+
+def _constrain(p_layer, cfg=None):
+    """FSDP/TP constraint on the per-layer param slice inside scan bodies
+    (keeps the partitioner from all-gathering the whole stacked params).
+    No-op without an active mesh context (smoke tests, single device).
+
+    Matrix-shaped leaves (>=2 trailing dims) are ALSO cast to the compute
+    dtype here, BEFORE the on-use all-gather: the gather then moves bf16
+    instead of f32 — half the ICI bytes and half the transient gathered-
+    weights HBM (qwen2: ~3.5 GiB/layer f32 -> 1.75). Vector params (norm
+    scales, biases, a_log) stay f32 for precision. Grads flow through the
+    cast back to the f32 masters."""
+    from repro.distributed.sharding import constrain_layer_params
+    _KEEP_F32 = {"scale", "bias", "a_log", "dt_bias", "D", "conv_b",
+                 "bq", "bk", "bv", "bi", "bo"}
+    if cfg is not None and cfg.compute_dtype != "float32":
+        dt = L.cdt(cfg)
+
+        def cast(path, x):
+            name = next((str(getattr(e, "key", "")) for e in reversed(path)
+                         if getattr(e, "key", None)), "")
+            if name in _KEEP_F32 or x.dtype != jnp.float32:
+                return x
+            return x.astype(dt)
+
+        p_layer = jax.tree_util.tree_map_with_path(cast, p_layer)
+    return constrain_layer_params(p_layer)
+
+
+def _constrain_stream(x, sequence_parallel: bool = False):
+    """Pin the residual stream to (batch -> DP, seq -> 'model' [SP], dm
+    replicated).
+
+    Two jobs:
+    1. Without any constraint, the row-parallel wo spec P('model','data')
+       propagates d-model-over-'data' INTO the stream; that conflicts with
+       batch-over-'data' and the partitioner resolves it by replicating the
+       batch — measured as full-global-batch f32 activations per device
+       (37 GiB each at glm4 train_4k).
+    2. Sequence parallelism: the per-layer residual saved for remat is the
+       stream itself; with seq sharded over 'model' it shrinks |model|x
+       (qwen2 train_4k: 80 layers x 1 GiB -> 80 x 64 MiB). Compute
+       all-gathers S transiently inside the layer (Megatron-SP schedule).
+    """
+    from repro.distributed.sharding import constrain_activations
+    return constrain_activations(
+        x, ("model", None) if sequence_parallel else (None, None))
+
+
+def forward(params: dict, cfg: ArchConfig, batch: dict,
+            return_hidden: bool = False) -> jax.Array:
+    """Full-sequence forward -> logits (B, S_total, padded_vocab), or the
+    final-norm hidden states (B, S_total, D) when return_hidden (the
+    chunked-CE loss applies the LM head itself, chunk by chunk, so the full
+    logits tensor never materializes)."""
+    plan = _layer_plan(cfg)
+    x, positions, _ = _embed(params, cfg, batch)
+    x = _constrain_stream(x, cfg.sequence_parallel)
+
+    if plan["kind"] == "uniform":
+        for p in params.get("prefix_layers", []):
+            dense_cfg = dataclasses.replace(cfg, num_experts=0)
+            x = _block(p, x, dense_cfg, positions,
+                       mixer=plan["mixer"], layer_is_moe=False)
+
+        def body(x, p_layer):
+            p_layer = _constrain(p_layer, cfg)
+            y = _maybe_remat(
+                lambda px, xx: _block(px, xx, cfg, positions,
+                                      mixer=plan["mixer"],
+                                      layer_is_moe=plan["is_moe"]),
+                cfg)(p_layer, x)
+            return _constrain_stream(y, cfg.sequence_parallel), None
+
+        x, _ = lax.scan(body, x, params["layers"])
+    else:
+        subs = plan["subs"]
+
+        def body(x, p_group):
+            p_group = _constrain(p_group, cfg)
+            def group_fwd(pg, xx):
+                # per-sublayer remat bounds the RECOMPUTE transient of the
+                # outer (whole-group) remat to one sublayer's intermediates
+                for i, (mixer, is_moe) in enumerate(subs):
+                    blk = lambda p_, x_, m=mixer, mo=is_moe: _block(
+                        p_, x_, cfg, positions, mixer=m, layer_is_moe=mo)
+                    xx = _maybe_remat(blk, cfg)(pg[i], xx)
+                return xx
+            return _constrain_stream(
+                _maybe_remat(group_fwd, cfg)(p_group, x),
+                cfg.sequence_parallel), None
+
+        x, _ = lax.scan(body, x, tuple(params["period_layers"]))
+
+    x = _norm(params["final_norm"], x, cfg)
+    if return_hidden:
+        return x
+    head = (params["tok_embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return L.linear(x, head, mp_mode=cfg.mp_mode, mp_gamma=cfg.mp_gamma,
+                    compute_dtype=L.cdt(cfg))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               dtype=None) -> dict:
+    """Stacked per-layer caches matching the scan layout."""
+    if dtype is None:
+        dtype = L.cdt(cfg)
+    plan = _layer_plan(cfg)
+    if plan["kind"] == "uniform":
+        if plan["mixer"] == "attn":
+            one = lambda: L.init_attn_cache(cfg, batch, cache_len, dtype)
+        else:
+            one = lambda: ssm_mod.init_ssm_cache(cfg, batch)
+        stack = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[one() for _ in range(plan["n_scan"])]) if plan["n_scan"] > 1 \
+            else jax.tree.map(lambda x: x[None], one())
+        prefix = [L.init_attn_cache(cfg, batch, cache_len, dtype)
+                  for _ in range(plan["n_prefix"])]
+        return {"scan": stack, "prefix": prefix}
+    # periodic: attn cache for sub 0, ssm caches for subs 1..period-1
+    n_g = plan["n_groups"]
+    caches = []
+    for (mixer, _) in plan["subs"]:
+        if mixer == "attn":
+            one = lambda: L.init_attn_cache(cfg, batch, cache_len, dtype)
+        else:
+            one = lambda: ssm_mod.init_ssm_cache(cfg, batch)
+        caches.append(jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[one() for _ in range(n_g)])
+                      if n_g > 1 else jax.tree.map(lambda x: x[None], one()))
+    return {"periodic": caches}
+
+
+def decode_step(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                cache: dict, cur_pos: jax.Array):
+    """One decode step. tokens: (B, 1) int32; cur_pos: (B,) int32.
+    Returns (logits (B, 1, V), new_cache)."""
+    assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+    # decode uses its own MoE capacity policy (default no-drop: dropping a
+    # user's token mid-generation is a quality bug, not a load-balance knob)
+    cfg = dataclasses.replace(
+        cfg, moe_capacity_factor=cfg.moe_decode_capacity_factor)
+    plan = _layer_plan(cfg)
+    x = params["tok_embed"][tokens].astype(L.cdt(cfg))
+
+    new_cache: dict = {}
+    if plan["kind"] == "uniform":
+        new_prefix = []
+        for p, c in zip(params.get("prefix_layers", []),
+                        cache.get("prefix", [])):
+            dense_cfg = dataclasses.replace(cfg, num_experts=0)
+            x, c2 = _block_decode(p, x, dense_cfg, c, cur_pos,
+                                  mixer=plan["mixer"], layer_is_moe=False)
+            new_prefix.append(c2)
+
+        def body(x, pc):
+            p_layer, c_layer = pc
+            p_layer = _constrain(p_layer, cfg)
+            y, c2 = _block_decode(p_layer, x, cfg, c_layer, cur_pos,
+                                  mixer=plan["mixer"],
+                                  layer_is_moe=plan["is_moe"])
+            return y, c2
+
+        x, scan_cache = lax.scan(body, x, (params["layers"], cache["scan"]))
+        new_cache = {"scan": scan_cache, "prefix": new_prefix}
+    else:
+        subs = plan["subs"]
+
+        def body(x, pcs):
+            p_group = _constrain(pcs[0], cfg)
+            c_group = pcs[1]
+            new_cs = []
+            for i, (mixer, is_moe) in enumerate(subs):
+                x, c2 = _block_decode(p_group[i], x, cfg, c_group[i], cur_pos,
+                                      mixer=mixer, layer_is_moe=is_moe)
+                new_cs.append(c2)
+            return x, tuple(new_cs)
+
+        x, per_cache = lax.scan(
+            body, x, (tuple(params["period_layers"]),
+                      tuple(cache["periodic"])))
+        new_cache = {"periodic": list(per_cache)}
+
+    x = _norm(params["final_norm"], x, cfg)
+    head = (params["tok_embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = L.linear(x, head, mp_mode=cfg.mp_mode, mp_gamma=cfg.mp_gamma,
+                      compute_dtype=L.cdt(cfg))
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ArchConfig, params) -> int:
+    """Parameters touched per token (MoE: top-k of routed experts)."""
+    total = param_count(params)
+    if not cfg.num_experts:
+        return total
+    plan = _layer_plan(cfg)
+    # expert params per MoE layer
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    if plan["kind"] == "uniform":
+        n_moe = plan["n_scan"] if plan["is_moe"] else 0
+    else:
+        n_moe = plan["n_groups"] * sum(1 for (_, m) in plan["subs"] if m)
+    inactive = n_moe * per_expert * (cfg.num_experts - cfg.num_experts_per_tok)
+    return total - inactive

@@ -1,0 +1,80 @@
+"""AdamW + cosine schedule + global-norm clipping, from scratch (no optax).
+
+Optimizer state is a pytree congruent with params, so it inherits the
+FSDP x TP parameter sharding unchanged (ZeRO-style: each device owns the
+moments of its parameter shard).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    count = state.count + 1
+    lr = cosine_schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                      state.nu, grads)
+
+    def upd(p, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+        return (p - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(mu, nu, count), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests (reduced same-family configs): one forward
+and one train step on CPU, asserting shapes and finiteness; decode parity
+against the parallel forward for decoder archs."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch, get_smoke
+from repro.distributed.steps import make_train_step
+from repro.models import transformer as T
+from repro.optim import AdamWConfig
+
+B, S = 2, 64
+
+
+def _batch(cfg, key, with_labels=False):
+    if cfg.audio_frontend:
+        b = {"frames": jax.random.normal(key, (B, S, cfg.d_model))}
+        if with_labels:
+            b["labels"] = jnp.zeros((B, S), jnp.int32)
+        return b
+    if cfg.vlm_patches:
+        return {"tokens": jnp.ones((B, S - cfg.vlm_patches), jnp.int32),
+                "patches": jax.random.normal(key, (B, cfg.vlm_patches,
+                                                   cfg.d_model))}
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCH_IDS))
+def test_forward_shapes_and_finite(arch_id):
+    cfg = get_smoke(arch_id)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    logits = T.forward(params, cfg, _batch(cfg, jax.random.PRNGKey(1)))
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.padded_vocab
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCH_IDS))
+def test_train_step_decreases_loss(arch_id):
+    cfg = get_smoke(arch_id)
+    init_state, train_step = make_train_step(
+        cfg, AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=30))
+    state = init_state(jax.random.PRNGKey(0))
+    step = jax.jit(train_step)
+    batch = _batch(cfg, jax.random.PRNGKey(1), with_labels=True)
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch_id", [a for a in sorted(ARCH_IDS)
+                                     if a != "hubert-xlarge"])
+def test_decode_matches_forward(arch_id):
+    cfg = get_smoke(arch_id)
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=None)  # no-drop
+    if cfg.vlm_patches:
+        cfg = dataclasses.replace(cfg, vlm_patches=0)  # text-only decode
+    params = T.init(cfg, jax.random.PRNGKey(2))
+    S_ = 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S_), 0,
+                              cfg.vocab_size)
+    ref = T.forward(params, cfg, {"tokens": toks}).astype(jnp.float32)
+    cache = T.init_cache(cfg, B, S_)
+    step = jax.jit(lambda p, t, c, cp: T.decode_step(p, cfg, t, c, cp))
+    worst = 0.0
+    for i in range(S_):
+        lg, cache = step(params, toks[:, i:i + 1], cache,
+                         jnp.full((B,), i, jnp.int32))
+        worst = max(worst, float(jnp.max(jnp.abs(
+            lg[:, 0].astype(jnp.float32) - ref[:, i]))))
+    # prefill uses bf16 flash attention (p@v in bf16), decode uses f32
+    # softmax against the cache; MoE adds bf16 scatter-order noise that
+    # compounds with depth. This test pins the NOISE ENVELOPE only —
+    # algorithmic equality is pinned exactly by
+    # test_decode_matches_forward_exact_f32 below.
+    tol = 0.6 if (cfg.num_experts or cfg.family == "hybrid") else 0.15
+    assert worst < tol, worst
+
+
+@pytest.mark.parametrize("arch_id", ["qwen3-8b", "mixtral-8x22b",
+                                     "mamba2-2.7b", "jamba-v0.1-52b",
+                                     "deepseek-moe-16b"])
+def test_decode_matches_forward_exact_f32(arch_id):
+    """With f32 compute the two paths must agree to float tolerance —
+    this pins the algorithm; the bf16 test above pins the noise envelope."""
+    cfg = dataclasses.replace(get_smoke(arch_id), moe_capacity_factor=None,
+                              compute_dtype="float32")
+    params = T.init(cfg, jax.random.PRNGKey(2))
+    S_ = 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S_), 0,
+                              cfg.vocab_size)
+    ref = T.forward(params, cfg, {"tokens": toks}).astype(jnp.float32)
+    cache = T.init_cache(cfg, B, S_)
+    step = jax.jit(lambda p, t, c, cp: T.decode_step(p, cfg, t, c, cp))
+    worst = 0.0
+    for i in range(S_):
+        lg, cache = step(params, toks[:, i:i + 1], cache,
+                         jnp.full((B,), i, jnp.int32))
+        worst = max(worst, float(jnp.max(jnp.abs(
+            lg[:, 0].astype(jnp.float32) - ref[:, i]))))
+    assert worst < 1e-4, worst
+
+
+def test_encoder_has_no_decode():
+    cfg = get_smoke("hubert-xlarge")
+    assert not cfg.supports_decode
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned hyperparameters (guards against config drift)."""
+    expect = {
+        "deepseek-moe-16b": dict(num_layers=28, d_model=2048, num_heads=16,
+                                 num_kv_heads=16, vocab_size=102400,
+                                 num_experts=64, num_experts_per_tok=6),
+        "mixtral-8x22b": dict(num_layers=56, d_model=6144, num_heads=48,
+                              num_kv_heads=8, d_ff=16384, vocab_size=32768,
+                              num_experts=8, num_experts_per_tok=2),
+        "mamba2-2.7b": dict(num_layers=64, d_model=2560, vocab_size=50280,
+                            ssm_state=128),
+        "jamba-v0.1-52b": dict(num_layers=32, d_model=4096, num_heads=32,
+                               num_kv_heads=8, d_ff=14336, vocab_size=65536,
+                               num_experts=16, num_experts_per_tok=2),
+        "internvl2-2b": dict(num_layers=24, d_model=2048, num_heads=16,
+                             num_kv_heads=8, d_ff=8192, vocab_size=92553),
+        "hubert-xlarge": dict(num_layers=48, d_model=1280, num_heads=16,
+                              num_kv_heads=16, d_ff=5120, vocab_size=504),
+        "glm4-9b": dict(num_layers=40, d_model=4096, num_heads=32,
+                        num_kv_heads=2, d_ff=13696, vocab_size=151552),
+        "qwen3-8b": dict(num_layers=36, d_model=4096, num_heads=32,
+                         num_kv_heads=8, d_ff=12288, vocab_size=151936,
+                         qk_norm=True),
+        "qwen2-72b": dict(num_layers=80, d_model=8192, num_heads=64,
+                          num_kv_heads=8, d_ff=29568, vocab_size=152064,
+                          qkv_bias=True),
+        "command-r-35b": dict(num_layers=40, d_model=8192, num_heads=64,
+                              num_kv_heads=8, d_ff=22528, vocab_size=256000),
+    }
+    for arch_id, fields in expect.items():
+        cfg = get_arch(arch_id)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch_id, k, getattr(cfg, k), v)
+
+
+def test_mp_mode_smoke():
+    """The paper's multiplierless MP path as a first-class layer mode."""
+    cfg = dataclasses.replace(get_smoke("qwen3-8b"), mp_mode=True,
+                              num_layers=1)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    logits = T.forward(params, cfg, {"tokens": jnp.ones((1, 8), jnp.int32)})
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))

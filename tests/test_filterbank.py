@@ -1,0 +1,115 @@
+"""Filter bank tests: FIR design, multirate structure, MP vs MAC modes,
+and the Fig. 4 downsampling claim (low-order filters suffice)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.filterbank import (FilterBank, FilterBankConfig,
+                                   design_bandpass, design_lowpass, greenwood,
+                                   _mac_fir)
+from repro.data.acoustic import chirp
+
+
+def freq_response(h, freqs, fs):
+    n = np.arange(len(h))
+    return np.array([abs(np.sum(h * np.exp(-2j * np.pi * f / fs * n)))
+                     for f in freqs])
+
+
+class TestFIRDesign:
+    def test_lowpass_passes_dc_blocks_high(self):
+        h = design_lowpass(31, 500.0, 8000.0)
+        r = freq_response(h, [0.0, 100.0, 3000.0], 8000.0)
+        assert r[0] > 0.95 and r[1] > 0.8 and r[2] < 0.15
+
+    def test_bandpass_peaks_in_band(self):
+        h = design_bandpass(63, 800.0, 1200.0, 8000.0)
+        r_in = freq_response(h, [1000.0], 8000.0)[0]
+        r_out = freq_response(h, [100.0, 3500.0], 8000.0)
+        assert r_in > 0.7
+        assert (r_out < 0.2).all()
+
+    def test_greenwood_monotone(self):
+        f = greenwood(np.linspace(0, 1, 10), 100, 8000)
+        assert (np.diff(f) > 0).all()
+        assert abs(f[0] - 100) < 1 and abs(f[-1] - 8000) < 1
+
+    def test_mac_fir_equals_numpy_convolve(self):
+        x = np.random.default_rng(0).standard_normal((2, 50)).astype(np.float32)
+        h = np.random.default_rng(1).standard_normal(7).astype(np.float32)
+        y = np.asarray(_mac_fir(jnp.asarray(x), jnp.asarray(h)))
+        for b in range(2):
+            ref = np.convolve(x[b], h)[:50]
+            np.testing.assert_allclose(y[b], ref, atol=1e-4)
+
+
+class TestMultirate:
+    def test_downsampling_keeps_low_order_selective(self):
+        """Fig. 4: with octave downsampling, 16-tap filters resolve low
+        bands that would need ~200 taps at the full rate."""
+        fs = 8000.0
+        cfg = FilterBankConfig(fs=fs, num_octaves=4, filters_per_octave=3,
+                               mode="mac")
+        fb = FilterBank(cfg)
+        n = int(fs)
+        # a low tone (octave 4 territory) vs a high tone
+        t = np.arange(n) / fs
+        low = np.sin(2 * np.pi * 300 * t).astype(np.float32)[None]
+        high = np.sin(2 * np.pi * 3000 * t).astype(np.float32)[None]
+        s_low = np.asarray(fb.accumulate(jnp.asarray(low)))[0]
+        s_high = np.asarray(fb.accumulate(jnp.asarray(high)))[0]
+        # the strongest response to the low tone must come from a later
+        # octave than to the high tone
+        assert fb.octave_of[int(s_low.argmax())] > \
+            fb.octave_of[int(s_high.argmax())]
+
+    def test_chirp_sweeps_across_filters(self):
+        """Chirp response (the Fig. 4 experiment): as frequency rises, the
+        peak filter index must move towards earlier octaves."""
+        fs = 8000.0
+        cfg = FilterBankConfig(fs=fs, num_octaves=3, filters_per_octave=4,
+                               mode="mac")
+        fb = FilterBank(cfg)
+        n = 2048
+        lowc = chirp(n, fs, 150, 400)[None]
+        highc = chirp(n, fs, 2200, 3800)[None]
+        o_low = fb.octave_of[int(np.argmax(fb.accumulate(jnp.asarray(lowc))[0]))]
+        o_high = fb.octave_of[int(np.argmax(fb.accumulate(jnp.asarray(highc))[0]))]
+        assert o_low > o_high
+
+
+class TestMPFilterBank:
+    def test_mp_mode_tracks_mac_ordering(self):
+        """MP approximation distorts gains (Fig. 6) but must preserve which
+        bands are active — that is what training relies on."""
+        fs = 4000.0
+        x = jnp.asarray(np.random.default_rng(2)
+                        .standard_normal((4, 1024)).astype(np.float32))
+        mac = FilterBank(FilterBankConfig(fs=fs, num_octaves=3, mode="mac"))
+        mp_ = FilterBank(FilterBankConfig(fs=fs, num_octaves=3, mode="mp",
+                                          gamma_f=4.0))
+        s_mac = np.asarray(mac.accumulate(x))
+        s_mp = np.asarray(mp_.accumulate(x))
+        for b in range(4):
+            corr = np.corrcoef(s_mac[b], s_mp[b])[0, 1]
+            assert corr > 0.5, corr
+
+    def test_features_standardized(self):
+        fs = 4000.0
+        fb = FilterBank(FilterBankConfig(fs=fs, num_octaves=2, mode="mac"))
+        x = jnp.asarray(np.random.default_rng(3)
+                        .standard_normal((16, 512)).astype(np.float32))
+        phi, mu, sigma = fb.features(x)
+        np.testing.assert_allclose(np.asarray(phi.mean(0)), 0.0, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(phi.std(0, ddof=1)), 1.0,
+                                   atol=1e-2)
+
+    def test_quantized_taps(self):
+        cfg = FilterBankConfig(fs=4000.0, num_octaves=2, quant_bits=8,
+                               mode="mac")
+        fb = FilterBank(cfg)
+        for h in fb.bp_taps:
+            u = np.unique(h)
+            assert len(u) <= 256

@@ -1,0 +1,99 @@
+"""The scan-aware HLO cost analyzer vs known ground truths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo, parse_module
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    text = _compiled_text(lambda a, b: a @ b, a, b)
+    r = analyze_hlo(text)
+    assert abs(r["flops"] - 2 * 128 * 256 * 64) / (2 * 128 * 256 * 64) < 0.05
+
+
+def test_scan_multiplies_by_trip_count():
+    """The whole point: a matmul inside a scan of N trips counts N times."""
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def fn(w, x):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=20)
+        return y
+
+    r = analyze_hlo(_compiled_text(fn, w, x))
+    expect = 20 * 2 * 8 * 64 * 64
+    assert r["flops"] > 0.9 * expect, (r["flops"], expect)
+    assert r["flops"] < 1.6 * expect, (r["flops"], expect)
+
+
+def test_nested_scan_trips_compound():
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 32), jnp.float32)
+
+    def fn(w, x):
+        def outer(x, _):
+            def inner(x, _):
+                return x @ w, None
+            y, _ = jax.lax.scan(inner, x, None, length=5)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=6)
+        return y
+
+    r = analyze_hlo(_compiled_text(fn, w, x))
+    expect = 30 * 2 * 4 * 32 * 32
+    assert 0.9 * expect < r["flops"] < 1.5 * expect
+
+
+def test_transcendentals_separate():
+    x = jax.ShapeDtypeStruct((1000,), jnp.float32)
+    r = analyze_hlo(_compiled_text(lambda x: jnp.exp(x), x))
+    assert r["transcendentals"] >= 1000
+    assert r["flops"] < 100
+
+
+def test_bytes_reasonable_for_elementwise():
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    r = analyze_hlo(_compiled_text(lambda x: x * 2.0 + 1.0, x))
+    # one read + one write of 4MiB, fused: between 8 MiB and ~20 MiB
+    assert 0.5 * 8e6 < r["bytes_accessed"] < 3 * 8e6
+
+
+def test_parse_module_structure():
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    text = _compiled_text(lambda x: (x @ x).sum(), x)
+    comps, entry = parse_module(text)
+    assert entry is not None
+    assert any(i.op == "dot" for instrs in comps.values() for i in instrs)
+
+
+def test_model_level_flops_against_analytic():
+    """Full smoke transformer train step within 2x of 6ND + attention."""
+    import dataclasses
+    from repro.configs import get_smoke
+    from repro.distributed.steps import make_train_step
+    from repro.launch import specs as S
+    from repro.models import transformer as T
+    from repro.optim import AdamWConfig
+
+    cfg = dataclasses.replace(get_smoke("glm4-9b"), num_layers=8)
+    cell = S.ShapeCell("t", 128, 8, "train")
+    ins = S.input_specs(cfg, cell)
+    _, train_step = make_train_step(cfg, AdamWConfig())
+    state = S.state_specs(cfg)
+    comp = jax.jit(train_step, donate_argnums=(0,)).lower(
+        state, ins["batch"]).compile()
+    r = analyze_hlo(comp.as_text())
+    params = jax.eval_shape(lambda: T.init(cfg, jax.random.PRNGKey(0)))
+    six_nd = 6 * T.param_count(params) * 8 * 128
+    assert 0.5 * six_nd < r["flops"] < 2.5 * six_nd, (r["flops"], six_nd)

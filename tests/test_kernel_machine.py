@@ -1,0 +1,115 @@
+"""MP kernel machine classifier (paper eq. 2-7) + training tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kernel_machine as km
+from repro.core import trainer
+from repro.core.mp import mp_exact
+
+
+def _params(P=6, C=3, seed=0, gamma1=4.0):
+    return km.init_params(jax.random.PRNGKey(seed), P, C, gamma1=gamma1)
+
+
+class TestForward:
+    def test_output_range_and_identity(self):
+        """p = p+ - p- with p+ + p- = 1 (gamma_n = 1) implies
+        p == clip(z+ - z-, -1, 1)."""
+        p0 = _params()
+        K = jax.random.normal(jax.random.PRNGKey(1), (10, 6))
+        p = km.forward(p0, K)
+        assert float(jnp.max(jnp.abs(p))) <= 1.0 + 1e-5
+        # recompute z+ and z- manually and check the clip identity
+        wp = jax.nn.relu(p0.w_pos)
+        wn = jax.nn.relu(p0.w_neg)
+        g1 = jnp.exp(p0.log_gamma1)
+        Kp, Kn = K[:, :, None], -K[:, :, None]
+        ops_p = jnp.concatenate(
+            [wp[None] + Kp, wn[None] + Kn,
+             jnp.broadcast_to(p0.b_pos[None, None], (10, 1, 3))], 1)
+        ops_n = jnp.concatenate(
+            [wn[None] + Kp, wp[None] + Kn,
+             jnp.broadcast_to(p0.b_neg[None, None], (10, 1, 3))], 1)
+        zp = mp_exact(jnp.moveaxis(ops_p, 1, -1), g1)
+        zn = mp_exact(jnp.moveaxis(ops_n, 1, -1), g1)
+        np.testing.assert_allclose(np.asarray(p),
+                                   np.clip(np.asarray(zp - zn), -1, 1),
+                                   atol=1e-5)
+
+    def test_sign_swap_antisymmetry(self):
+        """Swapping (w+, w-) and (b+, b-) exchanges the eq. (3)/(4) operand
+        multisets, so z+ and z- trade places and p flips sign — the
+        differential-pair symmetry the hardware relies on."""
+        p0 = _params()
+        K = jax.random.normal(jax.random.PRNGKey(2), (4, 6))
+        p1 = km.forward(p0, K)
+        p_sw = p0._replace(w_pos=p0.w_neg, w_neg=p0.w_pos,
+                           b_pos=p0.b_neg, b_neg=p0.b_pos)
+        p2 = km.forward(p_sw, K)
+        np.testing.assert_allclose(np.asarray(p1), -np.asarray(p2), atol=1e-5)
+
+    def test_negated_kernel_with_swap_is_identity(self):
+        """Negating K AND swapping the differential weights reproduces the
+        same operand multisets (bias zero at init): p unchanged."""
+        p0 = _params()
+        K = jax.random.normal(jax.random.PRNGKey(5), (4, 6))
+        p_sw = p0._replace(w_pos=p0.w_neg, w_neg=p0.w_pos,
+                           b_pos=p0.b_neg, b_neg=p0.b_pos)
+        np.testing.assert_allclose(np.asarray(km.forward(p0, K)),
+                                   np.asarray(km.forward(p_sw, -K)),
+                                   atol=1e-5)
+
+    def test_baseline_decision_function(self):
+        w = jax.random.normal(jax.random.PRNGKey(3), (6, 3))
+        b = jnp.zeros((3,))
+        K = jax.random.normal(jax.random.PRNGKey(4), (5, 6))
+        np.testing.assert_allclose(np.asarray(km.forward_baseline(w, b, K)),
+                                   np.asarray(K @ w), atol=1e-6)
+
+
+class TestTraining:
+    def _blobs(self, n=40, P=8, C=3, seed=0):
+        rng = np.random.default_rng(seed)
+        centers = rng.standard_normal((C, P)) * 2.0
+        X, y = [], []
+        for c in range(C):
+            X.append(centers[c] + 0.5 * rng.standard_normal((n, P)))
+            y.extend([c] * n)
+        X = np.concatenate(X).astype(np.float32)
+        y = np.asarray(y)
+        perm = rng.permutation(len(y))
+        return jnp.asarray(X[perm]), jnp.asarray(y[perm])
+
+    def test_training_reaches_high_accuracy_on_blobs(self):
+        K, y = self._blobs()
+        cfg = trainer.TrainConfig(num_steps=250, lr=0.5, batch_size=64,
+                                  gamma_anneal_start=4.0,
+                                  gamma_anneal_steps=100)
+        params, losses = trainer.train(K, y, 3, cfg)
+        acc = trainer.evaluate(params, K, y)
+        assert acc > 0.9, acc
+        assert losses[-1] < losses[0]
+
+    def test_quantization_aware_training_8bit(self):
+        """Fig. 8: 8-bit fixed point holds accuracy."""
+        K, y = self._blobs(seed=1)
+        cfg = trainer.TrainConfig(num_steps=250, lr=0.5, batch_size=64,
+                                  quant_bits=8)
+        params, _ = trainer.train(K, y, 3, cfg)
+        acc = trainer.evaluate(params, K, y, quant_bits=8)
+        assert acc > 0.85, acc
+
+    def test_gamma_annealing_improves_over_none(self):
+        K, y = self._blobs(seed=2)
+        accs = {}
+        for start in (1.0, 4.0):
+            cfg = trainer.TrainConfig(num_steps=150, lr=0.5,
+                                      gamma_anneal_start=start,
+                                      gamma_anneal_steps=75, seed=3)
+            p, _ = trainer.train(K, y, 3, cfg)
+            accs[start] = trainer.evaluate(p, K, y)
+        # annealing should not hurt (paper: it mitigates approx error)
+        assert accs[4.0] >= accs[1.0] - 0.05, accs

@@ -1,0 +1,173 @@
+"""Property tests for the Margin Propagation primitive (paper eq. 2-9).
+
+The invariants below are exactly the reverse-water-filling definition and
+the algebraic identities the hardware relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mp as M
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+def _arr(data, shape):
+    return jnp.asarray(np.asarray(data, dtype=np.float32).reshape(shape))
+
+
+arrays = st.lists(st.floats(-50, 50, allow_nan=False),
+                  min_size=2, max_size=64)
+gammas = st.floats(0.01, 100.0, allow_nan=False)
+
+
+class TestWaterFillingInvariant:
+    @given(arrays, gammas)
+    def test_constraint_satisfied(self, data, gamma):
+        """sum_i [L_i - z]_+ == gamma — the defining equation."""
+        L = jnp.asarray(np.asarray(data, np.float32))[None, :]
+        z = M.mp_exact(L, gamma)
+        h = jnp.sum(jnp.maximum(L - z[:, None], 0.0), axis=-1)
+        np.testing.assert_allclose(np.asarray(h), gamma,
+                                   rtol=2e-4, atol=2e-4)
+
+    @given(arrays, gammas)
+    def test_bisect_converges_to_exact(self, data, gamma):
+        L = jnp.asarray(np.asarray(data, np.float32))[None, :]
+        z_e = M.mp_exact(L, gamma)
+        z_b = M.mp_bisect(L, gamma, iters=40)
+        np.testing.assert_allclose(np.asarray(z_b), np.asarray(z_e),
+                                   rtol=1e-4, atol=1e-4)
+
+    @given(arrays, gammas, st.floats(-20, 20))
+    def test_shift_equivariance(self, data, gamma, c):
+        """MP(L + c, gamma) == MP(L, gamma) + c (hardware: DC offsets pass
+        through untouched)."""
+        L = jnp.asarray(np.asarray(data, np.float32))[None, :]
+        z1 = M.mp_exact(L + c, gamma)
+        z2 = M.mp_exact(L, gamma) + c
+        np.testing.assert_allclose(np.asarray(z1), np.asarray(z2),
+                                   rtol=1e-4, atol=1e-3)
+
+    @given(arrays, gammas, st.floats(0.1, 8.0))
+    def test_scale_equivariance(self, data, gamma, a):
+        """MP(a*L, a*gamma) == a*MP(L, gamma) (shift-based scaling works)."""
+        L = jnp.asarray(np.asarray(data, np.float32))[None, :]
+        z1 = M.mp_exact(a * L, a * gamma)
+        z2 = a * M.mp_exact(L, gamma)
+        np.testing.assert_allclose(np.asarray(z1), np.asarray(z2),
+                                   rtol=2e-4, atol=2e-3)
+
+    @given(arrays, gammas)
+    def test_monotone_in_gamma(self, data, gamma):
+        """z strictly decreases as gamma grows (more water, lower level)."""
+        L = jnp.asarray(np.asarray(data, np.float32))[None, :]
+        z1 = M.mp_exact(L, gamma)
+        z2 = M.mp_exact(L, gamma * 2.0)
+        assert float(z2[0]) < float(z1[0]) + 1e-5
+
+    @given(arrays, gammas)
+    def test_bounds(self, data, gamma):
+        """max(L) - gamma <= z <= max(L)."""
+        L = jnp.asarray(np.asarray(data, np.float32))[None, :]
+        z = float(M.mp_exact(L, gamma)[0])
+        mx = float(jnp.max(L))
+        assert mx - gamma - 1e-3 <= z <= mx + 1e-3
+
+    @given(arrays, gammas)
+    def test_permutation_invariance(self, data, gamma):
+        L = np.asarray(data, np.float32)
+        z1 = float(M.mp_exact(jnp.asarray(L)[None], gamma)[0])
+        rng = np.random.default_rng(0)
+        Lp = rng.permutation(L)
+        z2 = float(M.mp_exact(jnp.asarray(Lp)[None], gamma)[0])
+        np.testing.assert_allclose(z1, z2, rtol=1e-5, atol=1e-5)
+
+
+class TestGradients:
+    def test_grad_matches_finite_difference(self):
+        key = jax.random.PRNGKey(0)
+        L = jax.random.normal(key, (5, 17))
+        g = 2.0
+        f = lambda L: M.mp_exact(L, g).sum()
+        an = jax.grad(f)(L)
+        eps = 1e-3
+        for (i, j) in [(0, 0), (2, 5), (4, 16)]:
+            fd = (f(L.at[i, j].add(eps)) - f(L.at[i, j].add(-eps))) / (2 * eps)
+            np.testing.assert_allclose(float(fd), float(an[i, j]),
+                                       rtol=0.05, atol=1e-3)
+
+    def test_gamma_grad(self):
+        L = jax.random.normal(jax.random.PRNGKey(1), (3, 9))
+        f = lambda g: M.mp_exact(L, g).sum()
+        an = float(jax.grad(f)(1.5))
+        eps = 1e-3
+        fd = (f(1.5 + eps) - f(1.5 - eps)) / (2 * eps)
+        np.testing.assert_allclose(fd, an, rtol=0.05, atol=1e-3)
+
+    def test_grad_is_subgradient_structure(self):
+        """dz/dL_i = 1{L_i > z}/k: nonneg, sums to 1 per row."""
+        L = jax.random.normal(jax.random.PRNGKey(2), (4, 12))
+        g = jax.jacrev(lambda L: M.mp_exact(L, 1.0))(L)
+        # jacrev gives (4, 4, 12); take diagonal rows
+        J = np.asarray(g)[np.arange(4), np.arange(4)]
+        assert (J >= 0).all()
+        np.testing.assert_allclose(J.sum(-1), 1.0, rtol=1e-5)
+
+
+class TestMultiplierlessOps:
+    @given(st.integers(2, 32), gammas)
+    def test_mpabs_equals_concat_definition(self, d, gamma):
+        u = jax.random.normal(jax.random.PRNGKey(d), (3, d))
+        z1 = M.mpabs(u, gamma, exact=True)
+        z2 = M.mp_exact(jnp.concatenate([u, -u], -1), gamma)
+        np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), atol=1e-5)
+
+    def test_mp_dot_approximates_dot_for_small_gamma_regime(self):
+        """Paper Fig. 6: the approximation tracks the true inner product in
+        sign/ordering even with distortion. Check rank correlation."""
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (64, 16)) * 0.5
+        w = jax.random.normal(jax.random.PRNGKey(4), (16,)) * 0.5
+        approx = np.asarray(M.mp_dot(x, w, 1.0))
+        exact = np.asarray(x @ w)
+        # Spearman-ish: correlation of ranks
+        ra = np.argsort(np.argsort(approx))
+        re = np.argsort(np.argsort(exact))
+        corr = np.corrcoef(ra, re)[0, 1]
+        assert corr > 0.8, corr
+
+    def test_mp_linear_blocked_consistency(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (4, 8))
+        w = jax.random.normal(jax.random.PRNGKey(6), (8, 300))
+        y1 = M.mp_linear(x, w, 1.0, block_out=128)
+        y2 = M.mp_linear(x, w, 1.0, block_out=512)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+    def test_mp_conv1d_matches_windows(self):
+        x = jax.random.normal(jax.random.PRNGKey(7), (2, 50))
+        h = jax.random.normal(jax.random.PRNGKey(8), (5,)) * 0.3
+        y = M.mp_conv1d(x, h, 1.0)
+        # manual check at position n: window [x_{n-4}..x_n] (zero padded)
+        xp = np.asarray(jnp.pad(x, ((0, 0), (4, 0))))
+        for n in [0, 3, 20, 49]:
+            win = xp[:, n:n + 5]
+            ref = M.mp_dot(jnp.asarray(win), h[::-1], 1.0)
+            np.testing.assert_allclose(np.asarray(y[:, n]), np.asarray(ref),
+                                       atol=1e-5)
+
+
+class TestQuant:
+    def test_fake_quant_8bit_precision(self):
+        from repro.core.quant import fake_quant
+        x = jax.random.normal(jax.random.PRNGKey(0), (100,))
+        xq = fake_quant(x, 8)
+        assert float(jnp.max(jnp.abs(x - xq))) < float(jnp.max(jnp.abs(x))) / 100
+        # STE gradient passes through (the amax element sits exactly on the
+        # clip boundary where jnp.maximum tie-splits to 0.5 — expected)
+        g = np.asarray(jax.grad(lambda x: fake_quant(x, 8).sum())(x))
+        assert (g >= 0.5 - 1e-6).all() and (g <= 1.0 + 1e-6).all()
+        assert (g == 1.0).mean() > 0.95

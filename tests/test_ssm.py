@@ -1,0 +1,74 @@
+"""Mamba2 SSD unit tests: chunked == recurrent, gradient finiteness
+(regression: masked-exp overflow used to NaN the backward), chunk-size
+invariance."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import ssm
+
+
+def _cfg(arch="mamba2-2.7b"):
+    return dataclasses.replace(get_smoke(arch), compute_dtype="float32")
+
+
+def test_chunked_matches_stepwise_recurrence():
+    """The chunked SSD forward equals running the exact decode recurrence
+    position by position (state-space duality)."""
+    cfg = _cfg()
+    p = ssm.init_mamba(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+    y_chunk = ssm.mamba_block(p, x, cfg, chunk=8)
+    cache = ssm.init_ssm_cache(cfg, B)
+    ys = []
+    for i in range(S):
+        y_i, cache = ssm.mamba_decode(p, x[:, i:i + 1], cfg, cache)
+        ys.append(y_i)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunk_size_invariance():
+    cfg = _cfg()
+    p = ssm.init_mamba(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model))
+    y8 = ssm.mamba_block(p, x, cfg, chunk=8)
+    y32 = ssm.mamba_block(p, x, cfg, chunk=32)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y32),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "jamba-v0.1-52b"])
+def test_gradients_finite(arch):
+    """Regression: exp(diff) in the masked upper triangle overflows; the
+    old where-after-exp pattern turned that into NaN grads for
+    a_log/dt_bias/in_proj on every SSM arch."""
+    cfg = _cfg(arch)
+    p = ssm.init_mamba(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.5
+
+    def f(p, x):
+        return jnp.sum(ssm.mamba_block(p, x, cfg, chunk=cfg.ssm_chunk) ** 2)
+
+    _, g = jax.value_and_grad(f)(p, x)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(g)[0]:
+        assert bool(jnp.all(jnp.isfinite(leaf))), \
+            f"non-finite grad at {jax.tree_util.keystr(path)}"
+
+
+def test_remat_chunk_scan_matches():
+    """cfg.remat=True wraps the chunk scan body in jax.checkpoint; values
+    must be identical."""
+    cfg = _cfg()
+    p = ssm.init_mamba(jax.random.PRNGKey(4), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 32, cfg.d_model))
+    y0 = ssm.mamba_block(p, x, dataclasses.replace(cfg, remat=False), chunk=8)
+    y1 = ssm.mamba_block(p, x, dataclasses.replace(cfg, remat=True), chunk=8)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-6)
