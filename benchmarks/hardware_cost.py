@@ -132,8 +132,10 @@ def main():
     P = 30
 
     # --- MP in-filter path (bisection filtering + MP classifier) ---
+    # solver="bisect": the census models the FPGA, whose MP modules run the
+    # add/compare/shift bisection — not the software-fast Newton path
     fb_mp = FilterBank(FilterBankConfig(fs=FS, num_octaves=6, mode="mp",
-                                        gamma_f=4.0))
+                                        gamma_f=4.0, solver="bisect"))
     params = km.init_params(jax.random.PRNGKey(0), P, 10)
 
     def mp_infer(x):

@@ -21,12 +21,16 @@ def main():
         L = jax.random.normal(key, (rows_, m))
         f_exact = jax.jit(lambda L: mp_mod.mp_exact(L, 2.0))
         f_bis = jax.jit(lambda L: mp_mod.mp_bisect(L, 2.0))
+        f_newt = jax.jit(lambda L: mp_mod.mp_newton(L, 2.0))
         us_e = time_fn(f_exact, L)
         us_b = time_fn(f_bis, L)
+        us_n = time_fn(f_newt, L)
         row(f"mp_exact.{rows_}x{m}", us_e,
             f"{rows_ * m / us_e:.0f} elem/us")
         row(f"mp_bisect.{rows_}x{m}", us_b,
             f"{rows_ * m / us_b:.0f} elem/us")
+        row(f"mp_newton.{rows_}x{m}", us_n,
+            f"{rows_ * m / us_n:.0f} elem/us vs_bisect={us_b/us_n:.1f}x")
 
     x = jax.random.normal(key, (64, 256))
     w = jax.random.normal(jax.random.PRNGKey(1), (256, 128))

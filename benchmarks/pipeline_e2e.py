@@ -1,0 +1,115 @@
+"""End-to-end in-filter pipeline benchmark (the tentpole numbers).
+
+Compares, at the paper-scale workload (B=32 clips x 16000 samples, 6
+octaves x 5 filters = 30 bands):
+
+  seed_perfilter   the seed implementation: one vmap'd per-filter FIR per
+                   octave with the 26-iteration bisection solver, Python
+                   list + stack readout, feature / standardize / classifier
+                   dispatched separately
+  pipeline_oneshot unified InFilterPipeline.predict: stacked-tap octave
+                   kernels (chunked, Newton water-filling) + classifier in
+                   ONE jit computation
+  pipeline_stream  the same audio pushed through the stateful streaming API
+                   in 1600-sample chunks (fixed-memory continuous mode)
+
+Emits ``name,us_per_call,derived`` CSV rows like every other benchmark.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import kernel_machine as km
+from repro.core import mp as mp_mod
+from repro.core.filterbank import FilterBank, FilterBankConfig
+from repro.core.pipeline import InFilterPipeline
+
+B, N = 32, 16000
+CHUNK = 1600
+
+
+def _seed_conv(x, h, gamma):
+    """The seed's per-filter MP FIR: window gather + bisection solver."""
+    M = h.shape[0]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(M - 1, 0)])
+    idx = jnp.arange(x.shape[-1])[:, None] + jnp.arange(M)[None, :]
+    return mp_mod.mp_dot(xp[..., idx], h[::-1], gamma, exact=False)
+
+
+def seed_accumulate_fn(fb: FilterBank):
+    cfg = fb.config
+
+    def accumulate(x):
+        s = []
+        x_o = x
+        for o in range(cfg.num_octaves):
+            taps = fb.bp_by_octave[o]
+            y = jax.vmap(lambda h: _seed_conv(x_o, h, cfg.gamma_f))(taps)
+            for p in range(taps.shape[0]):
+                s.append(jnp.sum(jnp.maximum(y[p], 0.0), -1) * 2.0 ** o)
+            if o < cfg.num_octaves - 1:
+                lp = jnp.asarray(fb.lp_tap_list[o])
+                x_o = _seed_conv(x_o, lp, cfg.gamma_f)[..., ::2]
+        return jnp.stack(s, -1)
+
+    return accumulate
+
+
+def main():
+    cfg = FilterBankConfig(fs=16000.0, num_octaves=6, filters_per_octave=5,
+                           mode="mp", gamma_f=4.0)
+    fb = FilterBank(cfg)
+    P = cfg.num_filters
+    clf = km.init_params(jax.random.PRNGKey(0), P, 10)
+    mu = jnp.ones((P,))
+    sigma = jnp.full((P,), 2.0)
+    pipe = InFilterPipeline.from_filterbank(fb, clf, mu, sigma)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, N))
+
+    # -- seed flow: separate dispatches, per-filter bisection bank ----------
+    feat_seed = jax.jit(seed_accumulate_fn(fb))
+    fwd = jax.jit(lambda K: km.forward(clf, K))
+
+    def seed_e2e(x):
+        s = feat_seed(x)
+        return fwd((s - mu) / sigma)
+
+    us_seed = time_fn(seed_e2e, x, warmup=1, iters=3)
+    row(f"pipeline_e2e.seed_perfilter.B{B}xN{N}xP{P}", us_seed,
+        f"{B * N / us_seed:.1f} samples/us")
+
+    # -- unified one-shot ----------------------------------------------------
+    predict = jax.jit(pipe.predict)
+    us_one = time_fn(predict, x, warmup=1, iters=3)
+    row(f"pipeline_e2e.pipeline_oneshot.B{B}xN{N}xP{P}", us_one,
+        f"speedup_vs_seed={us_seed / us_one:.2f}x")
+
+    # -- streaming -----------------------------------------------------------
+    step = jax.jit(InFilterPipeline.step)
+
+    def stream_e2e(x):
+        state = pipe.init_state(B)
+        p = None
+        for i in range(0, N, CHUNK):
+            state, p = step(pipe, state, x[:, i:i + CHUNK])
+        return p
+
+    us_stream = time_fn(stream_e2e, x, warmup=1, iters=3)
+    row(f"pipeline_e2e.pipeline_stream.chunk{CHUNK}", us_stream,
+        f"per_chunk_us={us_stream / (N // CHUNK):.1f}")
+
+    # parity: all three flows classify identically (f32 round-off)
+    p_seed = seed_e2e(x)
+    p_one = predict(x)
+    p_stream = stream_e2e(x)
+    err_one = float(jnp.max(jnp.abs(p_one - p_seed)))
+    err_stream = float(jnp.max(jnp.abs(p_stream - p_one)))
+    row("pipeline_e2e.parity", 0.0,
+        f"oneshot_vs_seed={err_one:.2e} stream_vs_oneshot={err_stream:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,8 @@ Emits ``name,us_per_call,derived`` CSV rows. Modules:
   filterbank_response  Fig. 4/6   (downsampling + MP distortion)
   hardware_cost        Table I/II (op census -> LUT equivalents)
   microbench           kernel reference timings
+  pipeline_e2e         unified audio->decision pipeline: one-shot vs
+                       streaming vs the seed per-filter path
 """
 
 from __future__ import annotations
@@ -19,6 +21,7 @@ import traceback
 
 MODULES = [
     "microbench",
+    "pipeline_e2e",
     "filterbank_response",
     "hardware_cost",
     "accuracy_fsdd",

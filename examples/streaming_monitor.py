@@ -1,0 +1,77 @@
+"""Continuous acoustic monitoring with the streaming in-filter pipeline.
+
+The paper's deployment story: audio goes in at the sensor, ONLY class
+decisions come out (remote monitoring over limited bandwidth). This example
+trains an ``InFilterPipeline`` on synthetic ESC-10 clips, then simulates a
+long environmental recording by concatenating held-out clips and pushes it
+through the stateful streaming API in sensor-sized chunks (10 ms frames).
+The state — FIR delay lines, decimator phases, per-band accumulators — is a
+few KB regardless of how long the stream runs, exactly the FPGA's register
+footprint.
+
+    PYTHONPATH=src python examples/streaming_monitor.py [--fast]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.filterbank import FilterBankConfig
+from repro.core.pipeline import InFilterPipeline
+from repro.core.trainer import TrainConfig
+from repro.data.acoustic import ESC10_CLASSES, make_esc10_like
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    fs = 4000.0 if args.fast else 8000.0
+    octaves = 4 if args.fast else 5
+    per_tr = 4 if args.fast else 12
+
+    # 1. train the deployable pipeline: taps + classifier + statistics in one
+    ds = make_esc10_like(per_class_train=per_tr, per_class_test=2,
+                         fs=fs, seconds=0.5, seed=0)
+    cfg = FilterBankConfig(fs=fs, num_octaves=octaves, filters_per_octave=5,
+                           mode="mp", gamma_f=4.0)
+    pipe, losses = InFilterPipeline.fit(
+        cfg, ds.x_train, ds.y_train, num_classes=10,
+        train_cfg=TrainConfig(num_steps=150 if args.fast else 400))
+    print(f"trained: loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+          f"{pipe.num_bands} bands")
+
+    # 2. one-shot check on the held-out clips (the whole path is one jit)
+    predict = jax.jit(pipe.predict)
+    p = predict(jnp.asarray(ds.x_test))
+    acc = float((np.asarray(jnp.argmax(p, -1)) == ds.y_test).mean())
+    print(f"one-shot test acc: {acc:.3f}")
+
+    # 3. continuous mode: a 'long recording' of back-to-back events, chunked
+    #    into 10 ms frames — one stream per event so each decision is clean
+    order = np.argsort(ds.y_test, kind="stable")
+    stream = jnp.asarray(ds.x_test[order])            # (E, N) events
+    chunk = int(fs * 0.010)                           # 10 ms sensor frames
+    step = jax.jit(InFilterPipeline.step)
+    state = pipe.init_state(stream.shape[0])
+    n = stream.shape[1]
+    for i in range(0, n, chunk):
+        state, p_now = step(pipe, state, stream[:, i:i + chunk])
+    pred = np.asarray(jnp.argmax(p_now, -1))
+    truth = ds.y_test[order]
+    acc_stream = float((pred == truth).mean())
+    state_bytes = sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                      for a in jax.tree.leaves(state))
+    print(f"streamed  test acc: {acc_stream:.3f} "
+          f"({n // chunk} chunks of {chunk} samples, "
+          f"state = {state_bytes / stream.shape[0]:.0f} B/stream)")
+    for e in range(0, stream.shape[0], max(1, stream.shape[0] // 5)):
+        print(f"  event {e}: true={ESC10_CLASSES[truth[e]]:14s} "
+              f"decided={ESC10_CLASSES[pred[e]]:14s} "
+              f"confidence={float(p_now[e, pred[e]]):+.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the gate every PR must keep green (see ROADMAP.md).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -16,7 +16,8 @@ Per-filter kernel value (Appendix A):
 The filters are PRECOMPUTED constants (paper: "coefficients are precomputed
 and provided as inputs"); only the classifier trains, absorbing the MP
 approximation error. Feature extraction therefore uses the fast
-non-differentiable `mp_bisect` path.
+non-differentiable solver path (monotone-Newton water-filling; see
+`repro.core.mp.mp_newton`) rather than the differentiable exact solve.
 """
 
 from __future__ import annotations
@@ -37,6 +38,11 @@ __all__ = [
     "design_lowpass",
     "design_bandpass",
     "greenwood",
+    "single_fir",
+    "bank_fir",
+    "bank_accumulate",
+    "multirate_band_outputs",
+    "multirate_accumulate",
 ]
 
 
@@ -85,6 +91,84 @@ def greenwood(x: np.ndarray, fmin: float = 100.0, fmax: float = 8000.0) -> np.nd
 
 
 # ---------------------------------------------------------------------------
+# Filtering primitives (array-in/array-out; shared by FilterBank and
+# repro.core.pipeline — both the one-shot and the streaming path call these,
+# which is what keeps chunked step() bit-compatible with predict())
+# ---------------------------------------------------------------------------
+
+
+def single_fir(x: jax.Array, h: jax.Array, cfg: "FilterBankConfig") -> jax.Array:
+    """x: (B, N), h: (M,) -> (B, N). MP or MAC per config."""
+    if cfg.mode == "mac":
+        return _mac_fir(x, h)
+    if cfg.use_pallas:
+        from repro.kernels import fir_mp  # lazy: keeps core import light
+        return fir_mp(x, h, cfg.gamma_f)
+    return mp_mod.mp_conv1d(x, h, cfg.gamma_f, exact=False, solver=cfg.solver)
+
+
+def bank_fir(x: jax.Array, taps: jax.Array, cfg: "FilterBankConfig") -> jax.Array:
+    """Whole-octave band-pass: x (B, N), taps (F, M) -> (B, F, N).
+
+    One stacked-tap invocation per octave: a single pallas_call (grid over
+    batch x filter, shared VMEM signal block) or a single broadcast window
+    solve — never a Python loop of per-filter calls."""
+    if cfg.mode == "mac":
+        return _mac_fir_bank(x, taps)
+    if cfg.use_pallas:
+        from repro.kernels import fir_mp_bank
+        return fir_mp_bank(x, taps, cfg.gamma_f)
+    return mp_mod.mp_conv1d_bank(x, taps, cfg.gamma_f, exact=False,
+                                 solver=cfg.solver)
+
+
+def bank_accumulate(x: jax.Array, taps: jax.Array,
+                    cfg: "FilterBankConfig") -> jax.Array:
+    """s_p = sum_n HWR(B_p(n)) for one octave: x (B, N), taps (F, M) -> (B, F).
+
+    MP+pallas fuses FIR+HWR+accumulate in the kernel (one HBM read of the
+    signal -> F scalars); other modes reduce the bank output."""
+    if cfg.mode == "mp" and cfg.use_pallas:
+        from repro.kernels import fir_mp_bank_accumulate
+        return fir_mp_bank_accumulate(x, taps, cfg.gamma_f)
+    y = bank_fir(x, taps, cfg)
+    return jnp.sum(jnp.maximum(y, 0.0), axis=-1)
+
+
+def multirate_band_outputs(x: jax.Array, bp_taps, lp_taps,
+                           cfg: "FilterBankConfig") -> list:
+    """Raw band-pass outputs per octave: list of (B, F, N/2^o) arrays."""
+    if cfg.quant_bits is not None:
+        x = fake_quant(x, cfg.quant_bits)
+    outs = []
+    x_o = x
+    for o in range(cfg.num_octaves):
+        outs.append(bank_fir(x_o, bp_taps[o], cfg))
+        if o < cfg.num_octaves - 1:
+            x_o = single_fir(x_o, lp_taps[o], cfg)[..., ::2]  # LP + decimate
+    return outs
+
+
+def multirate_accumulate(x: jax.Array, bp_taps, lp_taps,
+                         cfg: "FilterBankConfig") -> jax.Array:
+    """Full-bank accumulator readout: x (B, N) -> s (B, P).
+
+    Octave o has N/2^o samples; renormalize by 2^o so every band contributes
+    at the same scale (the FPGA's per-band accumulators are read out raw, but
+    the STD stage removes scale anyway; renormalizing keeps the pre-STD
+    dynamic range uniform for fixed-point analysis)."""
+    if cfg.quant_bits is not None:
+        x = fake_quant(x, cfg.quant_bits)
+    parts = []
+    x_o = x
+    for o in range(cfg.num_octaves):
+        parts.append(bank_accumulate(x_o, bp_taps[o], cfg) * (2.0 ** o))
+        if o < cfg.num_octaves - 1:
+            x_o = single_fir(x_o, lp_taps[o], cfg)[..., ::2]
+    return jnp.concatenate(parts, axis=-1)
+
+
+# ---------------------------------------------------------------------------
 # Filter bank
 # ---------------------------------------------------------------------------
 
@@ -100,6 +184,9 @@ class FilterBankConfig(NamedTuple):
     use_pallas: bool = False   # route MP FIR through the fused Pallas kernel
     spacing: Literal["octave", "greenwood"] = "octave"
     quant_bits: int | None = None  # quantize taps + signal (Fig. 8 sweep)
+    solver: Literal["newton", "bisect"] = "newton"  # non-exact MP scheme:
+    # newton = fast software path; bisect = the FPGA's add/compare/shift loop
+    # (use for hardware op censuses; the Pallas kernels always bisect)
 
     @property
     def num_filters(self) -> int:
@@ -139,53 +226,32 @@ class FilterBank:
             self.lp_tap_list = [np.asarray(fake_quant(jnp.asarray(h), c.quant_bits))
                                 for h in self.lp_tap_list]
         # stacked per-octave taps: (filters_per_octave, bp_taps)
-        self._bp_by_octave = [
+        self._bp_by_octave = tuple(
             jnp.stack([jnp.asarray(self.bp_taps[o * c.filters_per_octave + p])
                        for p in range(c.filters_per_octave)])
             for o in range(c.num_octaves)
-        ]
-        self._lp = [jnp.asarray(h) for h in self.lp_tap_list]
+        )
+        self._lp = tuple(jnp.asarray(h) for h in self.lp_tap_list)
 
-    # -- filtering primitives ------------------------------------------------
+    @property
+    def bp_by_octave(self) -> tuple:
+        """Stacked (F, M) band-pass taps per octave (kernel-ready)."""
+        return self._bp_by_octave
 
-    def _fir(self, x: jax.Array, h: jax.Array) -> jax.Array:
-        """x: (B, N), h: (M,) -> (B, N). MP or MAC per config."""
-        if self.config.mode == "mac":
-            return _mac_fir(x, h)
-        if self.config.use_pallas:
-            from repro.kernels import fir_mp  # lazy: keeps core import light
-            return fir_mp(x, h, self.config.gamma_f)
-        return mp_mod.mp_conv1d(x, h, self.config.gamma_f, exact=False)
+    @property
+    def lp_filters(self) -> tuple:
+        """Anti-aliasing low-pass taps per ÷2 stage."""
+        return self._lp
 
     def band_outputs(self, x: jax.Array) -> list[jax.Array]:
-        """Raw band-pass outputs per filter (list of (B, N_o) arrays)."""
-        c = self.config
-        if c.quant_bits is not None:
-            x = fake_quant(x, c.quant_bits)
-        outs: list[jax.Array] = []
-        x_o = x
-        for o in range(c.num_octaves):
-            taps = self._bp_by_octave[o]  # (F, M)
-            y = jax.vmap(lambda h: self._fir(x_o, h))(taps)  # (F, B, N_o)
-            outs.extend([y[p] for p in range(taps.shape[0])])
-            if o < c.num_octaves - 1:
-                x_o = self._fir(x_o, self._lp[o])[..., ::2]  # LP + decimate
-        return outs
+        """Raw band-pass outputs per octave (list of (B, F, N_o) arrays)."""
+        return multirate_band_outputs(x, self._bp_by_octave, self._lp,
+                                      self.config)
 
     def accumulate(self, x: jax.Array) -> jax.Array:
-        """s_p = sum_n HWR(B_p(n)) for every filter. x: (B, N) -> (B, P).
-
-        Octave o has N/2^o samples; we renormalize by 2^o so every band
-        contributes at the same scale (the FPGA's per-band accumulators are
-        read out raw, but the STD stage removes scale anyway; renormalizing
-        keeps the pre-STD dynamic range uniform for fixed-point analysis).
-        """
-        outs = self.band_outputs(x)
-        s = []
-        for p, y in enumerate(outs):
-            o = self.octave_of[p]
-            s.append(jnp.sum(jnp.maximum(y, 0.0), axis=-1) * (2.0 ** o))
-        return jnp.stack(s, axis=-1)
+        """s_p = sum_n HWR(B_p(n)) for every filter. x: (B, N) -> (B, P)."""
+        return multirate_accumulate(x, self._bp_by_octave, self._lp,
+                                    self.config)
 
     def features(self, x: jax.Array, mu: jax.Array | None = None,
                  sigma: jax.Array | None = None):
@@ -207,3 +273,14 @@ def _mac_fir(x: jax.Array, h: jax.Array) -> jax.Array:
         xp[:, None, :], h[::-1][None, None, :],
         window_strides=(1,), padding="VALID",
         dimension_numbers=("NCH", "OIH", "NCH"))[:, 0, :]
+
+
+def _mac_fir_bank(x: jax.Array, H: jax.Array) -> jax.Array:
+    """Multiplier baseline for a whole octave: one conv with F output
+    channels. x (B, N), H (F, M) -> (B, F, N)."""
+    M = H.shape[1]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(M - 1, 0)])
+    return jax.lax.conv_general_dilated(
+        xp[:, None, :], H[:, ::-1][:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NCH", "OIH", "NCH"))

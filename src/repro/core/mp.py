@@ -41,14 +41,20 @@ __all__ = [
     "mp_exact",
     "mp",
     "mp_bisect",
+    "mp_newton",
     "mpabs",
+    "mpabs_newton",
     "mp_dot",
     "mp_linear",
     "mp_conv1d",
+    "mp_conv1d_bank",
     "DEFAULT_BISECT_ITERS",
+    "DEFAULT_NEWTON_ITERS",
 ]
 
 DEFAULT_BISECT_ITERS = 26  # |interval| * 2^-26 < 1e-7 * gamma: fp32-parity
+DEFAULT_NEWTON_ITERS = 12  # monotone Newton: lands exactly on the root
+                           # segment; 12 steps beat bisect-26 empirically
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +137,59 @@ def mp_bisect(
 
     lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
     return (lo + hi) * jnp.asarray(0.5, L.dtype)
+
+
+def mp_newton(
+    L: jax.Array,
+    gamma: jax.Array,
+    iters: int = DEFAULT_NEWTON_ITERS,
+) -> jax.Array:
+    """MP via monotone Newton on the water-filling constraint.
+
+    h(z) = sum_i [L_i - z]_+ is convex, piecewise linear, decreasing with
+    slope -k(z) where k = |{i : L_i > z}|. Starting LEFT of the root
+    (z0 = max L - gamma, where h >= gamma) every Newton step
+    ``z += (h(z) - gamma)/k`` jumps to its tangent's root: the tangent
+    under-estimates h (convexity), so the iterate never overshoots and is
+    monotone increasing; once it reaches the root's linear segment the
+    tangent IS h and it lands exactly. ~12 fixed steps beat 26 bisections
+    both in accuracy and wall time — at the price of a divide, so this is
+    the fast SOFTWARE solver; ``mp_bisect`` remains the hardware-faithful
+    add/compare/shift reference.
+    """
+    gamma = jnp.asarray(gamma, dtype=L.dtype)
+    z = jnp.max(L, axis=-1) - gamma
+
+    def body(_, z):
+        zc = z[..., None]
+        s = jnp.sum(jnp.maximum(L - zc, 0), axis=-1)
+        k = jnp.sum(L > zc, axis=-1).astype(L.dtype)
+        return z + (s - gamma) / jnp.maximum(k, 1.0)
+
+    return jax.lax.fori_loop(0, iters, body, z)
+
+
+def mpabs_newton(
+    u: jax.Array,
+    gamma: jax.Array,
+    iters: int = DEFAULT_NEWTON_ITERS,
+) -> jax.Array:
+    """MP([u; -u], gamma) via monotone Newton (see ``mp_newton``), without
+    materializing the concatenation: h(z) over [u; -u] splits into the
+    |u| branch plus the -|u| branch (active only when z < -min|u|)."""
+    gamma = jnp.asarray(gamma, dtype=u.dtype)
+    a = jnp.abs(u)
+    z = jnp.max(a, axis=-1) - gamma
+
+    def body(_, z):
+        zc = z[..., None]
+        s = (jnp.sum(jnp.maximum(a - zc, 0), axis=-1)
+             + jnp.sum(jnp.maximum(-a - zc, 0), axis=-1))
+        k = (jnp.sum(a > zc, axis=-1)
+             + jnp.sum(-a > zc, axis=-1)).astype(u.dtype)
+        return z + (s - gamma) / jnp.maximum(k, 1.0)
+
+    return jax.lax.fori_loop(0, iters, body, z)
 
 
 # ---------------------------------------------------------------------------
@@ -221,12 +280,15 @@ def mp_conv1d(
     h: jax.Array,
     gamma: jax.Array,
     exact: bool = True,
+    solver: str = "newton",
 ) -> jax.Array:
     """Multiplierless FIR filtering (paper eq. 8 + 9): y(n) = MP-dot(h, x[n-M+1..n]).
 
     x: (..., N) signal; h: (M,) taps. 'Valid' part is y[M-1:]; we left-pad
     with zeros so y has the same length as x (matches streaming hardware that
-    starts from zeroed register banks).
+    starts from zeroed register banks). With exact=False, ``solver`` picks
+    the fixed-iteration scheme: "newton" (fast software default) or
+    "bisect" (the hardware's add/compare/shift loop).
     """
     M = h.shape[0]
     xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(M - 1, 0)])
@@ -235,4 +297,69 @@ def mp_conv1d(
     idx = jnp.arange(x.shape[-1])[:, None] + jnp.arange(M)[None, :]
     win = xp[..., idx]  # gather windows
     hr = h[::-1]
-    return mp_dot(win, hr, gamma, exact=exact)
+    if exact:
+        return mp_dot(win, hr, gamma, exact=True)
+    return _mp_dot_fast(win, hr, gamma, solver)
+
+
+def _mp_dot_fast(x: jax.Array, w: jax.Array, gamma, solver: str) -> jax.Array:
+    """Fast-solver mp_dot for the (non-differentiable) feature-extraction
+    hot path: same eq. 9 operand pairing, fixed-iteration solver."""
+    if solver == "newton":
+        return mpabs_newton(w + x, gamma) - mpabs_newton(w - x, gamma)
+    if solver == "bisect":
+        return (mpabs(w + x, gamma, exact=False)
+                - mpabs(w - x, gamma, exact=False))
+    raise ValueError(f"unknown MP solver: {solver!r}")
+
+
+def mp_conv1d_bank(
+    x: jax.Array,
+    H: jax.Array,
+    gamma: jax.Array,
+    exact: bool = True,
+    chunk_n: Optional[int] = 1024,
+    solver: str = "newton",
+) -> jax.Array:
+    """Multi-filter MP FIR: x (..., N), H (F, M) -> y (..., F, N).
+
+    The (N, M) window gather is built ONCE and broadcast against all F tap
+    rows (filter axis leading: (F, B, N, M) keeps the MP solve operands in
+    the same layout a per-filter vmap produces, which XLA:CPU vectorizes
+    measurably better than a (B, F, N, M) broadcast). Long signals are
+    solved in ``chunk_n``-sample blocks via lax.map so the fixed-iteration
+    solve re-reads cache-resident operands instead of streaming the full
+    (F, B, N, M) tensor from DRAM each iteration. Window contents are
+    unchanged by chunking, so results match ``mp_conv1d(x, H[f], gamma)``
+    exactly per band.
+    """
+    F, M = H.shape
+    lead = x.shape[:-1]
+    N = x.shape[-1]
+    x2 = x.reshape(-1, N)
+    B = x2.shape[0]
+    hr = H[:, ::-1].reshape(F, 1, 1, M)
+
+    def solve(win):  # (B, Q, M) -> (F, B, Q)
+        if exact:
+            return mp_dot(win[None], hr, gamma, exact=True)
+        return _mp_dot_fast(win[None], hr, gamma, solver)
+
+    if chunk_n is None or N <= chunk_n:
+        xp = jnp.pad(x2, ((0, 0), (M - 1, 0)))
+        idx = jnp.arange(N)[:, None] + jnp.arange(M)[None, :]
+        y = solve(xp[:, idx])                          # (F, B, N)
+    else:
+        Q = chunk_n
+        xq = jnp.pad(x2, ((0, 0), (0, (-N) % Q)))
+        Np = xq.shape[1]
+        xp = jnp.pad(xq, ((0, 0), (M - 1, 0)))
+        idx = jnp.arange(Q)[:, None] + jnp.arange(M)[None, :]
+
+        def one(start):  # windows for output positions [start, start+Q)
+            seg = jax.lax.dynamic_slice_in_dim(xp, start, Q + M - 1, axis=1)
+            return solve(seg[:, idx])
+
+        ys = jax.lax.map(one, jnp.arange(Np // Q) * Q)  # (nc, F, B, Q)
+        y = jnp.moveaxis(ys, 0, 2).reshape(F, B, Np)[..., :N]
+    return jnp.moveaxis(y, 0, 1).reshape(*lead, F, N)

@@ -1,0 +1,207 @@
+"""Unified in-filter pipeline: audio in, class decisions out (paper Fig. 1).
+
+``InFilterPipeline`` packs everything the deployed classifier needs —
+filter-bank config, precomputed FIR taps, trained MP kernel-machine weights,
+and the feature standardization statistics — into one pytree-serializable
+object with two entry points:
+
+* ``predict(x)``: one-shot ``audio (B, N) -> p (B, C)``. The whole multirate
+  bank -> HWR/accumulate -> standardize -> MP kernel machine path traces as
+  a single computation, so ``jax.jit(pipeline.predict)`` compiles the full
+  audio->confidence graph in one unit (the "only classified data leaves the
+  device" deployment mode).
+
+* ``init_state(batch)`` / ``step(state, chunk)``: stateful streaming. The
+  state carries, per octave, the FIR delay-line registers (the last
+  ``max(bp_taps, lp_taps) - 1`` input samples), the decimator phase (global
+  sample parity), and the running per-band accumulators — exactly the
+  FPGA's zeroed-register streaming semantics, so arbitrarily long audio
+  classifies in memory that does not grow with stream length. Feeding a
+  signal chunk-by-chunk reproduces the one-shot band outputs sample-for-
+  sample (identical FIR windows -> identical MP solves); only the
+  accumulator summation order differs, so parity holds to float32
+  round-off rather than bitwise. Exception: with ``quant_bits`` set,
+  fake_quant scales by the chunk-local amax instead of the whole-signal
+  amax, so quantized streaming only matches a deployment whose
+  quantization window equals the chunking (see ROADMAP: carry a running
+  amax in StreamingState).
+
+Chunk lengths may vary call-to-call (jit retraces per length); within a
+call the octave-level valid lengths are data-dependent scalars handled with
+masking + dynamic slices, so ``step`` is fully jit-able.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernel_machine as km
+from repro.core import filterbank as fbm
+from repro.core.filterbank import FilterBank, FilterBankConfig
+from repro.core.quant import fake_quant
+
+__all__ = ["InFilterPipeline", "StreamingState"]
+
+
+class StreamingState(NamedTuple):
+    """Streaming registers carried across chunks (all per-stream-batch B).
+
+    delays:   per octave, (B, T-1) with T = max(bp_taps, lp_taps): the last
+              T-1 samples of that octave's input signal (zeros at start —
+              the FPGA's cleared register bank).
+    consumed: per octave, () int32: octave samples seen so far. Its parity
+              is the ÷2 decimator phase; it also dates the stream.
+    acc:      (B, P) running renormalized per-band accumulators.
+    """
+    delays: tuple
+    consumed: tuple
+    acc: jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+class InFilterPipeline:
+    """Config + taps + trained params + standardization in one pytree."""
+
+    def __init__(self, config: FilterBankConfig, bp_taps: tuple,
+                 lp_taps: tuple, mu: jax.Array, sigma: jax.Array,
+                 clf: km.MPKernelMachineParams):
+        self.config = config
+        self.bp_taps = tuple(bp_taps)    # per octave: (F, M)
+        self.lp_taps = tuple(lp_taps)    # per ÷2 stage: (M_lp,)
+        self.mu = mu                     # (P,)
+        self.sigma = sigma               # (P,)
+        self.clf = clf
+
+    # -- pytree protocol (config is static aux data; arrays are leaves) ----
+
+    def tree_flatten(self):
+        children = (self.bp_taps, self.lp_taps, self.mu, self.sigma, self.clf)
+        return children, self.config
+
+    @classmethod
+    def tree_unflatten(cls, config, children):
+        return cls(config, *children)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_filterbank(cls, fb: FilterBank, clf: km.MPKernelMachineParams,
+                        mu: jax.Array, sigma: jax.Array) -> "InFilterPipeline":
+        return cls(fb.config, fb.bp_by_octave, fb.lp_filters,
+                   jnp.asarray(mu), jnp.asarray(sigma), clf)
+
+    @classmethod
+    def fit(cls, config: FilterBankConfig, x_train, y_train,
+            num_classes: int, train_cfg=None):
+        """Extract features, standardize, train the MP kernel machine, and
+        pack the deployable pipeline. Returns (pipeline, loss_trace)."""
+        from repro.core import trainer  # lazy: trainer pulls in optimizers
+        if train_cfg is None:
+            train_cfg = trainer.TrainConfig()
+        fb = FilterBank(config)
+        x_train = jnp.asarray(x_train)
+        s = jax.jit(fb.accumulate)(x_train)
+        mu = jnp.mean(s, axis=0)
+        sigma = jnp.std(s, axis=0, ddof=1) + 1e-6
+        K = (s - mu) / sigma
+        params, losses = trainer.train(K, jnp.asarray(y_train), num_classes,
+                                       train_cfg)
+        return cls.from_filterbank(fb, params, mu, sigma), losses
+
+    # -- one-shot ------------------------------------------------------------
+
+    @property
+    def num_bands(self) -> int:
+        return self.config.num_filters
+
+    def features(self, x: jax.Array) -> jax.Array:
+        """audio (B, N) -> standardized kernel vector Phi (B, P)."""
+        s = fbm.multirate_accumulate(x, self.bp_taps, self.lp_taps,
+                                     self.config)
+        return (s - self.mu) / self.sigma
+
+    def predict(self, x: jax.Array) -> jax.Array:
+        """audio (B, N) -> signed per-class confidence p (B, C) in [-1, 1]."""
+        return km.forward(self.clf, self.features(x))
+
+    # -- streaming ------------------------------------------------------------
+
+    @property
+    def _delay_len(self) -> int:
+        return max(self.config.bp_taps, self.config.lp_taps) - 1
+
+    def init_state(self, batch: int, dtype=jnp.float32) -> StreamingState:
+        c = self.config
+        T1 = self._delay_len
+        return StreamingState(
+            delays=tuple(jnp.zeros((batch, T1), dtype)
+                         for _ in range(c.num_octaves)),
+            consumed=tuple(jnp.zeros((), jnp.int32)
+                           for _ in range(c.num_octaves)),
+            acc=jnp.zeros((batch, c.num_filters), dtype),
+        )
+
+    def step(self, state: StreamingState,
+             chunk: jax.Array) -> tuple[StreamingState, jax.Array]:
+        """Consume one (B, L) chunk; return (state', p (B, C)).
+
+        p is the decision from all evidence so far — after the last chunk it
+        matches ``predict`` over the concatenated signal to f32 round-off,
+        EXCEPT under ``quant_bits``, where fake_quant's chunk-local amax
+        scale breaks parity with the one-shot global scale (see NOTE below).
+        """
+        c = self.config
+        if c.quant_bits is not None:
+            # NOTE: fake_quant scales by the chunk's own amax, so quantized
+            # streaming is only bit-faithful when the chunking matches the
+            # deployment's quantization window.
+            chunk = fake_quant(chunk, c.quant_bits)
+        T1 = self._delay_len
+        x_o = chunk
+        l_max = chunk.shape[1]              # static per-call octave capacity
+        n_o = jnp.asarray(chunk.shape[1], jnp.int32)   # dynamic valid count
+        delays, consumed, parts = [], [], []
+        for o in range(c.num_octaves):
+            # splice the delay-line registers in front of the chunk; in-chunk
+            # sample p sits at buf position T1 + p with its full FIR history
+            buf = jnp.concatenate([state.delays[o], x_o], axis=1)
+            y = fbm.bank_fir(buf, self.bp_taps[o], c)[..., T1:]  # (B, F, l_max)
+            pos = jax.lax.broadcasted_iota(jnp.int32, y.shape, y.ndim - 1)
+            hwr = jnp.where(pos < n_o, jnp.maximum(y, 0.0), 0.0)
+            parts.append(jnp.sum(hwr, axis=-1) * (2.0 ** o))     # (B, F)
+            # register updates: last T1 *valid* samples become the new delay
+            delays.append(jax.lax.dynamic_slice_in_dim(buf, n_o, T1, axis=1))
+            consumed.append(state.consumed[o] + n_o)
+            if o < c.num_octaves - 1:
+                y_lp = fbm.single_fir(buf, self.lp_taps[o], c)[..., T1:]
+                # ÷2 decimator: keep even GLOBAL indices. The first kept
+                # in-chunk index is the stream-parity phase of this octave.
+                start = jnp.remainder(state.consumed[o], 2)
+                l_next = (l_max + 1) // 2
+                y_pad = jnp.pad(y_lp, ((0, 0), (0, 2 * l_next + 1 - l_max)))
+                kept = jax.lax.dynamic_slice_in_dim(
+                    y_pad, start, 2 * l_next, axis=1)[:, ::2]
+                x_o = kept                                       # (B, l_next)
+                n_o = jnp.maximum(0, (n_o - start + 1) // 2)
+                l_max = l_next
+        acc = state.acc + jnp.concatenate(parts, axis=-1)
+        state = StreamingState(tuple(delays), tuple(consumed), acc)
+        phi = (acc - self.mu) / self.sigma
+        return state, km.forward(self.clf, phi)
+
+    def stream(self, chunks) -> jax.Array:
+        """Convenience: classify an iterable of (B, L_i) chunks; returns the
+        final p. Memory stays fixed regardless of total stream length."""
+        state = None
+        p = None
+        for chunk in chunks:
+            chunk = jnp.asarray(chunk)
+            if state is None:
+                state = self.init_state(chunk.shape[0], chunk.dtype)
+            state, p = self.step(state, chunk)
+        if p is None:
+            raise ValueError("stream() needs at least one chunk")
+        return p

@@ -11,6 +11,9 @@ Kernels:
   fir_mp       - in-filter MP FIR: sliding windows formed in VMEM (no HBM
                  window matrix), both MP states solved in one pass, optional
                  fused HWR+accumulate (the paper's s_p readout)
+  fir_mp_bank  - multi-filter fir_mp: grid (batch_tile, filter) with the
+                 filter axis innermost so one VMEM-resident signal block
+                 serves a whole octave's filter set in a single pallas_call
 """
 
 from repro.kernels.ops import (  # noqa: F401
@@ -18,4 +21,6 @@ from repro.kernels.ops import (  # noqa: F401
     mp_linear,
     fir_mp,
     fir_mp_accumulate,
+    fir_mp_bank,
+    fir_mp_bank_accumulate,
 )

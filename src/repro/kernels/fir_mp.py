@@ -91,6 +91,70 @@ def _fir_mp_kernel(gamma_ref, x_ref, h_ref, out_ref, *, iters, M, accumulate,
         out_ref[...] = y
 
 
+def fir_mp_bank_pallas(
+    x: jax.Array,
+    H: jax.Array,
+    gamma: jax.Array,
+    *,
+    accumulate: bool = False,
+    iters: int = DEFAULT_ITERS,
+    block_b: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Multi-filter variant: x (B, N), H (F, M) -> (F, B, N) or (B, F).
+
+    Grid covers (batch_tile, filter) with the filter axis innermost, so the
+    (block_b, N) signal block's index map is constant across the F inner
+    steps: Pallas keeps it VMEM-resident and only the (1, M) tap row is
+    re-fetched per filter. The per-filter path re-reads the signal from HBM
+    F times; here one read serves the whole octave.
+    """
+    B, N = x.shape
+    F, M = H.shape
+    b_pad = (-B) % block_b
+    n_pad = (-N) % 128
+    xp = jnp.pad(x, ((0, b_pad), (0, n_pad)))
+    Bp, Np = xp.shape
+    H = H.astype(x.dtype)
+    gamma_arr = jnp.asarray(gamma, dtype=x.dtype).reshape(1, 1)
+
+    if accumulate:
+        out_spec = pl.BlockSpec((block_b, 1), lambda i, j: (i, j))
+        out_shape = jax.ShapeDtypeStruct((Bp, F), x.dtype)
+    else:
+        out_spec = pl.BlockSpec((1, block_b, Np), lambda i, j: (j, i, 0))
+        out_shape = jax.ShapeDtypeStruct((F, Bp, Np), x.dtype)
+
+    out = pl.pallas_call(
+        functools.partial(_fir_mp_bank_kernel, iters=iters, M=M,
+                          accumulate=accumulate, valid_n=N),
+        grid=(Bp // block_b, F),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_b, Np), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, M), lambda i, j: (j, 0)),
+        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(gamma_arr, xp, H)
+
+    if accumulate:
+        return out[:B, :]
+    return out[:, :B, :N]
+
+
+def _fir_mp_bank_kernel(gamma_ref, x_ref, h_ref, out_ref, *, iters, M,
+                        accumulate, valid_n):
+    y = _fir_mp_body(x_ref[...], h_ref, gamma_ref[0, 0], iters=iters, M=M)
+    if accumulate:
+        n_idx = jax.lax.broadcasted_iota(jnp.int32, y.shape, 1)
+        y = jnp.where(n_idx < valid_n, y, 0.0)
+        out_ref[...] = jnp.sum(jnp.maximum(y, 0.0), axis=-1, keepdims=True)
+    else:
+        out_ref[...] = y[None]
+
+
 def fir_mp_pallas(
     x: jax.Array,
     h: jax.Array,

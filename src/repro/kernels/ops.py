@@ -125,3 +125,32 @@ def fir_mp_accumulate(x: jax.Array, h: jax.Array, gamma,
     s = _fir.fir_mp_pallas(x2, h, gamma, accumulate=True, iters=iters,
                            interpret=_interpret())
     return s.reshape(lead)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def fir_mp_bank(x: jax.Array, H: jax.Array, gamma,
+                *, iters: int = _fir.DEFAULT_ITERS):
+    """Multi-filter in-filter MP FIR: x (..., N), H (F, M) -> y (..., F, N).
+
+    One pallas_call covers the whole bank; the signal block is read from HBM
+    once and shared by all F filters (vs F reads with per-filter fir_mp)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _fir.fir_mp_bank_pallas(x2, H, gamma, iters=iters,
+                                interpret=_interpret())      # (F, B, N)
+    y = jnp.moveaxis(y, 0, 1)                                # (B, F, N)
+    return y.reshape(*lead, H.shape[0], x.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def fir_mp_bank_accumulate(x: jax.Array, H: jax.Array, gamma,
+                           *, iters: int = _fir.DEFAULT_ITERS):
+    """Fused bank FIR + HWR + accumulate: x (..., N), H (F, M) -> s (..., F).
+
+    The paper's per-band accumulator readout for a full octave in a single
+    kernel invocation: one HBM read of the signal -> F scalar features."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    s = _fir.fir_mp_bank_pallas(x2, H, gamma, accumulate=True, iters=iters,
+                                interpret=_interpret())      # (B, F)
+    return s.reshape(*lead, H.shape[0])

@@ -27,3 +27,15 @@ def fir_mp_ref(x: jax.Array, h: jax.Array, gamma) -> jax.Array:
 def fir_mp_accumulate_ref(x: jax.Array, h: jax.Array, gamma) -> jax.Array:
     y = fir_mp_ref(x, h, gamma)
     return jnp.sum(jnp.maximum(y, 0.0), axis=-1)
+
+
+def fir_mp_bank_ref(x: jax.Array, H: jax.Array, gamma) -> jax.Array:
+    """Per-band exact MP FIR stacked to (..., F, N): the fir_mp_bank oracle
+    is literally F independent single-filter solves."""
+    return jnp.stack([fir_mp_ref(x, H[f], gamma)
+                      for f in range(H.shape[0])], axis=-2)
+
+
+def fir_mp_bank_accumulate_ref(x: jax.Array, H: jax.Array, gamma) -> jax.Array:
+    y = fir_mp_bank_ref(x, H, gamma)
+    return jnp.sum(jnp.maximum(y, 0.0), axis=-1)

@@ -134,6 +134,8 @@ def roofline(compiled, hlo_text: str, n_chips: int, cfg, cell) -> dict:
     mf = model_flops(cfg, cell)  # global
     global_flops = flops * n_chips
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jaxlibs: one dict per device
+        ca = ca[0] if ca else {}
     return {
         "hlo_flops_per_device": flops,
         "hlo_bytes_per_device": membytes,

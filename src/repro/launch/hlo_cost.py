@@ -124,6 +124,21 @@ _CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
 _TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
 _OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+_PCT_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_operands(operand_str: str) -> list:
+    """Operand names from an instruction's argument list.
+
+    Operands are printed with their full type, e.g.
+    ``dot(f32[128,256]{1,0} %Arg_0.1, f32[256,64]{1,0} %Arg_1.2)`` — only the
+    ``%``-prefixed tokens are names; matching every identifier would return
+    ``f32`` as operand 0 and break the dot/convolution shape lookups. Dumps
+    without ``%`` sigils fall back to the permissive scan (harmless for byte
+    accounting: unknown tokens simply miss the symbol table)."""
+    if "%" in operand_str:
+        return _PCT_OPERAND_RE.findall(operand_str)
+    return [mo.group(1) for mo in _OPERAND_RE.finditer(operand_str)]
 
 
 def parse_module(text: str) -> tuple[dict, Optional[str]]:
@@ -156,7 +171,7 @@ def parse_module(text: str) -> tuple[dict, Optional[str]]:
         if not m:
             continue
         name, shape, op, operand_str, attrs = m.groups()
-        operands = [mo.group(1) for mo in _OPERAND_RE.finditer(operand_str)]
+        operands = _parse_operands(operand_str)
         cur.append(Instr(name, shape, op, operands, attrs))
     return comps, entry
 

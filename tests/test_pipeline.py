@@ -1,0 +1,231 @@
+"""InFilterPipeline: one jit-able audio->decision computation, the fused
+multi-band kernel, and chunked streaming parity with the one-shot path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kernel_machine as km
+from repro.core.filterbank import FilterBank, FilterBankConfig
+from repro.core.pipeline import InFilterPipeline, StreamingState
+from repro.kernels import fir_mp, fir_mp_bank, fir_mp_bank_accumulate
+from repro.kernels import ref
+
+
+def _pipeline(num_octaves=4, filters_per_octave=3, num_classes=5,
+              fs=8000.0, **cfg_over) -> InFilterPipeline:
+    kw = dict(mode="mp", gamma_f=4.0)
+    kw.update(cfg_over)
+    cfg = FilterBankConfig(fs=fs, num_octaves=num_octaves,
+                           filters_per_octave=filters_per_octave, **kw)
+    fb = FilterBank(cfg)
+    P = cfg.num_filters
+    clf = km.init_params(jax.random.PRNGKey(0), P, num_classes)
+    mu = jax.random.normal(jax.random.PRNGKey(1), (P,)) * 0.1 + 1.0
+    sigma = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (P,))) + 0.5
+    return InFilterPipeline.from_filterbank(fb, clf, mu, sigma)
+
+
+# ---------------------------------------------------------------------------
+# fir_mp_bank kernel (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,N,F,M", [(1, 64, 1, 4), (3, 300, 5, 16),
+                                     (8, 128, 2, 6)])
+def test_fir_mp_bank_matches_reference(B, N, F, M):
+    """One pallas_call over the whole bank == F independent exact solves."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(B + N + F))
+    x = jax.random.normal(k1, (B, N))
+    H = jax.random.normal(k2, (F, M)) * 0.3
+    y = fir_mp_bank(x, H, 2.0)
+    assert y.shape == (B, F, N)
+    yr = ref.fir_mp_bank_ref(x, H, 2.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+
+
+def test_fir_mp_bank_bitwise_matches_single_filter_kernel():
+    """The bank grid must run the SAME bisection as the per-filter kernel:
+    same windows, same operand pairing -> bit-identical band outputs."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(k1, (4, 256))
+    H = jax.random.normal(k2, (5, 16)) * 0.3
+    y = fir_mp_bank(x, H, 2.0)
+    for f in range(H.shape[0]):
+        yf = fir_mp(x, H[f], 2.0)
+        np.testing.assert_array_equal(np.asarray(y[:, f]), np.asarray(yf))
+
+
+@pytest.mark.parametrize("B,N,F,M", [(4, 300, 3, 16), (2, 100, 6, 6)])
+def test_fir_mp_bank_accumulate_matches_reference(B, N, F, M):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    x = jax.random.normal(k1, (B, N))
+    H = jax.random.normal(k2, (F, M)) * 0.3
+    s = fir_mp_bank_accumulate(x, H, 2.0)
+    assert s.shape == (B, F)
+    sr = ref.fir_mp_bank_accumulate_ref(x, H, 2.0)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_vectorized_filterbank_matches_per_filter_loop():
+    """The stacked-tap octave path reproduces the legacy per-filter loop."""
+    from repro.core import mp as mp_mod
+    cfg = FilterBankConfig(fs=4000.0, num_octaves=3, filters_per_octave=4,
+                           mode="mp", gamma_f=4.0)
+    fb = FilterBank(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 512))
+    s_vec = fb.accumulate(x)
+    # legacy formulation: one mp_conv1d per filter, Python loop
+    s_ref = []
+    x_o = x
+    for o in range(cfg.num_octaves):
+        for p in range(cfg.filters_per_octave):
+            h = jnp.asarray(fb.bp_taps[o * cfg.filters_per_octave + p])
+            y = mp_mod.mp_conv1d(x_o, h, cfg.gamma_f, exact=False)
+            s_ref.append(jnp.sum(jnp.maximum(y, 0.0), -1) * 2.0 ** o)
+        if o < cfg.num_octaves - 1:
+            lp = jnp.asarray(fb.lp_tap_list[o])
+            x_o = mp_mod.mp_conv1d(x_o, lp, cfg.gamma_f, exact=False)[..., ::2]
+    s_ref = jnp.stack(s_ref, axis=-1)
+    np.testing.assert_allclose(np.asarray(s_vec), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# one-shot pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_predict_jit_compiles_end_to_end():
+    """audio (B, N) -> p (B, C) as ONE jit computation, pipeline as pytree."""
+    pipe = _pipeline()
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 1024))
+    lowered = jax.jit(InFilterPipeline.predict).lower(pipe, x)
+    compiled = lowered.compile()      # would raise on non-jittable path
+    p = compiled(pipe, x)
+    assert p.shape == (3, 5)
+    assert bool(jnp.all(jnp.abs(p) <= 1.0 + 1e-5))
+    # bound-method jit (captures the pipeline as constants) agrees; constant
+    # folding fuses differently, so f32 round-off rather than bit equality
+    p2 = jax.jit(pipe.predict)(x)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p2), atol=2e-5)
+
+
+def test_pipeline_is_pytree_serializable():
+    pipe = _pipeline()
+    leaves, treedef = jax.tree_util.tree_flatten(pipe)
+    assert all(isinstance(l, jax.Array) for l in leaves)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.config == pipe.config
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 512))
+    np.testing.assert_array_equal(np.asarray(pipe.predict(x)),
+                                  np.asarray(rebuilt.predict(x)))
+
+
+def test_fit_returns_working_pipeline():
+    from repro.core.trainer import TrainConfig
+    from repro.data.acoustic import make_esc10_like
+    ds = make_esc10_like(per_class_train=3, per_class_test=1,
+                         fs=4000.0, seconds=0.25)
+    cfg = FilterBankConfig(fs=4000.0, num_octaves=3, filters_per_octave=3,
+                           mode="mp", gamma_f=4.0)
+    pipe, losses = InFilterPipeline.fit(
+        cfg, ds.x_train, ds.y_train, num_classes=10,
+        train_cfg=TrainConfig(num_steps=30, lr=0.5))
+    assert len(losses) == 30 and losses[-1] <= losses[0] + 1e-3
+    p = pipe.predict(jnp.asarray(ds.x_test))
+    assert p.shape == (ds.x_test.shape[0], 10)
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+
+N_STREAM = 2000
+
+
+def _run_stream(pipe, x, chunk_len):
+    B, N = x.shape
+    state = pipe.init_state(B)
+    p = None
+    for i in range(0, N, chunk_len):
+        state, p = pipe.step(state, x[:, i:i + chunk_len])
+    return state, p
+
+
+@pytest.mark.parametrize("chunk_len", [160, 1000, N_STREAM])
+def test_streaming_matches_one_shot(chunk_len):
+    """step() over chunks == predict() over the whole clip. The FIR windows
+    (and therefore every MP solve) are sample-identical; only accumulator
+    summation order differs, so parity is f32-tight."""
+    pipe = _pipeline()
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, N_STREAM))
+    p_one = pipe.predict(x)
+    s_one = pipe.features(x) * pipe.sigma + pipe.mu   # raw accumulators
+    state, p_stream = _run_stream(pipe, x, chunk_len)
+    np.testing.assert_allclose(np.asarray(state.acc), np.asarray(s_one),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(p_stream), np.asarray(p_one),
+                               atol=1e-4)
+
+
+def test_streaming_odd_chunks_and_tail():
+    """Chunk lengths that are odd (decimator phase exercises both parities)
+    and do not divide N (short final chunk)."""
+    pipe = _pipeline()
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, N_STREAM))
+    p_one = pipe.predict(x)
+    for chunk_len in [77, 333]:
+        _, p_stream = _run_stream(pipe, x, chunk_len)
+        np.testing.assert_allclose(np.asarray(p_stream), np.asarray(p_one),
+                                   atol=1e-4, err_msg=f"chunk={chunk_len}")
+
+
+def test_streaming_matches_one_shot_pallas():
+    """Same parity through the fused Pallas bank kernels (interpret mode)."""
+    pipe = _pipeline(num_octaves=2, filters_per_octave=3, fs=4000.0,
+                     use_pallas=True)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 512))
+    p_one = pipe.predict(x)
+    _, p_stream = _run_stream(pipe, x, 128)
+    np.testing.assert_allclose(np.asarray(p_stream), np.asarray(p_one),
+                               atol=1e-4)
+
+
+def test_streaming_mac_mode():
+    pipe = _pipeline(num_octaves=3, mode="mac")
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 1000))
+    p_one = pipe.predict(x)
+    _, p_stream = _run_stream(pipe, x, 160)
+    np.testing.assert_allclose(np.asarray(p_stream), np.asarray(p_one),
+                               atol=1e-4)
+
+
+def test_streaming_state_is_fixed_memory():
+    """State sizes depend only on (B, config), never on stream length."""
+    pipe = _pipeline()
+    x = jax.random.normal(jax.random.PRNGKey(12), (2, N_STREAM))
+    state0 = pipe.init_state(2)
+    state, _ = _run_stream(pipe, x, 250)
+    sizes0 = jax.tree.map(lambda a: a.shape, state0)
+    sizes1 = jax.tree.map(lambda a: a.shape, state)
+    assert sizes0 == sizes1
+    assert int(state.consumed[0]) == N_STREAM
+    # octave o consumed floor-halves per stage
+    n = N_STREAM
+    for o in range(1, pipe.config.num_octaves):
+        n = (n + 1) // 2
+        assert int(state.consumed[o]) == n
+
+
+def test_step_is_jittable_with_pipeline_argument():
+    pipe = _pipeline(num_octaves=3)
+    x = jax.random.normal(jax.random.PRNGKey(13), (2, 600))
+    p_one = pipe.predict(x)
+    step = jax.jit(InFilterPipeline.step)
+    state = pipe.init_state(2)
+    for i in range(0, 600, 200):
+        state, p = step(pipe, state, x[:, i:i + 200])
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p_one), atol=1e-4)
