@@ -18,6 +18,8 @@ Emits ``name,us_per_call,derived`` CSV rows like every other benchmark.
 
 from __future__ import annotations
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -58,9 +60,19 @@ def seed_accumulate_fn(fb: FilterBank):
     return accumulate
 
 
-def main():
-    cfg = FilterBankConfig(fs=16000.0, num_octaves=6, filters_per_octave=5,
-                           mode="mp", gamma_f=4.0)
+def main(argv=()):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI bit-rot checks")
+    args = ap.parse_args(argv)
+    global B, N, CHUNK
+    if args.smoke:
+        B, N, CHUNK = 4, 4000, 400
+        cfg = FilterBankConfig(fs=4000.0, num_octaves=4,
+                               filters_per_octave=3, mode="mp", gamma_f=4.0)
+    else:
+        cfg = FilterBankConfig(fs=16000.0, num_octaves=6,
+                               filters_per_octave=5, mode="mp", gamma_f=4.0)
     fb = FilterBank(cfg)
     P = cfg.num_filters
     clf = km.init_params(jax.random.PRNGKey(0), P, 10)
@@ -112,4 +124,5 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(sys.argv[1:])

@@ -11,6 +11,8 @@ Emits ``name,us_per_call,derived`` CSV rows. Modules:
   microbench           kernel reference timings
   pipeline_e2e         unified audio->decision pipeline: one-shot vs
                        streaming vs the seed per-filter path
+  serve_streams        slot-batched StreamServer vs naive per-stream
+                       step loop (+ quantized streaming parity)
 """
 
 from __future__ import annotations
@@ -22,6 +24,7 @@ import traceback
 MODULES = [
     "microbench",
     "pipeline_e2e",
+    "serve_streams",
     "filterbank_response",
     "hardware_cost",
     "accuracy_fsdd",

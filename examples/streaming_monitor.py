@@ -50,15 +50,18 @@ def main():
     print(f"one-shot test acc: {acc:.3f}")
 
     # 3. continuous mode: a 'long recording' of back-to-back events, chunked
-    #    into 10 ms frames — one stream per event so each decision is clean
+    #    into 10 ms frames — one session slot per event so each decision is
+    #    clean. The slot-batched SessionState carries FIR delay lines,
+    #    per-slot decimator phases, accumulators, and the running amax;
+    #    apply() is the same entry point as the one-shot call above.
     order = np.argsort(ds.y_test, kind="stable")
     stream = jnp.asarray(ds.x_test[order])            # (E, N) events
     chunk = int(fs * 0.010)                           # 10 ms sensor frames
-    step = jax.jit(InFilterPipeline.step)
-    state = pipe.init_state(stream.shape[0])
+    apply_fn = jax.jit(InFilterPipeline.apply)
+    state = pipe.init_session(stream.shape[0])
     n = stream.shape[1]
     for i in range(0, n, chunk):
-        state, p_now = step(pipe, state, stream[:, i:i + chunk])
+        p_now, state = apply_fn(pipe, stream[:, i:i + chunk], state)
     pred = np.asarray(jnp.argmax(p_now, -1))
     truth = ds.y_test[order]
     acc_stream = float((pred == truth).mean())
@@ -71,6 +74,25 @@ def main():
         print(f"  event {e}: true={ESC10_CLASSES[truth[e]]:14s} "
               f"decided={ESC10_CLASSES[pred[e]]:14s} "
               f"confidence={float(p_now[e, pred[e]]):+.2f}")
+
+    # 4. deployment-shaped serving: the same events as LOGICAL sessions on a
+    #    fixed-capacity StreamServer — sensors come and go, the server
+    #    multiplexes them onto slots and one compiled call advances all
+    #    resident streams per packet
+    from repro.serving import StreamServer
+    events = np.asarray(stream)
+    server = StreamServer(pipe, capacity=min(4, events.shape[0]),
+                          max_chunk=max(chunk, 16))
+    ids = [f"sensor-{e}" for e in range(server.capacity)]
+    for sid in ids:
+        server.open(sid)
+    results = []
+    for i in range(0, n, chunk):
+        results = server.feed([(sid, events[e, i:i + chunk])
+                               for e, sid in enumerate(ids)])
+    ok = sum(r.label == truth[e] for e, r in enumerate(results))
+    print(f"served    {len(ids)} sessions x {n // chunk} packets: "
+          f"{ok}/{len(ids)} correct, stats={server.stats()}")
 
 
 if __name__ == "__main__":

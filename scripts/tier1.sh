@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the gate every PR must keep green (see ROADMAP.md).
+# Runs the test suite, then the benchmark smoke pass (bench_smoke.sh) so
+# benchmark bit-rot is caught here rather than at release time.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+scripts/bench_smoke.sh

@@ -16,6 +16,12 @@ Multi-host note: in a true multi-host deployment each host writes only the
 shards it owns (addressable_shards); here every array is fully addressable
 so we write whole arrays — the manifest format already carries the sharding
 metadata a per-shard writer needs.
+
+Besides the step-indexed train checkpoints, the manager stores NAMED
+objects (``save_named``/``restore_named``) — small atomic key-value
+snapshots used by the serving layer to park evicted stream sessions
+(per-slot DSP registers + decision history) so a reopened session resumes
+exactly where it left off.
 """
 
 from __future__ import annotations
@@ -121,6 +127,83 @@ class CheckpointManager:
         steps = self.all_steps()
         for s in steps[: -self.keep_last] if self.keep_last else []:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- named objects (serving sessions etc.) -------------------------------
+
+    @staticmethod
+    def _check_name(name: str) -> str:
+        if not name or not all(ch.isalnum() or ch in "-_." for ch in name):
+            raise ValueError(f"checkpoint name {name!r}: use [A-Za-z0-9._-]")
+        return name
+
+    def _named_dir(self, name: str) -> str:
+        return os.path.join(self.dir, f"named_{self._check_name(name)}")
+
+    def has_named(self, name: str) -> bool:
+        return os.path.isdir(self._named_dir(name))
+
+    def save_named(self, name: str, state: Any, meta: Optional[dict] = None):
+        """Atomically persist a small pytree under a string key. ``meta`` is
+        arbitrary JSON-serializable side data (e.g. a session's decision
+        history). Synchronous: named objects are tiny (KBs)."""
+        leaves_with_paths, _ = jax.tree_util.tree_flatten_with_path(state)
+        host_leaves = [(_path_str(p), np.asarray(jax.device_get(x)))
+                       for p, x in leaves_with_paths]
+        manifest = {
+            "name": name,
+            "time": time.time(),
+            "meta": meta,
+            "leaves": [{"path": p, "shape": list(a.shape),
+                        "dtype": str(a.dtype)} for p, a in host_leaves],
+        }
+        final = self._named_dir(name)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for i, (_, arr) in enumerate(host_leaves):
+            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        return final
+
+    def restore_named(self, name: str, state_like: Any):
+        """Load a named object into the structure of ``state_like``.
+        Returns ``(state, meta)``."""
+        d = self._named_dir(name)
+        if not os.path.isdir(d):
+            raise FileNotFoundError(f"no named checkpoint {name!r} in "
+                                    f"{self.dir}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_path = {leaf["path"]: i for i, leaf in enumerate(manifest["leaves"])}
+        leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(
+            state_like)
+        new_leaves = []
+        for p, like in leaves_with_paths:
+            key = _path_str(p)
+            if key not in by_path:
+                raise KeyError(f"named checkpoint {name!r} missing leaf {key}")
+            arr = np.load(os.path.join(d, f"leaf_{by_path[key]:05d}.npy"))
+            if tuple(arr.shape) != tuple(like.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"expected {like.shape}")
+            if np.dtype(arr.dtype) != np.dtype(like.dtype):
+                # named objects promise bit-exact resume; a silent cast
+                # (e.g. f32 session row into an f16 server) breaks that
+                raise ValueError(
+                    f"dtype mismatch for {key}: ckpt {arr.dtype} vs "
+                    f"expected {np.dtype(like.dtype)}")
+            new_leaves.append(jax.device_put(arr))
+        return (jax.tree_util.tree_unflatten(treedef, new_leaves),
+                manifest.get("meta"))
+
+    def delete_named(self, name: str) -> None:
+        shutil.rmtree(self._named_dir(name), ignore_errors=True)
 
     # -- restore ------------------------------------------------------------
 

@@ -26,3 +26,32 @@ TRAIN = TrainConfig(
 
 # deployment quantization (Fig. 8: stable down to 8 bits)
 QUANT_BITS = 8
+
+# reduced same-family config for CPU smoke paths (serve demo, benchmarks)
+FILTERBANK_SMOKE = FILTERBANK._replace(fs=4000.0, num_octaves=3,
+                                       filters_per_octave=3)
+
+
+def make_pipeline(smoke: bool = False, seed: int = 0,
+                  quant_bits: int | None = None,
+                  num_classes: int = 10):
+    """Build a deployable ``InFilterPipeline`` at the paper's configuration.
+
+    The classifier is randomly initialized with identity standardization —
+    serving-path demos and throughput benchmarks exercise the datapath, not
+    accuracy; use ``InFilterPipeline.fit`` for a trained pipeline."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import kernel_machine as km
+    from repro.core.filterbank import FilterBank
+    from repro.core.pipeline import InFilterPipeline
+
+    cfg = FILTERBANK_SMOKE if smoke else FILTERBANK
+    if quant_bits is not None:
+        cfg = cfg._replace(quant_bits=quant_bits)
+    fb = FilterBank(cfg)
+    P = cfg.num_filters
+    clf = km.init_params(jax.random.PRNGKey(seed), P, num_classes)
+    return InFilterPipeline.from_filterbank(fb, clf, jnp.zeros((P,)),
+                                            jnp.ones((P,)))

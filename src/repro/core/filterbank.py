@@ -39,8 +39,11 @@ __all__ = [
     "design_bandpass",
     "greenwood",
     "single_fir",
+    "single_fir_valid",
     "bank_fir",
+    "bank_fir_valid",
     "bank_accumulate",
+    "quant_signal",
     "multirate_band_outputs",
     "multirate_accumulate",
 ]
@@ -122,6 +125,37 @@ def bank_fir(x: jax.Array, taps: jax.Array, cfg: "FilterBankConfig") -> jax.Arra
                                  solver=cfg.solver)
 
 
+def single_fir_valid(x: jax.Array, h: jax.Array,
+                     cfg: "FilterBankConfig") -> jax.Array:
+    """Valid-mode FIR: x (B, N), h (M,) -> (B, N-M+1); window p covers
+    x[p..p+M-1], no zero-padding. The streaming hot path splices its
+    delay-line history in front of the chunk and uses this to skip the
+    solves the padded form would compute and immediately slice away.
+    Shared positions match the padded form bitwise."""
+    M = h.shape[0]
+    if cfg.mode == "mac":
+        return _mac_fir(x, h)[..., M - 1:]
+    if cfg.use_pallas:
+        from repro.kernels import fir_mp
+        return fir_mp(x, h, cfg.gamma_f)[..., M - 1:]
+    return mp_mod.mp_conv1d(x, h, cfg.gamma_f, exact=False,
+                            solver=cfg.solver, pad=False)
+
+
+def bank_fir_valid(x: jax.Array, taps: jax.Array,
+                   cfg: "FilterBankConfig") -> jax.Array:
+    """Valid-mode whole-octave band-pass: x (B, N), taps (F, M) ->
+    (B, F, N-M+1). See ``single_fir_valid``."""
+    M = taps.shape[-1]
+    if cfg.mode == "mac":
+        return _mac_fir_bank(x, taps)[..., M - 1:]
+    if cfg.use_pallas:
+        from repro.kernels import fir_mp_bank
+        return fir_mp_bank(x, taps, cfg.gamma_f)[..., M - 1:]
+    return mp_mod.mp_conv1d_bank(x, taps, cfg.gamma_f, exact=False,
+                                 solver=cfg.solver, pad=False)
+
+
 def bank_accumulate(x: jax.Array, taps: jax.Array,
                     cfg: "FilterBankConfig") -> jax.Array:
     """s_p = sum_n HWR(B_p(n)) for one octave: x (B, N), taps (F, M) -> (B, F).
@@ -135,11 +169,33 @@ def bank_accumulate(x: jax.Array, taps: jax.Array,
     return jnp.sum(jnp.maximum(y, 0.0), axis=-1)
 
 
+def quant_signal(x: jax.Array, cfg: "FilterBankConfig",
+                 amax: jax.Array | None = None) -> jax.Array:
+    """Symmetric per-stream signal quantization (no-op without quant_bits).
+
+    Each batch row is an independent sensor stream, so the scale is that
+    row's own amax — never the batch-global max, which would couple streams
+    through a shared ADC range. ``amax`` overrides the per-row max; the
+    session streaming path passes its running amax (shape ``(S,)``) so that
+    chunked deployment quantizes exactly like the one-shot path.
+    """
+    if cfg.quant_bits is None:
+        return x
+    if amax is None:
+        amax = jax.lax.stop_gradient(
+            jnp.max(jnp.abs(x), axis=-1, keepdims=True))
+    else:
+        amax = jnp.asarray(amax)
+        if amax.ndim == x.ndim - 1:
+            amax = amax[..., None]
+    return fake_quant(x, cfg.quant_bits, amax=amax)
+
+
 def multirate_band_outputs(x: jax.Array, bp_taps, lp_taps,
-                           cfg: "FilterBankConfig") -> list:
+                           cfg: "FilterBankConfig",
+                           amax: jax.Array | None = None) -> list:
     """Raw band-pass outputs per octave: list of (B, F, N/2^o) arrays."""
-    if cfg.quant_bits is not None:
-        x = fake_quant(x, cfg.quant_bits)
+    x = quant_signal(x, cfg, amax)
     outs = []
     x_o = x
     for o in range(cfg.num_octaves):
@@ -150,15 +206,15 @@ def multirate_band_outputs(x: jax.Array, bp_taps, lp_taps,
 
 
 def multirate_accumulate(x: jax.Array, bp_taps, lp_taps,
-                         cfg: "FilterBankConfig") -> jax.Array:
+                         cfg: "FilterBankConfig",
+                         amax: jax.Array | None = None) -> jax.Array:
     """Full-bank accumulator readout: x (B, N) -> s (B, P).
 
     Octave o has N/2^o samples; renormalize by 2^o so every band contributes
     at the same scale (the FPGA's per-band accumulators are read out raw, but
     the STD stage removes scale anyway; renormalizing keeps the pre-STD
     dynamic range uniform for fixed-point analysis)."""
-    if cfg.quant_bits is not None:
-        x = fake_quant(x, cfg.quant_bits)
+    x = quant_signal(x, cfg, amax)
     parts = []
     x_o = x
     for o in range(cfg.num_octaves):

@@ -22,7 +22,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.mp import mp_exact
+from repro.core.mp import mp_exact, mp_newton
 
 __all__ = ["MPKernelMachineParams", "init_params", "forward", "forward_baseline"]
 
@@ -49,17 +49,25 @@ def init_params(key: jax.Array, num_templates: int, num_classes: int,
 
 
 def forward(params: MPKernelMachineParams, K: jax.Array,
-            gamma_scale: float = 1.0) -> jax.Array:
+            gamma_scale: float = 1.0, exact: bool = True) -> jax.Array:
     """K: (B, P) kernel vector -> p: (B, C) signed confidence in [-1, 1].
 
     gamma_scale multiplies gamma1 — the handle used by gamma annealing
     (anneal from a large, nearly-linear MP towards the target gamma).
+
+    ``exact=False`` solves the MP reductions with the fixed-iteration
+    monotone-Newton scheme instead of the sort-based closed form — the
+    non-differentiable inference hot path (the serving readout runs it for
+    every slot on every chunk; sorts are the slow part on CPU and would be
+    on the TPU VPU too). Training keeps the default exact solver for its
+    custom VJP.
     """
     wp = jax.nn.relu(params.w_pos)  # keep the ROM entries nonnegative
     wn = jax.nn.relu(params.w_neg)
     gamma1 = jnp.exp(params.log_gamma1) * gamma_scale
     Kp = K[:, :, None]          # (B, P, 1)
     Kn = -K[:, :, None]
+    solve = mp_exact if exact else mp_newton
 
     # operand lists: 2P + 1 entries reduced by MP along the last axis
     def z_of(a, b, bias):  # a, b: (P, C); pairs (a_i + K_i, b_i - K_i)
@@ -67,12 +75,12 @@ def forward(params: MPKernelMachineParams, K: jax.Array,
         bias_col = jnp.broadcast_to(bias[None, None, :],
                                     (ops.shape[0], 1, ops.shape[2]))
         ops = jnp.concatenate([ops, bias_col], axis=1)  # (B, 2P+1, C)
-        return mp_exact(jnp.moveaxis(ops, 1, -1), gamma1)  # (B, C)
+        return solve(jnp.moveaxis(ops, 1, -1), gamma1)  # (B, C)
 
     z_pos = z_of(wp, wn, params.b_pos)      # MP([w+ + K, w- - K, b+])
     z_neg = z_of(wn, wp, params.b_neg)      # MP([w+ - K, w- + K, b-])
     # normalize: z = MP([z+, z-], gamma_n=1)
-    z = mp_exact(jnp.stack([z_pos, z_neg], axis=-1), 1.0)
+    z = solve(jnp.stack([z_pos, z_neg], axis=-1), 1.0)
     p_pos = jax.nn.relu(z_pos - z)
     p_neg = jax.nn.relu(z_neg - z)
     return p_pos - p_neg

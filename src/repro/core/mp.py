@@ -281,20 +281,31 @@ def mp_conv1d(
     gamma: jax.Array,
     exact: bool = True,
     solver: str = "newton",
+    pad: bool = True,
 ) -> jax.Array:
     """Multiplierless FIR filtering (paper eq. 8 + 9): y(n) = MP-dot(h, x[n-M+1..n]).
 
     x: (..., N) signal; h: (M,) taps. 'Valid' part is y[M-1:]; we left-pad
     with zeros so y has the same length as x (matches streaming hardware that
-    starts from zeroed register banks). With exact=False, ``solver`` picks
-    the fixed-iteration scheme: "newton" (fast software default) or
-    "bisect" (the hardware's add/compare/shift loop).
+    starts from zeroed register banks). ``pad=False`` computes ONLY the
+    valid positions ((..., N-M+1) output, window n = x[n..n+M-1]) — the
+    streaming hot path, whose delay-line splice already supplies the
+    history, uses this to skip solves that would be sliced away. Window
+    contents are identical either way, so the shared positions match
+    bitwise. With exact=False, ``solver`` picks the fixed-iteration scheme:
+    "newton" (fast software default) or "bisect" (the hardware's
+    add/compare/shift loop).
     """
     M = h.shape[0]
-    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(M - 1, 0)])
-    # windows: (..., N, M) — window n holds x[n-M+1..n] with taps reversed to
-    # implement the convolution sum h(k) x(n-k).
-    idx = jnp.arange(x.shape[-1])[:, None] + jnp.arange(M)[None, :]
+    if pad:
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(M - 1, 0)])
+        n_out = x.shape[-1]
+    else:
+        xp = x
+        n_out = x.shape[-1] - M + 1
+    # windows: (..., n_out, M) — window n holds x[n-M+1..n] with taps
+    # reversed to implement the convolution sum h(k) x(n-k).
+    idx = jnp.arange(n_out)[:, None] + jnp.arange(M)[None, :]
     win = xp[..., idx]  # gather windows
     hr = h[::-1]
     if exact:
@@ -320,6 +331,7 @@ def mp_conv1d_bank(
     exact: bool = True,
     chunk_n: Optional[int] = 1024,
     solver: str = "newton",
+    pad: bool = True,
 ) -> jax.Array:
     """Multi-filter MP FIR: x (..., N), H (F, M) -> y (..., F, N).
 
@@ -331,7 +343,8 @@ def mp_conv1d_bank(
     solve re-reads cache-resident operands instead of streaming the full
     (F, B, N, M) tensor from DRAM each iteration. Window contents are
     unchanged by chunking, so results match ``mp_conv1d(x, H[f], gamma)``
-    exactly per band.
+    exactly per band. ``pad=False``: valid positions only, (..., F, N-M+1)
+    (see ``mp_conv1d``).
     """
     F, M = H.shape
     lead = x.shape[:-1]
@@ -339,27 +352,29 @@ def mp_conv1d_bank(
     x2 = x.reshape(-1, N)
     B = x2.shape[0]
     hr = H[:, ::-1].reshape(F, 1, 1, M)
+    n_out = N if pad else N - M + 1
 
     def solve(win):  # (B, Q, M) -> (F, B, Q)
         if exact:
             return mp_dot(win[None], hr, gamma, exact=True)
         return _mp_dot_fast(win[None], hr, gamma, solver)
 
-    if chunk_n is None or N <= chunk_n:
-        xp = jnp.pad(x2, ((0, 0), (M - 1, 0)))
-        idx = jnp.arange(N)[:, None] + jnp.arange(M)[None, :]
-        y = solve(xp[:, idx])                          # (F, B, N)
+    if chunk_n is None or n_out <= chunk_n:
+        xp = jnp.pad(x2, ((0, 0), (M - 1, 0))) if pad else x2
+        idx = jnp.arange(n_out)[:, None] + jnp.arange(M)[None, :]
+        y = solve(xp[:, idx])                          # (F, B, n_out)
     else:
         Q = chunk_n
-        xq = jnp.pad(x2, ((0, 0), (0, (-N) % Q)))
-        Np = xq.shape[1]
-        xp = jnp.pad(xq, ((0, 0), (M - 1, 0)))
+        xp = jnp.pad(x2, ((0, 0), (M - 1, 0))) if pad else x2
+        # right-pad so every Q-block of output positions has a full segment
+        n_blocks = -(-n_out // Q)
+        xp = jnp.pad(xp, ((0, 0), (0, n_blocks * Q + M - 1 - xp.shape[1])))
         idx = jnp.arange(Q)[:, None] + jnp.arange(M)[None, :]
 
         def one(start):  # windows for output positions [start, start+Q)
             seg = jax.lax.dynamic_slice_in_dim(xp, start, Q + M - 1, axis=1)
             return solve(seg[:, idx])
 
-        ys = jax.lax.map(one, jnp.arange(Np // Q) * Q)  # (nc, F, B, Q)
-        y = jnp.moveaxis(ys, 0, 2).reshape(F, B, Np)[..., :N]
-    return jnp.moveaxis(y, 0, 1).reshape(*lead, F, N)
+        ys = jax.lax.map(one, jnp.arange(n_blocks) * Q)  # (nc, F, B, Q)
+        y = jnp.moveaxis(ys, 0, 2).reshape(F, B, n_blocks * Q)[..., :n_out]
+    return jnp.moveaxis(y, 0, 1).reshape(*lead, F, n_out)

@@ -3,32 +3,49 @@
 ``InFilterPipeline`` packs everything the deployed classifier needs —
 filter-bank config, precomputed FIR taps, trained MP kernel-machine weights,
 and the feature standardization statistics — into one pytree-serializable
-object with two entry points:
+object with ONE entry point:
 
-* ``predict(x)``: one-shot ``audio (B, N) -> p (B, C)``. The whole multirate
-  bank -> HWR/accumulate -> standardize -> MP kernel machine path traces as
-  a single computation, so ``jax.jit(pipeline.predict)`` compiles the full
-  audio->confidence graph in one unit (the "only classified data leaves the
-  device" deployment mode).
+* ``apply(x, state=None)``: the unified surface.
 
-* ``init_state(batch)`` / ``step(state, chunk)``: stateful streaming. The
-  state carries, per octave, the FIR delay-line registers (the last
-  ``max(bp_taps, lp_taps) - 1`` input samples), the decimator phase (global
-  sample parity), and the running per-band accumulators — exactly the
-  FPGA's zeroed-register streaming semantics, so arbitrarily long audio
-  classifies in memory that does not grow with stream length. Feeding a
-  signal chunk-by-chunk reproduces the one-shot band outputs sample-for-
-  sample (identical FIR windows -> identical MP solves); only the
-  accumulator summation order differs, so parity holds to float32
-  round-off rather than bitwise. Exception: with ``quant_bits`` set,
-  fake_quant scales by the chunk-local amax instead of the whole-signal
-  amax, so quantized streaming only matches a deployment whose
-  quantization window equals the chunking (see ROADMAP: carry a running
-  amax in StreamingState).
+  - **Stateless** (``state=None``): one-shot ``audio (B, N) -> p (B, C)``.
+    The whole multirate bank -> HWR/accumulate -> standardize -> MP kernel
+    machine path traces as a single computation, so
+    ``jax.jit(InFilterPipeline.apply)`` compiles the full audio->confidence
+    graph in one unit (the "only classified data leaves the device"
+    deployment mode). ``predict(x)`` remains as an alias.
 
-Chunk lengths may vary call-to-call (jit retraces per length); within a
-call the octave-level valid lengths are data-dependent scalars handled with
-masking + dynamic slices, so ``step`` is fully jit-able.
+  - **Stateful** (``state=`` a :class:`SessionState`): slot-batched
+    streaming. The state packs S logical sensor streams ("slots") into
+    stacked ``(S, ...)`` registers — per-octave FIR delay lines (the last
+    ``max(bp_taps, lp_taps) - 1`` input samples), per-slot decimator phases
+    (octave sample parities), running per-band accumulators, the running
+    signal amax used for deployment-faithful quantization, per-slot sample
+    counts, and a per-slot active mask. Feeding a chunk returns
+    ``(p, state')``; arbitrarily long audio classifies in memory that does
+    not grow with stream length — exactly the FPGA's zeroed-register
+    streaming semantics, multiplexed S-wide.
+
+Per-slot ``valid`` counts let one compiled call carry streams of different
+chunk lengths (shorter rows are zero-padded and masked); a slot with zero
+valid samples — or ``active=False`` — is provably inert: its registers are
+bit-identical before and after the call, and it never perturbs other slots
+(every op in the step is row-independent).
+
+With ``quant_bits`` set, the chunk is quantized against the RUNNING amax
+carried in the state (updated before scaling), matching the one-shot path's
+per-stream amax semantics: once a stream's running amax equals its global
+amax (e.g. the peak sits in the first chunk, or the state was seeded with a
+calibrated ``amax``), streamed band outputs are bit-identical to the
+one-shot deployment.
+
+Chunk lengths may vary call-to-call (jit retraces per length — the serving
+layer buckets lengths to powers of two to bound this); within a call the
+octave-level valid lengths are data-dependent per-slot vectors handled with
+masking + per-row dynamic slices, so the step is fully jit-able.
+
+Migration (PR 2): ``init_state``/``step``/``StreamingState`` — the one-
+cohort streaming API — remain as thin shims over the session path and will
+go away; new code should use ``init_session``/``apply``/``SessionState``.
 """
 
 from __future__ import annotations
@@ -40,25 +57,63 @@ import jax.numpy as jnp
 
 from repro.core import kernel_machine as km
 from repro.core import filterbank as fbm
+from repro.core import mp as mp_mod
 from repro.core.filterbank import FilterBank, FilterBankConfig
-from repro.core.quant import fake_quant
 
-__all__ = ["InFilterPipeline", "StreamingState"]
+__all__ = [
+    "InFilterPipeline",
+    "SessionState",
+    "StreamingState",
+    "clear_slots",
+    "set_active",
+    "take_slot",
+    "put_slot",
+]
 
 
-class StreamingState(NamedTuple):
-    """Streaming registers carried across chunks (all per-stream-batch B).
+class SessionState(NamedTuple):
+    """Slot-batched streaming registers: S logical streams, stacked (S, ...).
 
-    delays:   per octave, (B, T-1) with T = max(bp_taps, lp_taps): the last
+    delays:   per octave, (S, T-1) with T = max(bp_taps, lp_taps): the last
               T-1 samples of that octave's input signal (zeros at start —
               the FPGA's cleared register bank).
-    consumed: per octave, () int32: octave samples seen so far. Its parity
-              is the ÷2 decimator phase; it also dates the stream.
-    acc:      (B, P) running renormalized per-band accumulators.
+    consumed: per octave, (S,) int32: octave samples seen so far, per slot.
+              Its parity is that slot's ÷2 decimator phase.
+    acc:      (S, P) running renormalized per-band accumulators.
+    amax:     (S,) running max |input| per slot — the symmetric quantization
+              range under ``quant_bits`` (and free calibration telemetry
+              without). Seed it via ``init_session(amax=...)`` for
+              bit-faithful quantized streaming from the first chunk.
+    count:    (S,) int32 input samples consumed per slot (== consumed[0];
+              kept separately so serving code never reaches into octaves).
+    active:   (S,) bool slot admission mask. Inactive slots are forced to
+              zero valid samples, so they are inert no matter what the
+              padded chunk rows contain.
     """
     delays: tuple
     consumed: tuple
     acc: jax.Array
+    amax: jax.Array
+    count: jax.Array
+    active: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.acc.shape[0]
+
+
+class StreamingState(NamedTuple):
+    """DEPRECATED one-cohort streaming state (pre-session API).
+
+    Kept so existing ``init_state``/``step`` callers run unchanged; it is a
+    view of :class:`SessionState` where all B streams share one age (scalar
+    per-octave ``consumed``). ``amax`` is the per-stream running amax that
+    now backs quantized streaming (the old chunk-local scaling is gone).
+    """
+    delays: tuple
+    consumed: tuple
+    acc: jax.Array
+    amax: jax.Array
 
 
 @jax.tree_util.register_pytree_node_class
@@ -111,97 +166,287 @@ class InFilterPipeline:
                                        train_cfg)
         return cls.from_filterbank(fb, params, mu, sigma), losses
 
+    # -- unified entry point -------------------------------------------------
+
+    def apply(self, x: jax.Array, state: SessionState | None = None, *,
+              valid: jax.Array | None = None, return_features: bool = False):
+        """The one inference surface: stateless one-shot or stateful session.
+
+        Stateless (``state=None``): ``x (B, N) -> p (B, C)`` signed per-class
+        confidence in [-1, 1]; with ``return_features=True`` returns
+        ``(p, phi)`` where ``phi (B, P)`` is the standardized kernel vector.
+
+        Stateful: ``x (S, L)`` is one chunk per slot of ``state`` (use zeros
+        for slots with nothing to feed and pass per-slot ``valid`` sample
+        counts; ``None`` means every row is fully valid). Returns
+        ``(p, state')`` — note output-first, unlike the deprecated ``step``
+        — or ``(p, phi, state')`` with ``return_features=True``. ``p`` is
+        each slot's decision from all evidence so far.
+        """
+        x = jnp.asarray(x)
+        if state is None:
+            phi = self.features(x)
+            p = km.forward(self.clf, phi, exact=False)
+            return (p, phi) if return_features else p
+        if isinstance(state, StreamingState):
+            raise TypeError(
+                "apply() takes a SessionState (init_session); for the "
+                "deprecated one-cohort StreamingState keep using step(), or "
+                "migrate: state = pipe.init_session(S); p, state = "
+                "pipe.apply(chunk, state)")
+        if x.ndim != 2 or x.shape[0] != state.capacity:
+            raise ValueError(
+                f"chunk shape {x.shape} does not match session capacity "
+                f"{state.capacity}: expected ({state.capacity}, L)")
+        if valid is None:
+            valid = jnp.full((state.capacity,), x.shape[1], jnp.int32)
+        state, p, phi = self._session_step(state, x, valid)
+        if return_features:
+            return p, phi, state
+        return p, state
+
     # -- one-shot ------------------------------------------------------------
 
     @property
     def num_bands(self) -> int:
         return self.config.num_filters
 
-    def features(self, x: jax.Array) -> jax.Array:
-        """audio (B, N) -> standardized kernel vector Phi (B, P)."""
+    def features(self, x: jax.Array,
+                 amax: jax.Array | None = None) -> jax.Array:
+        """audio (B, N) -> standardized kernel vector Phi (B, P).
+
+        Under ``quant_bits`` the signal is quantized per stream row (scale =
+        that row's amax, or the explicit ``amax`` override), matching the
+        session streaming path's running-amax semantics.
+        """
         s = fbm.multirate_accumulate(x, self.bp_taps, self.lp_taps,
-                                     self.config)
+                                     self.config, amax=amax)
         return (s - self.mu) / self.sigma
 
     def predict(self, x: jax.Array) -> jax.Array:
-        """audio (B, N) -> signed per-class confidence p (B, C) in [-1, 1]."""
-        return km.forward(self.clf, self.features(x))
+        """audio (B, N) -> signed per-class confidence p (B, C) in [-1, 1].
 
-    # -- streaming ------------------------------------------------------------
+        Alias for stateless ``apply(x)``."""
+        return self.apply(x)
+
+    # -- session streaming ---------------------------------------------------
 
     @property
     def _delay_len(self) -> int:
         return max(self.config.bp_taps, self.config.lp_taps) - 1
 
-    def init_state(self, batch: int, dtype=jnp.float32) -> StreamingState:
+    def init_session(self, capacity: int, dtype=jnp.float32, *,
+                     amax: jax.Array | float | None = None,
+                     active: jax.Array | None = None) -> SessionState:
+        """Fresh slot-batched state for ``capacity`` logical streams.
+
+        ``amax`` pre-seeds the running quantization range (scalar or (S,)
+        — e.g. a calibrated ADC full-scale) so quantized streaming is
+        bit-faithful from the first chunk. ``active`` sets the admission
+        mask (default: all slots active; a StreamServer starts all-inactive
+        and admits via open())."""
         c = self.config
         T1 = self._delay_len
-        return StreamingState(
-            delays=tuple(jnp.zeros((batch, T1), dtype)
+        if amax is None:
+            amax_arr = jnp.zeros((capacity,), dtype)
+        else:
+            amax_arr = jnp.broadcast_to(
+                jnp.asarray(amax, dtype), (capacity,))
+        if active is None:
+            active_arr = jnp.ones((capacity,), bool)
+        else:
+            active_arr = jnp.asarray(active, bool)
+        return SessionState(
+            delays=tuple(jnp.zeros((capacity, T1), dtype)
                          for _ in range(c.num_octaves)),
-            consumed=tuple(jnp.zeros((), jnp.int32)
+            consumed=tuple(jnp.zeros((capacity,), jnp.int32)
                            for _ in range(c.num_octaves)),
-            acc=jnp.zeros((batch, c.num_filters), dtype),
+            acc=jnp.zeros((capacity, c.num_filters), dtype),
+            amax=amax_arr,
+            count=jnp.zeros((capacity,), jnp.int32),
+            active=active_arr,
+        )
+
+    def _session_step(self, state: SessionState, chunk: jax.Array,
+                      valid: jax.Array):
+        """Consume one (S, L) slot-batched chunk with per-slot valid counts.
+
+        Returns (state', p (S, C), phi (S, P)). Every operation is row-
+        independent, and rows with zero valid samples keep bit-identical
+        registers (delay slice at offset 0 re-reads the old delays; masked
+        HWR sums vanish), which is what makes padding slots inert.
+        """
+        c = self.config
+        S, L = chunk.shape
+        n = jnp.where(state.active, jnp.asarray(valid, jnp.int32), 0)
+        pos0 = jax.lax.broadcasted_iota(jnp.int32, (S, L), 1)
+        chunk = jnp.where(pos0 < n[:, None], chunk, 0)
+        # running amax update precedes scaling: chunk i is quantized against
+        # max over chunks 0..i, converging to the one-shot global scale
+        amax = jnp.maximum(state.amax, jnp.max(jnp.abs(chunk), axis=-1))
+        if c.quant_bits is not None:
+            chunk = fbm.quant_signal(chunk, c, amax=amax)
+        T1 = self._delay_len
+        M_bp, M_lp = c.bp_taps, c.lp_taps
+        x_o, n_o = chunk, n
+        l_max = L                          # static per-call octave capacity
+        delays, consumed, parts = [], [], []
+        for o in range(c.num_octaves):
+            # splice the delay-line registers in front of the chunk; in-chunk
+            # sample p sits at buf position T1 + p with its full FIR history.
+            # Valid-mode FIR on the trailing window skips the T1 prefix
+            # solves the padded form would compute and throw away — the
+            # kept positions are bitwise the same.
+            buf = jnp.concatenate([state.delays[o], x_o], axis=1)
+            y = fbm.bank_fir_valid(buf[:, T1 - (M_bp - 1):],
+                                   self.bp_taps[o], c)       # (S, F, l_max)
+            pos = jax.lax.broadcasted_iota(jnp.int32, y.shape, y.ndim - 1)
+            hwr = jnp.where(pos < n_o[:, None, None],
+                            jnp.maximum(y, 0.0), 0.0)
+            parts.append(jnp.sum(hwr, axis=-1) * (2.0 ** o))     # (S, F)
+            # register update: the last T1 *valid* samples become the new
+            # delay line — per-slot offsets, so vmap the dynamic slice
+            delays.append(jax.vmap(
+                lambda b, s: jax.lax.dynamic_slice_in_dim(b, s, T1, axis=0)
+            )(buf, n_o))
+            consumed.append(state.consumed[o] + n_o)
+            if o < c.num_octaves - 1:
+                # ÷2 decimator: keep even GLOBAL indices. The first kept
+                # in-chunk index is each slot's stream-parity phase.
+                start = jnp.remainder(state.consumed[o], 2)       # (S,)
+                l_next = (l_max + 1) // 2
+                buf_lp = buf[:, T1 - (M_lp - 1):]
+                if c.mode == "mp" and not c.use_pallas:
+                    # solve ONLY the kept positions: per-slot stride-2
+                    # window gather (kept sample k of slot s ends at
+                    # buf_lp[s, start_s + 2k + M_lp - 1]); halves the LP
+                    # solve count vs filter-then-discard, bit-identically.
+                    buf_lp = jnp.pad(buf_lp, ((0, 0), (0, 1)))
+                    widx = (2 * jnp.arange(l_next)[:, None]
+                            + jnp.arange(M_lp)[None, :])   # (l_next, M_lp)
+                    win = jax.vmap(lambda r, s: r[s + widx])(buf_lp, start)
+                    kept = mp_mod._mp_dot_fast(
+                        win, self.lp_taps[o][::-1], c.gamma_f, c.solver)
+                else:
+                    y_lp = fbm.single_fir_valid(buf_lp, self.lp_taps[o],
+                                                c)        # (S, l_max)
+                    y_pad = jnp.pad(y_lp,
+                                    ((0, 0), (0, 2 * l_next + 1 - l_max)))
+                    kept = jax.vmap(
+                        lambda r, s: jax.lax.dynamic_slice_in_dim(
+                            r, s, 2 * l_next, axis=0)
+                    )(y_pad, start)[:, ::2]
+                x_o = kept                                        # (S, l_next)
+                n_o = jnp.maximum(0, (n_o - start + 1) // 2)
+                l_max = l_next
+        acc = state.acc + jnp.concatenate(parts, axis=-1)
+        state = SessionState(tuple(delays), tuple(consumed), acc, amax,
+                             state.count + n, state.active)
+        phi = (acc - self.mu) / self.sigma
+        return state, km.forward(self.clf, phi, exact=False), phi
+
+    # -- deprecated one-cohort streaming shims -------------------------------
+
+    def init_state(self, batch: int, dtype=jnp.float32) -> StreamingState:
+        """DEPRECATED: use ``init_session``. One cohort of ``batch`` streams
+        that all advance in lockstep (scalar per-octave ages)."""
+        sess = self.init_session(batch, dtype)
+        return StreamingState(
+            delays=sess.delays,
+            consumed=tuple(jnp.zeros((), jnp.int32) for _ in sess.consumed),
+            acc=sess.acc,
+            amax=sess.amax,
         )
 
     def step(self, state: StreamingState,
              chunk: jax.Array) -> tuple[StreamingState, jax.Array]:
-        """Consume one (B, L) chunk; return (state', p (B, C)).
+        """DEPRECATED: use ``apply``. Consume one (B, L) chunk; return
+        (state', p (B, C)).
 
-        p is the decision from all evidence so far — after the last chunk it
-        matches ``predict`` over the concatenated signal to f32 round-off,
-        EXCEPT under ``quant_bits``, where fake_quant's chunk-local amax
-        scale breaks parity with the one-shot global scale (see NOTE below).
+        Thin shim over the session step: lifts the cohort state to a
+        SessionState (broadcast ages), runs the unified path, and collapses
+        back (all rows advance by the same chunk, so ages stay uniform).
+        p matches ``predict`` over the concatenated signal to f32 round-off;
+        under ``quant_bits`` the running-amax state quantizes exactly like
+        one-shot deployment once the stream's peak has been seen.
         """
-        c = self.config
-        if c.quant_bits is not None:
-            # NOTE: fake_quant scales by the chunk's own amax, so quantized
-            # streaming is only bit-faithful when the chunking matches the
-            # deployment's quantization window.
-            chunk = fake_quant(chunk, c.quant_bits)
-        T1 = self._delay_len
-        x_o = chunk
-        l_max = chunk.shape[1]              # static per-call octave capacity
-        n_o = jnp.asarray(chunk.shape[1], jnp.int32)   # dynamic valid count
-        delays, consumed, parts = [], [], []
-        for o in range(c.num_octaves):
-            # splice the delay-line registers in front of the chunk; in-chunk
-            # sample p sits at buf position T1 + p with its full FIR history
-            buf = jnp.concatenate([state.delays[o], x_o], axis=1)
-            y = fbm.bank_fir(buf, self.bp_taps[o], c)[..., T1:]  # (B, F, l_max)
-            pos = jax.lax.broadcasted_iota(jnp.int32, y.shape, y.ndim - 1)
-            hwr = jnp.where(pos < n_o, jnp.maximum(y, 0.0), 0.0)
-            parts.append(jnp.sum(hwr, axis=-1) * (2.0 ** o))     # (B, F)
-            # register updates: last T1 *valid* samples become the new delay
-            delays.append(jax.lax.dynamic_slice_in_dim(buf, n_o, T1, axis=1))
-            consumed.append(state.consumed[o] + n_o)
-            if o < c.num_octaves - 1:
-                y_lp = fbm.single_fir(buf, self.lp_taps[o], c)[..., T1:]
-                # ÷2 decimator: keep even GLOBAL indices. The first kept
-                # in-chunk index is the stream-parity phase of this octave.
-                start = jnp.remainder(state.consumed[o], 2)
-                l_next = (l_max + 1) // 2
-                y_pad = jnp.pad(y_lp, ((0, 0), (0, 2 * l_next + 1 - l_max)))
-                kept = jax.lax.dynamic_slice_in_dim(
-                    y_pad, start, 2 * l_next, axis=1)[:, ::2]
-                x_o = kept                                       # (B, l_next)
-                n_o = jnp.maximum(0, (n_o - start + 1) // 2)
-                l_max = l_next
-        acc = state.acc + jnp.concatenate(parts, axis=-1)
-        state = StreamingState(tuple(delays), tuple(consumed), acc)
-        phi = (acc - self.mu) / self.sigma
-        return state, km.forward(self.clf, phi)
+        chunk = jnp.asarray(chunk)
+        B = chunk.shape[0]
+        sess = SessionState(
+            delays=state.delays,
+            consumed=tuple(jnp.broadcast_to(cns, (B,)).astype(jnp.int32)
+                           for cns in state.consumed),
+            acc=state.acc,
+            amax=state.amax,
+            count=jnp.broadcast_to(state.consumed[0], (B,)).astype(jnp.int32),
+            active=jnp.ones((B,), bool),
+        )
+        sess, p, _ = self._session_step(
+            sess, chunk, jnp.full((B,), chunk.shape[1], jnp.int32))
+        state = StreamingState(sess.delays,
+                               tuple(cns[0] for cns in sess.consumed),
+                               sess.acc, sess.amax)
+        return state, p
 
-    def stream(self, chunks) -> jax.Array:
+    def stream(self, chunks, *, dtype=None) -> jax.Array:
         """Convenience: classify an iterable of (B, L_i) chunks; returns the
-        final p. Memory stays fixed regardless of total stream length."""
+        final p. Memory stays fixed regardless of total stream length.
+
+        ``dtype`` fixes the state/register dtype up front (``None``: the
+        first chunk's dtype). Chunks whose dtype disagrees raise instead of
+        letting XLA silently upcast the registers mid-stream.
+        """
         state = None
         p = None
         for chunk in chunks:
             chunk = jnp.asarray(chunk)
+            if dtype is None:
+                dtype = chunk.dtype
+            if chunk.dtype != jnp.dtype(dtype):
+                raise ValueError(
+                    f"stream() chunk dtype {chunk.dtype} != stream dtype "
+                    f"{jnp.dtype(dtype)}; cast explicitly (mixed-dtype "
+                    "chunks would silently upcast the streaming registers)")
             if state is None:
-                state = self.init_state(chunk.shape[0], chunk.dtype)
+                state = self.init_state(chunk.shape[0], dtype)
             state, p = self.step(state, chunk)
         if p is None:
             raise ValueError("stream() needs at least one chunk")
         return p
+
+
+# ---------------------------------------------------------------------------
+# slot surgery helpers (host-side admission bookkeeping for serving code)
+# ---------------------------------------------------------------------------
+
+
+def clear_slots(state: SessionState, slots) -> SessionState:
+    """Zero the per-stream registers of ``slots`` (fresh-tenant admission:
+    a reused slot must not leak the previous stream). Leaves ``active``
+    untouched — pair with :func:`set_active`."""
+    slots = jnp.asarray(slots)
+    return SessionState(
+        delays=tuple(d.at[slots].set(0) for d in state.delays),
+        consumed=tuple(cns.at[slots].set(0) for cns in state.consumed),
+        acc=state.acc.at[slots].set(0),
+        amax=state.amax.at[slots].set(0),
+        count=state.count.at[slots].set(0),
+        active=state.active,
+    )
+
+
+def set_active(state: SessionState, slots, value: bool) -> SessionState:
+    """Flip the admission mask for ``slots``."""
+    return state._replace(
+        active=state.active.at[jnp.asarray(slots)].set(bool(value)))
+
+
+def take_slot(state: SessionState, slot: int) -> SessionState:
+    """Extract one slot's registers as an unbatched row tree (for
+    checkpointing an evicted session)."""
+    return jax.tree.map(lambda a: a[slot], state)
+
+
+def put_slot(state: SessionState, slot: int, row: SessionState) -> SessionState:
+    """Insert a row tree (from :func:`take_slot`) back into ``slot``."""
+    return jax.tree.map(lambda a, r: a.at[slot].set(r), state, row)

@@ -65,11 +65,20 @@ def _ste_bwd(_, g):
 _ste_round.defvjp(_ste_fwd, _ste_bwd)
 
 
-def fake_quant(x: jax.Array, bits: int, amax: float | None = None) -> jax.Array:
-    """Quantize-dequantize with straight-through gradient (QAT)."""
+def fake_quant(x: jax.Array, bits: int,
+               amax: float | jax.Array | None = None) -> jax.Array:
+    """Quantize-dequantize with straight-through gradient (QAT).
+
+    ``amax`` sets the symmetric range; it may be a scalar or an array that
+    broadcasts against ``x`` (e.g. a per-stream ``(S, 1)`` running amax in
+    the session streaming path). ``None`` falls back to the tensor's own
+    max — correct for weights, NOT deployment-faithful for signal batches
+    (it couples independent streams through one shared scale).
+    """
     if amax is None:
         amax = jax.lax.stop_gradient(jnp.max(jnp.abs(x)))
-        amax = jnp.where(amax > 0, amax, 1.0)
+    amax = jnp.asarray(amax)
+    amax = jnp.where(amax > 0, amax, jnp.ones((), amax.dtype))
     scale = amax / ((1 << (bits - 1)) - 1)
     q = _ste_round(x / scale)
     q = jnp.clip(q, -(1 << (bits - 1)), (1 << (bits - 1)) - 1)

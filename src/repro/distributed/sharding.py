@@ -21,7 +21,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "data_axes",
-           "sanitize", "tree_shardings"]
+           "sanitize", "tree_shardings", "session_specs",
+           "session_shardings", "shard_session"]
 
 
 # trailing-dims spec by parameter name; leading (stack) dims are unsharded.
@@ -130,6 +131,37 @@ def cache_specs(cache, mesh: Mesh):
 def tree_shardings(tree_specs, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def session_specs(state, mesh: Mesh):
+    """Slot-batched streaming state (``SessionState`` or any pytree whose
+    leaves lead with the slot axis S): shard S over the pure-DP axes,
+    everything trailing replicated. Each slot is one independent sensor
+    stream — the step is row-parallel, so slot sharding scales serving
+    capacity linearly with device count and the partitioner inserts no
+    collectives. Scalars (and any S not divisible by the axes, via
+    ``sanitize``) replicate."""
+    dp = data_axes(mesh)
+
+    def spec(leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd == 0:
+            return P()
+        return sanitize((dp,) + (None,) * (nd - 1), leaf.shape, mesh)
+
+    return jax.tree.map(spec, state)
+
+
+def session_shardings(state, mesh: Mesh):
+    """NamedShardings congruent with ``state`` (see :func:`session_specs`)."""
+    return tree_shardings(session_specs(state, mesh), mesh)
+
+
+def shard_session(state, mesh: Mesh):
+    """device_put the session state with the slot axis sharded over the
+    mesh's DP axes. Chunks/valid vectors fed to the jitted step should be
+    placed with the congruent specs so the step stays collective-free."""
+    return jax.device_put(state, session_shardings(state, mesh))
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,6 @@
-"""Serving launcher: batched autoregressive decode with a sharded KV cache.
+"""Serving launcher: LLM decode AND acoustic stream sessions, one CLI.
+
+LLM decode (batched autoregressive, sharded KV cache):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
         --batch 4 --prompt-len 16 --gen 32
@@ -7,12 +9,21 @@ Request flow: a batch of prompts is prefetched (prefill via the forward
 pass teacher-forcing the prompt tokens through decode_step slots), then
 tokens are generated one step at a time with the jitted serve_step. The
 cache is donated across steps (no per-token reallocation).
+
+Acoustic stream serving (the paper's deployment: only classified data
+leaves the device):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch esc10-mp --smoke \
+        --streams 16 --chunk 160 --rounds 25
+
+Many logical sensor streams are multiplexed onto one slot-batched
+``StreamServer``: each round feeds one sensor packet per stream, and all
+resident streams advance in ONE compiled donated-state step.
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -20,20 +31,52 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_arch, get_smoke
-from repro.distributed.steps import make_serve_step
-from repro.models import transformer as T
+
+ACOUSTIC_ARCH = "esc10-mp"
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCH_IDS), required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def _serve_acoustic(args):
+    from repro.configs.esc10_mp import make_pipeline
+    from repro.serving import StreamServer
+
+    pipe = make_pipeline(smoke=args.smoke, seed=args.seed)
+    fs = pipe.config.fs
+    server = StreamServer(pipe, capacity=args.streams,
+                          max_chunk=max(args.chunk, 16))
+    rng = np.random.default_rng(args.seed)
+    ids = [f"mic-{i:03d}" for i in range(args.streams)]
+    for sid in ids:
+        server.open(sid)
+    # synthetic sensors: band-limited-ish noise, one phase offset per stream
+    audio = rng.standard_normal(
+        (args.streams, args.rounds * args.chunk)).astype(np.float32)
+
+    t0 = time.time()
+    results = []
+    for r in range(args.rounds):
+        sl = slice(r * args.chunk, (r + 1) * args.chunk)
+        results = server.feed(
+            [(sid, audio[i, sl]) for i, sid in enumerate(ids)])
+    jax.block_until_ready(server.state.acc)
+    wall = time.time() - t0
+    fed = args.streams * args.rounds
+    print(f"arch={ACOUSTIC_ARCH} streams={args.streams} "
+          f"chunk={args.chunk} ({args.chunk / fs * 1e3:.0f} ms) "
+          f"rounds={args.rounds}")
+    print(f"served {fed} chunks in {wall*1e3:.0f} ms "
+          f"({fed / max(wall, 1e-9):.0f} chunks/s, "
+          f"{fed * args.chunk / max(wall, 1e-9) / 1e6:.2f} Msamples/s, "
+          f"stats={server.stats()})")
+    for res in results[:4]:
+        print(f"  {res.session_id}: label={res.label} "
+              f"confidence={res.confidence:+.3f} "
+              f"samples={res.samples_seen}")
+    return results
+
+
+def _serve_decode(args):
+    from repro.distributed.steps import make_serve_step
+    from repro.models import transformer as T
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     assert cfg.supports_decode, f"{cfg.name} is encoder-only"
@@ -51,11 +94,9 @@ def main(argv=None):
 
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab_size, (B, args.prompt_len))
-    out_tokens = [prompts]
 
     # prefill: feed prompt tokens through decode slots (teacher forcing)
     t0 = time.time()
-    tok = jnp.asarray(prompts[:, :1], jnp.int32)
     for i in range(args.prompt_len):
         pos = jnp.full((B,), i, jnp.int32)
         nxt, _, cache = serve_step(params, jnp.asarray(prompts[:, i:i+1],
@@ -78,6 +119,31 @@ def main(argv=None):
           f"({args.gen*B/max(gen_s,1e-9):.1f} tok/s)")
     print("sample generation:", gen_arr[0][:16].tolist())
     return gen_arr
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCH_IDS) + [ACOUSTIC_ARCH],
+                    required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    # LLM decode knobs
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # acoustic stream knobs
+    ap.add_argument("--streams", type=int, default=16,
+                    help="esc10-mp: concurrent sensor sessions (slots)")
+    ap.add_argument("--chunk", type=int, default=160,
+                    help="esc10-mp: sensor packet length in samples")
+    ap.add_argument("--rounds", type=int, default=25,
+                    help="esc10-mp: packets fed per stream")
+    args = ap.parse_args(argv)
+
+    if args.arch == ACOUSTIC_ARCH:
+        return _serve_acoustic(args)
+    return _serve_decode(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+"""Session-oriented stream serving for the in-filter classifier.
+
+``StreamServer`` multiplexes many logical sensor streams (acoupi-style
+long-lived recording sessions) onto the fixed slot capacity of one
+slot-batched :class:`~repro.core.pipeline.SessionState`, so feeding S
+streams costs ONE compiled donated-state step per chunk bucket.
+"""
+
+from repro.serving.session import (Decision, FeedRequest, FeedResult,
+                                   Session)
+from repro.serving.server import StreamServer, bucket_length
+
+__all__ = ["StreamServer", "Session", "Decision", "FeedRequest",
+           "FeedResult", "bucket_length"]

@@ -1,0 +1,302 @@
+"""StreamServer: many logical sensor streams, one compiled step per chunk.
+
+Slot model: the server owns a slot-batched ``SessionState`` with fixed
+capacity S. ``open()`` pins a session to a free slot (evicting the
+least-recently-fed idle session to the checkpoint store when full),
+``feed()`` absorbs chunks for any subset of resident sessions in ONE jitted
+donated-state call per chunk bucket, and ``close()``/``evict()`` release the
+slot — an evicted session's DSP registers and decision history are parked in
+the named-checkpoint store, so reopening resumes bit-exactly.
+
+Retrace bounding: arbitrary packet lengths are padded up to the next power
+of two (clamped to ``[min_chunk, max_chunk]``; longer packets split), so at
+most O(log max_chunk) step variants ever compile, no matter what lengths
+sensors send.
+
+Scale-out: pass ``mesh=`` to shard the slot axis over the mesh's data axes
+(see ``repro.distributed.sharding.session_specs``); capacity then scales
+linearly with device count while the host-side API is unchanged.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline as pl
+from repro.core.pipeline import InFilterPipeline, SessionState
+from repro.serving.session import Decision, FeedRequest, FeedResult, Session
+
+__all__ = ["StreamServer", "bucket_length"]
+
+
+def bucket_length(n: int, min_chunk: int, max_chunk: int) -> int:
+    """Next power of two >= n, clamped to [min_chunk, max_chunk]."""
+    if n <= 0:
+        raise ValueError(f"chunk length must be positive, got {n}")
+    b = min_chunk
+    while b < n:
+        b <<= 1
+    return min(b, max_chunk)
+
+
+def _batched_step(pipe: InFilterPipeline, state: SessionState,
+                  chunk: jax.Array, valid: jax.Array):
+    state, p, _ = pipe._session_step(state, chunk, valid)
+    return state, p
+
+
+class StreamServer:
+    """Multiplex logical sensor streams onto fixed slot capacity.
+
+    Parameters
+    ----------
+    pipeline:       the deployable ``InFilterPipeline``.
+    capacity:       number of slots S (streams resident at once).
+    max_chunk:      largest per-call chunk; longer packets are split.
+    min_chunk:      smallest pad bucket (tiny packets share one variant).
+    dtype:          register/sample dtype; incoming chunks are cast to it
+                    explicitly (the session dtype never drifts mid-stream).
+    evict_after:    seconds of idleness before a resident session may be
+                    auto-evicted to make room; ``None`` = any idle session.
+    checkpoint_dir: where evicted sessions are parked; required for
+                    eviction/reopen (without it a full server raises).
+    mesh:           optional ``jax.sharding.Mesh`` — shard the slot axis
+                    over the mesh's data axes.
+    clock:          injectable monotonic clock (tests).
+    """
+
+    def __init__(self, pipeline: InFilterPipeline, capacity: int = 64, *,
+                 max_chunk: int = 4096, min_chunk: int = 16,
+                 dtype=jnp.float32, evict_after: Optional[float] = None,
+                 checkpoint_dir: Optional[str] = None, mesh=None,
+                 max_history: int = 64, clock=None):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if not (0 < min_chunk <= max_chunk):
+            raise ValueError("need 0 < min_chunk <= max_chunk")
+        self.pipeline = pipeline
+        self.capacity = capacity
+        self.max_chunk = max_chunk
+        self.min_chunk = min_chunk
+        self.dtype = jnp.dtype(dtype)
+        self.evict_after = evict_after
+        self._clock = clock if clock is not None else time.monotonic
+        self._mesh = mesh
+        self._state = pipeline.init_session(
+            capacity, dtype, active=np.zeros((capacity,), bool))
+        self._chunk_sharding = None
+        self._valid_sharding = None
+        if mesh is not None:
+            from repro.distributed import sharding as sh
+            self._state = sh.shard_session(self._state, mesh)
+            dp = sh.data_axes(mesh)
+            self._chunk_sharding = jax.sharding.NamedSharding(
+                mesh, sh.sanitize((dp, None), (capacity, max_chunk), mesh))
+            self._valid_sharding = jax.sharding.NamedSharding(
+                mesh, sh.sanitize((dp,), (capacity,), mesh))
+        self._step = jax.jit(_batched_step, donate_argnums=(1,))
+        self._free = list(range(capacity - 1, -1, -1))  # pop() -> slot 0 first
+        self._sessions: dict[str, Session] = {}
+        self._manager = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint import CheckpointManager
+            self._manager = CheckpointManager(checkpoint_dir,
+                                              async_save=False)
+        self._max_history = max_history
+        self.bucket_counts: dict[int, int] = {}  # bucket length -> steps run
+        self.steps_run = 0
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def state(self) -> SessionState:
+        return self._state
+
+    def session(self, session_id: str) -> Session:
+        return self._sessions[session_id]
+
+    def sessions(self) -> list:
+        return sorted(self._sessions.values(), key=lambda s: s.slot)
+
+    def stats(self) -> dict:
+        return {
+            "capacity": self.capacity,
+            "resident": len(self._sessions),
+            "free_slots": len(self._free),
+            "steps_run": self.steps_run,
+            "buckets": dict(sorted(self.bucket_counts.items())),
+        }
+
+    # -- admission -----------------------------------------------------------
+
+    def open(self, session_id: str) -> Session:
+        """Admit a stream. If a checkpoint for this id exists (prior
+        eviction), the session resumes from it bit-exactly; otherwise the
+        slot starts from the cleared-register state."""
+        if session_id in self._sessions:
+            raise ValueError(f"session {session_id!r} already open")
+        # validate at admission (checkpoint-name charset), BEFORE any state
+        # changes — a bad id must not cost a slot or surface mid-lifecycle
+        if not session_id or not all(ch.isalnum() or ch in "-_."
+                                     for ch in session_id):
+            raise ValueError(
+                f"session id {session_id!r}: use [A-Za-z0-9._-]")
+        slot = self._acquire_slot()
+        try:
+            now = self._clock()
+            sess = Session(id=session_id, slot=slot, opened_at=now,
+                           last_fed=now, max_history=self._max_history)
+            self._state = pl.clear_slots(self._state, np.asarray([slot]))
+            name = self._ckpt_name(session_id)
+            if self._manager is not None and self._manager.has_named(name):
+                row_like = pl.take_slot(self._state, slot)
+                row, meta = self._manager.restore_named(name, row_like)
+                self._state = pl.put_slot(self._state, slot, row)
+                if meta:
+                    sess.load_meta(meta)
+            self._state = pl.set_active(self._state, np.asarray([slot]),
+                                        True)
+        except Exception:
+            self._free.append(slot)  # failed admission must not leak a slot
+            raise
+        self._sessions[session_id] = sess
+        return sess
+
+    def close(self, session_id: str, *, checkpoint: bool = False) -> Session:
+        """Release a session's slot. ``checkpoint=True`` parks its state for
+        a later ``open`` (same as eviction); otherwise any parked copy is
+        discarded — a future ``open`` of this id starts fresh."""
+        sess = self._sessions.pop(session_id)
+        if checkpoint:
+            self._park(sess)
+        elif self._manager is not None:
+            self._manager.delete_named(self._ckpt_name(session_id))
+        self._state = pl.set_active(self._state,
+                                    np.asarray([sess.slot]), False)
+        self._free.append(sess.slot)
+        return sess
+
+    def evict(self, session_id: str) -> Session:
+        """Park a resident session in the checkpoint store and free its
+        slot. Requires ``checkpoint_dir``."""
+        if self._manager is None:
+            raise RuntimeError("evict() needs checkpoint_dir")
+        return self.close(session_id, checkpoint=True)
+
+    def _park(self, sess: Session) -> None:
+        if self._manager is None:
+            raise RuntimeError("session checkpointing needs checkpoint_dir")
+        row = pl.take_slot(self._state, sess.slot)
+        self._manager.save_named(self._ckpt_name(sess.id), row,
+                                 meta=sess.meta())
+
+    @staticmethod
+    def _ckpt_name(session_id: str) -> str:
+        return f"session-{session_id}"
+
+    def _acquire_slot(self) -> int:
+        if self._free:
+            return self._free.pop()
+        if self._manager is None:
+            raise RuntimeError(
+                f"server at capacity ({self.capacity}) and no "
+                "checkpoint_dir to evict into")
+        now = self._clock()
+        lru = min(self._sessions.values(), key=lambda s: s.last_fed)
+        if self.evict_after is not None and \
+                now - lru.last_fed < self.evict_after:
+            raise RuntimeError(
+                f"server at capacity ({self.capacity}); least-recent "
+                f"session {lru.id!r} idle {now - lru.last_fed:.1f}s < "
+                f"evict_after={self.evict_after}s")
+        self.evict(lru.id)
+        return self._free.pop()
+
+    # -- the hot path --------------------------------------------------------
+
+    def feed(self, requests: Iterable[Union[FeedRequest, tuple]]) -> list:
+        """Absorb one chunk per request; return one ``FeedResult`` per
+        request, in request order.
+
+        Each request is a ``FeedRequest`` or ``(session_id, chunk)`` with a
+        1-D chunk. Chunks longer than ``max_chunk`` are split; several
+        requests for the SAME session in one call are applied in order.
+        Everything that can share a compiled call does: per wave, all
+        pending segments are padded into one (S, L_bucket) batch with
+        per-slot valid counts, and absent/inactive slots ride along inertly.
+        """
+        reqs = []
+        for r in requests:
+            if isinstance(r, FeedRequest):
+                sid, chunk = r.session_id, r.chunk
+            else:
+                sid, chunk = r
+            if sid not in self._sessions:
+                raise KeyError(f"session {sid!r} is not open")
+            chunk = np.asarray(chunk, dtype=self.dtype)
+            if chunk.ndim != 1:
+                raise ValueError(
+                    f"chunk for {sid!r} must be 1-D (samples,), got shape "
+                    f"{chunk.shape}")
+            if chunk.shape[0] == 0:
+                raise ValueError(f"empty chunk for session {sid!r}")
+            segs = [chunk[i:i + self.max_chunk]
+                    for i in range(0, chunk.shape[0], self.max_chunk)]
+            reqs.append((sid, segs))
+        if not reqs:
+            return []
+
+        last_p: dict[int, tuple] = {}  # request index -> (label, conf)
+        pending = [list(segs) for _, segs in reqs]
+        while any(pending):
+            wave, seen, finals = [], set(), []
+            for i, (sid, _) in enumerate(reqs):
+                if pending[i] and sid not in seen:
+                    wave.append((i, sid, pending[i].pop(0)))
+                    seen.add(sid)
+                    if not pending[i]:
+                        finals.append((i, sid))
+            L = bucket_length(max(seg.shape[0] for _, _, seg in wave),
+                              self.min_chunk, self.max_chunk)
+            batch = np.zeros((self.capacity, L), dtype=self.dtype)
+            valid = np.zeros((self.capacity,), dtype=np.int32)
+            for _, sid, seg in wave:
+                slot = self._sessions[sid].slot
+                batch[slot, :seg.shape[0]] = seg
+                valid[slot] = seg.shape[0]
+            chunk_dev, valid_dev = jnp.asarray(batch), jnp.asarray(valid)
+            if self._chunk_sharding is not None:
+                chunk_dev = jax.device_put(chunk_dev, self._chunk_sharding)
+                valid_dev = jax.device_put(valid_dev, self._valid_sharding)
+            self._state, p = self._step(self.pipeline, self._state,
+                                        chunk_dev, valid_dev)
+            self.steps_run += 1
+            self.bucket_counts[L] = self.bucket_counts.get(L, 0) + 1
+            # host readback (a device sync) only when some request ends on
+            # this wave — intermediate split-segment waves stay async so
+            # the donated step chain pipelines
+            if finals:
+                p_host = np.asarray(p)
+                for i, sid in finals:
+                    slot = self._sessions[sid].slot
+                    label = int(np.argmax(p_host[slot]))
+                    last_p[i] = (sid, label, float(p_host[slot, label]))
+
+        now = self._clock()
+        results = []
+        for i, (sid, label, conf) in sorted(last_p.items()):
+            sess = self._sessions[sid]
+            # samples_seen advances by the WHOLE request, recorded once on
+            # its final segment's decision
+            total = sess.samples_seen + sum(s.shape[0] for s in reqs[i][1])
+            d = Decision(samples_seen=total, label=label, confidence=conf)
+            sess.record(d, now)
+            results.append(FeedResult(session_id=sid, label=label,
+                                      confidence=conf,
+                                      samples_seen=total))
+        return results

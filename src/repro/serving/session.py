@@ -1,0 +1,77 @@
+"""Session bookkeeping dataclasses for the stream server.
+
+A *session* is one long-lived logical sensor stream (one microphone, one
+deployment box) pinned to a slot of the slot-batched ``SessionState`` while
+resident. The paper's deployment contract — only classified data leaves the
+device — makes the decision history the session's entire observable output,
+so it is first-class here: every feed appends a :class:`Decision`, and the
+history survives eviction/reopen via the named-checkpoint store.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+__all__ = ["Decision", "Session", "FeedRequest", "FeedResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One classifier readout: the decision from all evidence so far."""
+    samples_seen: int
+    label: int
+    confidence: float
+
+
+@dataclasses.dataclass
+class Session:
+    """Host-side record of a resident stream (the device state lives in the
+    slot-batched ``SessionState`` on-accelerator)."""
+    id: str
+    slot: int
+    opened_at: float
+    last_fed: float
+    samples_seen: int = 0
+    history: List[Decision] = dataclasses.field(default_factory=list)
+    max_history: int = 64
+
+    def record(self, decision: Decision, now: float) -> None:
+        self.samples_seen = decision.samples_seen
+        self.last_fed = now
+        self.history.append(decision)
+        if len(self.history) > self.max_history:
+            del self.history[: len(self.history) - self.max_history]
+
+    @property
+    def last_decision(self) -> Optional[Decision]:
+        return self.history[-1] if self.history else None
+
+    def meta(self) -> dict:
+        """JSON-serializable side data persisted with an evicted session."""
+        return {
+            "samples_seen": int(self.samples_seen),
+            "history": [[int(d.samples_seen), int(d.label),
+                         float(d.confidence)] for d in self.history],
+        }
+
+    def load_meta(self, meta: dict) -> None:
+        self.samples_seen = int(meta.get("samples_seen", 0))
+        self.history = [Decision(int(s), int(l), float(c))
+                        for s, l, c in meta.get("history", [])]
+
+
+@dataclasses.dataclass(frozen=True)
+class FeedRequest:
+    """One chunk of one session's audio. ``chunk`` is 1-D (samples,)."""
+    session_id: str
+    chunk: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FeedResult:
+    """Per-request classifier readout after the session absorbed the chunk."""
+    session_id: str
+    label: int
+    confidence: float
+    samples_seen: int

@@ -81,6 +81,34 @@ def test_resharding_restore(tmp_path):
                                   np.asarray(state["params"]["w"]))
 
 
+def test_named_roundtrip_with_meta(tmp_path):
+    """Named objects (serving sessions): atomic save, meta side data,
+    overwrite, delete."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    row = {"acc": jnp.arange(4.0), "count": jnp.asarray(7)}
+    assert not mgr.has_named("session-a")
+    mgr.save_named("session-a", row, meta={"history": [[100, 3, 0.5]]})
+    assert mgr.has_named("session-a")
+    got, meta = mgr.restore_named("session-a",
+                                  jax.tree.map(jnp.zeros_like, row))
+    for a, b in zip(jax.tree.leaves(row), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert meta == {"history": [[100, 3, 0.5]]}
+    # overwrite wins; step-indexed listing is unaffected by named entries
+    mgr.save_named("session-a", jax.tree.map(lambda a: a + 1, row))
+    got2, meta2 = mgr.restore_named("session-a", row)
+    np.testing.assert_array_equal(np.asarray(got2["acc"]),
+                                  np.asarray(row["acc"]) + 1)
+    assert meta2 is None
+    assert mgr.all_steps() == []
+    mgr.delete_named("session-a")
+    assert not mgr.has_named("session-a")
+    with pytest.raises(FileNotFoundError):
+        mgr.restore_named("session-a", row)
+    with pytest.raises(ValueError, match="checkpoint name"):
+        mgr.save_named("../evil", row)
+
+
 def test_training_resume_continues_loss(tmp_path):
     """End-to-end: 10 steps, ckpt, new process-state, resume, loss continues
     (integration of manager + steps + data determinism)."""
