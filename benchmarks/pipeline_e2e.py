@@ -12,6 +12,12 @@ octaves x 5 filters = 30 bands):
                    ONE jit computation
   pipeline_stream  the same audio pushed through the stateful streaming API
                    in 1600-sample chunks (fixed-memory continuous mode)
+  pipeline_stream_pallas
+                   the same chunked stream through the stateful
+                   ``fir_mp_stream`` Pallas kernel (stream_impl="pallas";
+                   interpret mode off-TPU — wiring/bit-rot gate there, the
+                   VMEM-residency win is a TPU measurement) with a
+                   bit-for-bit check against the XLA streaming path
 
 Emits ``name,us_per_call,derived`` CSV rows like every other benchmark.
 """
@@ -113,14 +119,37 @@ def main(argv=()):
     row(f"pipeline_e2e.pipeline_stream.chunk{CHUNK}", us_stream,
         f"per_chunk_us={us_stream / (N // CHUNK):.1f}")
 
-    # parity: all three flows classify identically (f32 round-off)
+    # -- streaming through the stateful Pallas kernel ------------------------
+    pipe_k = InFilterPipeline(cfg._replace(stream_impl="pallas"),
+                              pipe.bp_taps, pipe.lp_taps, pipe.mu,
+                              pipe.sigma, pipe.clf)
+    apply_k = jax.jit(InFilterPipeline.apply)
+
+    def stream_pallas_e2e(x):
+        state = pipe_k.init_session(B)
+        p = None
+        for i in range(0, N, CHUNK):
+            p, state = apply_k(pipe_k, x[:, i:i + CHUNK], state)
+        return p
+
+    us_kstream = time_fn(stream_pallas_e2e, x, warmup=1, iters=3)
+    row(f"pipeline_e2e.pipeline_stream_pallas.chunk{CHUNK}", us_kstream,
+        f"vs_xla_stream={us_stream / us_kstream:.2f}x "
+        "(interpret off-TPU)")
+
+    # parity: all flows classify identically (f32 round-off; the two
+    # streaming impls must agree bit-for-bit in interpret mode)
     p_seed = seed_e2e(x)
     p_one = predict(x)
     p_stream = stream_e2e(x)
+    p_kstream = stream_pallas_e2e(x)
     err_one = float(jnp.max(jnp.abs(p_one - p_seed)))
     err_stream = float(jnp.max(jnp.abs(p_stream - p_one)))
+    err_k = float(jnp.max(jnp.abs(p_kstream - p_stream)))
     row("pipeline_e2e.parity", 0.0,
-        f"oneshot_vs_seed={err_one:.2e} stream_vs_oneshot={err_stream:.2e}")
+        f"oneshot_vs_seed={err_one:.2e} stream_vs_oneshot={err_stream:.2e} "
+        f"pallas_vs_xla_stream={err_k:.2e} "
+        f"bitwise={bool(err_k == 0.0)}")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,12 @@ calibrated/held stream), chunked session ``apply()`` must reproduce one-shot
 ``predict()`` — the deployment-faithful semantics the old chunk-local amax
 could not deliver.
 
+``--stream-impl`` selects the session-step hot path ("xla" | "pallas" |
+"both"); "both" additionally reports pallas-vs-xla speedup and their
+bit-for-bit decision parity. Off-TPU the Pallas kernel runs in interpret
+mode, so its CPU numbers measure wiring, not the VMEM-residency win — the
+>=1.5x target is a TPU measurement (see ROADMAP).
+
     PYTHONPATH=src python -m benchmarks.serve_streams [--slots 256] [--smoke]
 
 Emits ``name,us_per_call,derived`` CSV rows like every other benchmark.
@@ -42,12 +48,17 @@ def main(argv=()):
                          "at the smoke config's 4 kHz)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny run for CI bit-rot checks")
+    ap.add_argument("--stream-impl", choices=["xla", "pallas", "both"],
+                    default="xla",
+                    help="session-step hot path; 'both' also reports the "
+                         "pallas-vs-xla speedup and decision parity")
     args = ap.parse_args(argv)
     S = 16 if args.smoke else args.slots
     CH = args.chunk
     iters = 2 if args.smoke else 3
+    primary_impl = "xla" if args.stream_impl == "both" else args.stream_impl
 
-    pipe = make_pipeline(smoke=True)
+    pipe = make_pipeline(smoke=True, stream_impl=primary_impl)
     rng = np.random.default_rng(0)
     audio = rng.standard_normal((S, ROUNDS * CH)).astype(np.float32)
 
@@ -92,8 +103,42 @@ def main(argv=()):
     row(f"serve_streams.per_chunk_latency.S{S}", us_srv / ROUNDS,
         f"{S * ROUNDS / us_srv * 1e6:.0f} chunks/s")
 
+    # -- stateful Pallas streaming kernel vs the XLA session step -----------
+    if args.stream_impl == "both":
+        pipe_k = make_pipeline(smoke=True, stream_impl="pallas")
+        server_k = StreamServer(pipe_k, capacity=S, max_chunk=CH)
+        for sid in ids:
+            server_k.open(sid)
+
+        def served_pallas():
+            res = None
+            for r in range(ROUNDS):
+                res = server_k.feed([(sid, audio[i, r * CH:(r + 1) * CH])
+                                     for i, sid in enumerate(ids)])
+            jax.block_until_ready(server_k.state.acc)
+            return res
+
+        us_k = time_fn(served_pallas, warmup=1, iters=iters)
+        # decision parity on FRESH servers (history-free comparison)
+        fresh = []
+        for impl in ("xla", "pallas"):
+            srv = StreamServer(make_pipeline(smoke=True, stream_impl=impl),
+                               capacity=S, max_chunk=CH)
+            for sid in ids:
+                srv.open(sid)
+            res = None
+            for r in range(ROUNDS):
+                res = srv.feed([(sid, audio[i, r * CH:(r + 1) * CH])
+                                for i, sid in enumerate(ids)])
+            fresh.append(res)
+        bitwise = all(a.label == b.label and a.confidence == b.confidence
+                      for a, b in zip(*fresh))
+        row(f"serve_streams.stream_server_pallas.S{S}xC{CH}", us_k,
+            f"speedup_vs_xla={us_srv / us_k:.2f}x bitwise={bitwise} "
+            f"(interpret mode off-TPU; >=1.5x target is a TPU number)")
+
     # -- quantized streaming parity (running amax, seeded = held stream) ----
-    pipe_q = make_pipeline(smoke=True, quant_bits=8)
+    pipe_q = make_pipeline(smoke=True, quant_bits=8, stream_impl=primary_impl)
     xq = jnp.asarray(rng.standard_normal((4, 8 * CH)).astype(np.float32))
     p_one = pipe_q.predict(xq)
     amax0 = jnp.max(jnp.abs(xq), axis=-1)

@@ -2,9 +2,11 @@
 # Benchmark bit-rot gate: run the cheap --smoke variants of the serving and
 # e2e pipeline benchmarks and fail on any exception. Called from tier1.sh so
 # a PR that breaks a benchmark entry point is caught at tier-1 time.
+# --stream-impl both also smokes the stateful Pallas streaming kernel path
+# (interpret mode on CPU) so fir_mp_stream bit-rot is caught here too.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-python -m benchmarks.serve_streams --smoke
+python -m benchmarks.serve_streams --smoke --stream-impl both
 python -m benchmarks.pipeline_e2e --smoke
 echo "bench_smoke OK"

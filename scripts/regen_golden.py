@@ -1,0 +1,37 @@
+#!/usr/bin/env python
+"""Regenerate the golden regression fixtures in tests/golden/.
+
+    PYTHONPATH=src python scripts/regen_golden.py [case ...]
+
+Run this ONLY when a numerics change is intentional (new solver, new
+reduction order, retuned filters) — commit the refreshed .npz files together
+with the change and say why in the commit message. tests/test_golden.py
+fails loudly when the recorded audio -> decision vectors drift.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+
+from golden_cases import CASES, GOLDEN_DIR, compute_outputs  # noqa: E402
+
+
+def main(argv):
+    names = argv or sorted(CASES)
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name in names:
+        case = CASES[name]
+        out = compute_outputs(case)
+        path = os.path.join(GOLDEN_DIR, f"{name}.npz")
+        np.savez_compressed(path, **out)
+        sizes = {k: v.shape for k, v in out.items()}
+        print(f"wrote {path}: {sizes}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -139,8 +139,18 @@ class CheckpointManager:
     def _named_dir(self, name: str) -> str:
         return os.path.join(self.dir, f"named_{self._check_name(name)}")
 
+    def _resolve_named(self, name: str) -> str | None:
+        """Directory currently holding ``name``: the published dir, or the
+        ``.old`` version if a crash landed mid-publish (see save_named)."""
+        d = self._named_dir(name)
+        if os.path.isdir(d):
+            return d
+        if os.path.isdir(d + ".old"):
+            return d + ".old"
+        return None
+
     def has_named(self, name: str) -> bool:
-        return os.path.isdir(self._named_dir(name))
+        return self._resolve_named(name) is not None
 
     def save_named(self, name: str, state: Any, meta: Optional[dict] = None):
         """Atomically persist a small pytree under a string key. ``meta`` is
@@ -165,16 +175,25 @@ class CheckpointManager:
             np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        # publish without a destroy-then-rename window: move the old version
+        # aside first, so a crash at any point leaves either the old or the
+        # new object under the key — never neither (a vanished session would
+        # silently restart from cleared registers on reopen)
+        old = final + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
         if os.path.exists(final):
-            shutil.rmtree(final)
+            os.rename(final, old)
         os.rename(tmp, final)  # atomic publish
+        if os.path.exists(old):
+            shutil.rmtree(old)
         return final
 
     def restore_named(self, name: str, state_like: Any):
         """Load a named object into the structure of ``state_like``.
         Returns ``(state, meta)``."""
-        d = self._named_dir(name)
-        if not os.path.isdir(d):
+        d = self._resolve_named(name)
+        if d is None:
             raise FileNotFoundError(f"no named checkpoint {name!r} in "
                                     f"{self.dir}")
         with open(os.path.join(d, "manifest.json")) as f:
@@ -204,6 +223,7 @@ class CheckpointManager:
 
     def delete_named(self, name: str) -> None:
         shutil.rmtree(self._named_dir(name), ignore_errors=True)
+        shutil.rmtree(self._named_dir(name) + ".old", ignore_errors=True)
 
     # -- restore ------------------------------------------------------------
 

@@ -34,12 +34,16 @@ FILTERBANK_SMOKE = FILTERBANK._replace(fs=4000.0, num_octaves=3,
 
 def make_pipeline(smoke: bool = False, seed: int = 0,
                   quant_bits: int | None = None,
-                  num_classes: int = 10):
+                  num_classes: int = 10,
+                  stream_impl: str = "xla"):
     """Build a deployable ``InFilterPipeline`` at the paper's configuration.
 
     The classifier is randomly initialized with identity standardization —
     serving-path demos and throughput benchmarks exercise the datapath, not
-    accuracy; use ``InFilterPipeline.fit`` for a trained pipeline."""
+    accuracy; use ``InFilterPipeline.fit`` for a trained pipeline.
+    ``stream_impl`` selects the session-step hot path: "xla" (default) or
+    "pallas" (the stateful ``fir_mp_stream`` kernel; interpret mode on CPU,
+    compiled on TPU)."""
     import jax
     import jax.numpy as jnp
 
@@ -50,6 +54,11 @@ def make_pipeline(smoke: bool = False, seed: int = 0,
     cfg = FILTERBANK_SMOKE if smoke else FILTERBANK
     if quant_bits is not None:
         cfg = cfg._replace(quant_bits=quant_bits)
+    if stream_impl not in ("xla", "pallas"):
+        raise ValueError(f"unknown stream_impl {stream_impl!r}: "
+                         "expected 'xla' or 'pallas'")
+    if stream_impl != "xla":
+        cfg = cfg._replace(stream_impl=stream_impl)
     fb = FilterBank(cfg)
     P = cfg.num_filters
     clf = km.init_params(jax.random.PRNGKey(seed), P, num_classes)

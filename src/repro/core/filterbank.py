@@ -35,6 +35,9 @@ from repro.core.quant import fake_quant
 __all__ = [
     "FilterBankConfig",
     "FilterBank",
+    "STREAM_BLOCK",
+    "accumulate_block_len",
+    "hwr_accumulate",
     "design_lowpass",
     "design_bandpass",
     "greenwood",
@@ -47,6 +50,58 @@ __all__ = [
     "multirate_band_outputs",
     "multirate_accumulate",
 ]
+
+# ---------------------------------------------------------------------------
+# Blocked HWR accumulation (shared reduction order)
+# ---------------------------------------------------------------------------
+
+# Every path that sums HWR'd band outputs over the position axis — one-shot
+# accumulate, the XLA session step, and the Pallas streaming kernel's
+# grid-carried accumulator — reduces in the SAME order: per-row sums over
+# fixed-length blocks of ``accumulate_block_len(l)`` positions, then one
+# sequential add per block. f32 addition is non-associative, so a shared
+# order is what makes "single-chunk streaming == one-shot" and
+# "Pallas streaming == XLA streaming" BIT-exact rather than merely close
+# (XLA's whole-axis reduce uses an unspecified tree that a blockwise
+# accumulator cannot reproduce).
+STREAM_BLOCK = 512
+
+
+def accumulate_block_len(n: int) -> int:
+    """Accumulation block length for a position axis of length ``n``: the
+    next power of two, clamped to [2, STREAM_BLOCK]. Always even, so the
+    ÷2 decimator's kept-sample alignment is constant within a block."""
+    b = 2
+    while b < n and b < STREAM_BLOCK:
+        b <<= 1
+    return b
+
+
+def hwr_accumulate(y: jax.Array, valid: jax.Array | None = None) -> jax.Array:
+    """s = sum_p HWR(y[..., p]) with the shared blocked reduction order.
+
+    ``valid`` (optional, shape broadcastable to ``y.shape[:-1]``, passed to
+    this function WITH the trailing axis already dropped — e.g. ``n[:, None]``
+    for a (S, F, l) bank output) masks positions >= valid to exactly +0.0
+    before summing, so masked tails and the zero-padding to a whole number
+    of blocks contribute identical (no-op) terms.
+    """
+    l = y.shape[-1]
+    h = jnp.maximum(y, 0.0)
+    if valid is not None:
+        pos = jax.lax.broadcasted_iota(jnp.int32, y.shape, y.ndim - 1)
+        h = jnp.where(pos < jnp.asarray(valid)[..., None], h, 0.0)
+    if l == 0:
+        return jnp.zeros(y.shape[:-1], y.dtype)
+    lb = accumulate_block_len(l)
+    nb = -(-l // lb)
+    h = jnp.pad(h, [(0, 0)] * (y.ndim - 1) + [(0, nb * lb - l)])
+    h = h.reshape(*y.shape[:-1], nb, lb)
+    s = mp_mod.tree_sum(h)            # per-block fixed-tree sums
+    out = s[..., 0]
+    for k in range(1, nb):            # sequential adds, ascending blocks
+        out = out + s[..., k]
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -166,7 +221,7 @@ def bank_accumulate(x: jax.Array, taps: jax.Array,
         from repro.kernels import fir_mp_bank_accumulate
         return fir_mp_bank_accumulate(x, taps, cfg.gamma_f)
     y = bank_fir(x, taps, cfg)
-    return jnp.sum(jnp.maximum(y, 0.0), axis=-1)
+    return hwr_accumulate(y)
 
 
 def quant_signal(x: jax.Array, cfg: "FilterBankConfig",
@@ -242,7 +297,13 @@ class FilterBankConfig(NamedTuple):
     quant_bits: int | None = None  # quantize taps + signal (Fig. 8 sweep)
     solver: Literal["newton", "bisect"] = "newton"  # non-exact MP scheme:
     # newton = fast software path; bisect = the FPGA's add/compare/shift loop
-    # (use for hardware op censuses; the Pallas kernels always bisect)
+    # (use for hardware op censuses; the one-shot Pallas kernels always
+    # bisect; the streaming kernel honors this field)
+    stream_impl: Literal["xla", "pallas"] = "xla"  # session-step hot path:
+    # xla = splice [delay, chunk] in XLA per octave; pallas = fir_mp_stream,
+    # a stateful kernel carrying delay lines / accumulators / running amax
+    # in VMEM scratch across grid steps (bit-identical to xla in interpret
+    # mode when use_pallas is False — both run the same solver math)
 
     @property
     def num_filters(self) -> int:

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "tree_sum",
     "mp_exact",
     "mp",
     "mp_bisect",
@@ -55,6 +56,34 @@ __all__ = [
 DEFAULT_BISECT_ITERS = 26  # |interval| * 2^-26 < 1e-7 * gamma: fp32-parity
 DEFAULT_NEWTON_ITERS = 12  # monotone Newton: lands exactly on the root
                            # segment; 12 steps beat bisect-26 empirically
+
+
+def tree_sum(h: jax.Array) -> jax.Array:
+    """Sum over the last axis as a FIXED pairwise halving tree.
+
+    ``jnp.sum`` lowers to a reduce HLO whose internal association order is a
+    codegen detail — it can change with the surrounding fusion context, so
+    two graphs computing "the same" f32 sum of identical operands may differ
+    by ulps. The streaming-parity contract (XLA session step == Pallas
+    streaming kernel, bit for bit; single-chunk streaming == one-shot)
+    needs every float reduction on that path to be an explicit add DAG that
+    XLA must evaluate as written. Zero-padding to a power of two is exact:
+    every operand fed in is >= +0.0 or the pad lanes only ever add +0.0.
+
+    Cost: log2(n) strided vector adds — on par with a reduce, and the
+    fixed-iteration solvers were already bandwidth-bound on the operands.
+    """
+    n = h.shape[-1]
+    if n == 0:
+        return jnp.zeros(h.shape[:-1], h.dtype)
+    p = 1
+    while p < n:
+        p <<= 1
+    if p != n:
+        h = jnp.pad(h, [(0, 0)] * (h.ndim - 1) + [(0, p - n)])
+    while h.shape[-1] > 1:
+        h = h[..., 0::2] + h[..., 1::2]
+    return h[..., 0]
 
 
 # ---------------------------------------------------------------------------
@@ -129,7 +158,7 @@ def mp_bisect(
     def body(_, state):
         lo, hi = state
         mid = (lo + hi) * jnp.asarray(0.5, L.dtype)  # shift in fixed point
-        h = jnp.sum(jnp.maximum(L - mid[..., None], 0), axis=-1)
+        h = tree_sum(jnp.maximum(L - mid[..., None], 0))
         too_low = h > gamma  # z too small -> move lo up
         lo = jnp.where(too_low, mid, lo)
         hi = jnp.where(too_low, hi, mid)
@@ -162,8 +191,8 @@ def mp_newton(
 
     def body(_, z):
         zc = z[..., None]
-        s = jnp.sum(jnp.maximum(L - zc, 0), axis=-1)
-        k = jnp.sum(L > zc, axis=-1).astype(L.dtype)
+        s = tree_sum(jnp.maximum(L - zc, 0))
+        k = jnp.sum(L > zc, axis=-1).astype(L.dtype)  # int count: exact
         return z + (s - gamma) / jnp.maximum(k, 1.0)
 
     return jax.lax.fori_loop(0, iters, body, z)
@@ -183,10 +212,10 @@ def mpabs_newton(
 
     def body(_, z):
         zc = z[..., None]
-        s = (jnp.sum(jnp.maximum(a - zc, 0), axis=-1)
-             + jnp.sum(jnp.maximum(-a - zc, 0), axis=-1))
+        s = (tree_sum(jnp.maximum(a - zc, 0))
+             + tree_sum(jnp.maximum(-a - zc, 0)))
         k = (jnp.sum(a > zc, axis=-1)
-             + jnp.sum(-a > zc, axis=-1)).astype(u.dtype)
+             + jnp.sum(-a > zc, axis=-1)).astype(u.dtype)  # int counts
         return z + (s - gamma) / jnp.maximum(k, 1.0)
 
     return jax.lax.fori_loop(0, iters, body, z)
@@ -215,8 +244,8 @@ def mpabs(u: jax.Array, gamma: jax.Array, exact: bool = True,
     def body(_, state):
         lo, hi = state
         mid = (lo + hi) * jnp.asarray(0.5, u.dtype)
-        h = (jnp.sum(jnp.maximum(u - mid[..., None], 0), axis=-1)
-             + jnp.sum(jnp.maximum(-u - mid[..., None], 0), axis=-1))
+        h = (tree_sum(jnp.maximum(u - mid[..., None], 0))
+             + tree_sum(jnp.maximum(-u - mid[..., None], 0)))
         too_low = h > gamma
         lo = jnp.where(too_low, mid, lo)
         hi = jnp.where(too_low, hi, mid)

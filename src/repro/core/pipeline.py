@@ -275,12 +275,66 @@ class InFilterPipeline:
         independent, and rows with zero valid samples keep bit-identical
         registers (delay slice at offset 0 re-reads the old delays; masked
         HWR sums vanish), which is what makes padding slots inert.
+
+        ``config.stream_impl`` selects the octave-cascade hot path: "xla"
+        splices [delay, chunk] per octave in XLA (below); "pallas" runs
+        ``kernels.fir_mp_stream``, a stateful kernel that carries the delay
+        lines / accumulators / running amax in VMEM scratch across its
+        chunk-block grid. Both run the same solver math in the same blocked
+        accumulation order, so in interpret mode they agree bit-for-bit.
         """
         c = self.config
         S, L = chunk.shape
         n = jnp.where(state.active, jnp.asarray(valid, jnp.int32), 0)
+        if L == 0:
+            # a zero-length chunk is a pure readout: no register moves
+            phi = (state.acc - self.mu) / self.sigma
+            return state, km.forward(self.clf, phi, exact=False), phi
         pos0 = jax.lax.broadcasted_iota(jnp.int32, (S, L), 1)
         chunk = jnp.where(pos0 < n[:, None], chunk, 0)
+        if c.stream_impl == "pallas":
+            state = self._cascade_pallas(state, chunk, n)
+        elif c.stream_impl == "xla":
+            state = self._cascade_xla(state, chunk, n)
+        else:
+            # a typo must not silently serve XLA results as "the kernel"
+            raise ValueError(f"unknown stream_impl {c.stream_impl!r}: "
+                             "expected 'xla' or 'pallas'")
+        phi = (state.acc - self.mu) / self.sigma
+        return state, km.forward(self.clf, phi, exact=False), phi
+
+    def _cascade_pallas(self, state: SessionState, chunk: jax.Array,
+                        n: jax.Array) -> SessionState:
+        """Octave cascade through the stateful Pallas streaming kernel."""
+        c = self.config
+        if c.mode != "mp":
+            raise ValueError(
+                f"stream_impl='pallas' runs the MP streaming kernel; it has "
+                f"no {c.mode!r}-mode variant (use stream_impl='xla')")
+        from repro.kernels import fir_mp_stream
+        if c.quant_bits is not None:
+            # quantization needs the post-update running amax BEFORE the
+            # filter pass, so it cannot fold into the kernel's single sweep
+            amax = jnp.maximum(state.amax, jnp.max(jnp.abs(chunk), axis=-1))
+            chunk = fbm.quant_signal(chunk, c, amax=amax)
+            update_amax = False
+        else:
+            # raw path: the octave-0 kernel folds the running-amax update
+            # into its grid sweep (one HBM read serves filter AND calibrate)
+            amax = state.amax
+            update_amax = True
+        delays, consumed, acc, amax = fir_mp_stream(
+            chunk, n, state.delays, state.consumed, state.acc, amax,
+            self.bp_taps, self.lp_taps, c.gamma_f, solver=c.solver,
+            update_amax=update_amax)
+        return SessionState(delays, consumed, acc, amax,
+                            state.count + n, state.active)
+
+    def _cascade_xla(self, state: SessionState, chunk: jax.Array,
+                     n: jax.Array) -> SessionState:
+        """Octave cascade in XLA: per-octave [delay, chunk] splice."""
+        c = self.config
+        S, L = chunk.shape
         # running amax update precedes scaling: chunk i is quantized against
         # max over chunks 0..i, converging to the one-shot global scale
         amax = jnp.maximum(state.amax, jnp.max(jnp.abs(chunk), axis=-1))
@@ -300,10 +354,11 @@ class InFilterPipeline:
             buf = jnp.concatenate([state.delays[o], x_o], axis=1)
             y = fbm.bank_fir_valid(buf[:, T1 - (M_bp - 1):],
                                    self.bp_taps[o], c)       # (S, F, l_max)
-            pos = jax.lax.broadcasted_iota(jnp.int32, y.shape, y.ndim - 1)
-            hwr = jnp.where(pos < n_o[:, None, None],
-                            jnp.maximum(y, 0.0), 0.0)
-            parts.append(jnp.sum(hwr, axis=-1) * (2.0 ** o))     # (S, F)
+            # blocked HWR accumulation: the shared reduction order that
+            # keeps this path bit-identical to one-shot accumulate (single
+            # chunk) and to the Pallas streaming kernel's grid-carried sums
+            parts.append(fbm.hwr_accumulate(y, n_o[:, None])
+                         * (2.0 ** o))                           # (S, F)
             # register update: the last T1 *valid* samples become the new
             # delay line — per-slot offsets, so vmap the dynamic slice
             delays.append(jax.vmap(
@@ -340,10 +395,8 @@ class InFilterPipeline:
                 n_o = jnp.maximum(0, (n_o - start + 1) // 2)
                 l_max = l_next
         acc = state.acc + jnp.concatenate(parts, axis=-1)
-        state = SessionState(tuple(delays), tuple(consumed), acc, amax,
-                             state.count + n, state.active)
-        phi = (acc - self.mu) / self.sigma
-        return state, km.forward(self.clf, phi, exact=False), phi
+        return SessionState(tuple(delays), tuple(consumed), acc, amax,
+                            state.count + n, state.active)
 
     # -- deprecated one-cohort streaming shims -------------------------------
 

@@ -14,6 +14,11 @@ Kernels:
   fir_mp_bank  - multi-filter fir_mp: grid (batch_tile, filter) with the
                  filter axis innermost so one VMEM-resident signal block
                  serves a whole octave's filter set in a single pallas_call
+  fir_mp_stream - stateful session-step kernel: grid (slot, chunk_block,
+                 filter) carrying each slot's FIR delay line, per-band
+                 accumulators and running amax in VMEM scratch across grid
+                 steps (the step()-shaped streaming hot path; bit-identical
+                 to the XLA session step in interpret mode)
 """
 
 from repro.kernels.ops import (  # noqa: F401
@@ -23,4 +28,5 @@ from repro.kernels.ops import (  # noqa: F401
     fir_mp_accumulate,
     fir_mp_bank,
     fir_mp_bank_accumulate,
+    fir_mp_stream,
 )

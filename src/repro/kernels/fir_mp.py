@@ -25,6 +25,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import mp as mp_mod
+from repro.core.filterbank import accumulate_block_len
 
 DEFAULT_ITERS = 26
 
@@ -153,6 +157,212 @@ def _fir_mp_bank_kernel(gamma_ref, x_ref, h_ref, out_ref, *, iters, M,
         out_ref[...] = jnp.sum(jnp.maximum(y, 0.0), axis=-1, keepdims=True)
     else:
         out_ref[...] = y[None]
+
+
+# ---------------------------------------------------------------------------
+# fir_mp_stream: stateful session-step kernel
+# ---------------------------------------------------------------------------
+
+
+def _fir_mp_stream_kernel(gamma_ref, x_ref, n_ref, start_ref, delay_ref,
+                          acc_ref, amax_ref, h_ref, lp_ref, *refs,
+                          solver, scale, emit_next, update_amax,
+                          T1, M, M_lp, LB):
+    """One grid step of the streaming octave kernel.
+
+    Grid is (slot_block, chunk_block, filter) with filter INNERMOST: the
+    (bs, LB) signal block's index map is constant across the F filter steps,
+    so Pallas keeps it VMEM-resident and only the (1, M) tap row is
+    re-fetched per filter (same trick as fir_mp_bank). The slot state —
+    FIR delay line, per-band partial accumulators, running amax — lives in
+    VMEM scratch and is carried across the chunk_block axis: the chunk
+    streams through VMEM block by block with NO per-block HBM state
+    round-trip; state is read once at grid start and written once at the
+    final step.
+
+    Bit-parity with the XLA session step is by construction: the same
+    ``mp._mp_dot_fast`` solver runs on the same window values (per-row
+    minor-axis reductions are leading-shape independent), and the HWR sums
+    use the shared ``accumulate_block_len`` blocking, added in ascending
+    block order exactly like ``filterbank.hwr_accumulate``.
+    """
+    if emit_next:
+        out_acc_ref, out_delay_ref, out_amax_ref, out_next_ref = refs[:4]
+        delay_s, part_s, amax_s = refs[4:]
+    else:
+        out_acc_ref, out_delay_ref, out_amax_ref = refs[:3]
+        delay_s, part_s, amax_s = refs[3:]
+
+    b = pl.program_id(1)
+    f = pl.program_id(2)
+    NB = pl.num_programs(1)
+    F = pl.num_programs(2)
+
+    @pl.when((b == 0) & (f == 0))
+    def _init():
+        delay_s[...] = delay_ref[...]
+        part_s[...] = jnp.zeros_like(part_s)
+        amax_s[...] = amax_ref[...]
+
+    blk = x_ref[...]                              # (bs, LB)
+    nv = n_ref[...][:, 0]                         # (bs,) valid counts
+    gamma = gamma_ref[0, 0]
+
+    if update_amax:
+        # running amax: invalid tails were zeroed upstream, and the padded
+        # tail block is zeros, so blockwise max == whole-row max (max is
+        # exactly associative; all operands >= +0.0).
+        @pl.when(f == 0)
+        def _amax():
+            amax_s[...] = jnp.maximum(
+                amax_s[...],
+                jnp.max(jnp.abs(blk), axis=-1, keepdims=True))
+
+    # --- band-pass filter f over this block -------------------------------
+    hist = delay_s[:, T1 - (M - 1):] if M > 1 else delay_s[:, T1:]
+    bufv = jnp.concatenate([hist, blk], axis=1)   # (bs, M-1+LB)
+    idx = (jax.lax.broadcasted_iota(jnp.int32, (LB, M), 0)
+           + jax.lax.broadcasted_iota(jnp.int32, (LB, M), 1))
+    win = bufv[:, idx]                            # (bs, LB, M) windows
+    h = h_ref[...][0, ::-1]                       # conv tap order, as in XLA
+    y = mp_mod._mp_dot_fast(win, h, gamma, solver)
+    pos = b * LB + jax.lax.broadcasted_iota(jnp.int32, (1, LB), 1)
+    hwr = jnp.where(pos < nv[:, None], jnp.maximum(y, 0.0), 0.0)
+    part_s[pl.ds(f, 1), :] = (part_s[pl.ds(f, 1), :]
+                              + mp_mod.tree_sum(hwr)[None, :])
+
+    @pl.when(f == F - 1)
+    def _block_tail():
+        # LP + ÷2 decimation for the next octave: solve ONLY the kept
+        # positions. LB is even, so each slot's keep-parity (its decimator
+        # phase) is constant across blocks; kept j of block b lands at
+        # out position b*LB/2 + j.
+        if emit_next:
+            histl = (delay_s[:, T1 - (M_lp - 1):] if M_lp > 1
+                     else delay_s[:, T1:])
+            bufl = jnp.concatenate([histl, blk], axis=1)
+            widx = (2 * jax.lax.broadcasted_iota(jnp.int32, (LB // 2, M_lp), 0)
+                    + jax.lax.broadcasted_iota(jnp.int32, (LB // 2, M_lp), 1))
+            stv = start_ref[...][:, 0]            # per-slot phase in {0, 1}
+            winl = jax.vmap(lambda r, s: r[s + widx])(bufl, stv)
+            lp = lp_ref[...][0, ::-1]
+            out_next_ref[...] = mp_mod._mp_dot_fast(winl, lp, gamma, solver)
+        # slide the delay line by this block's VALID sample count; a
+        # zero-valid (masked/inert) slot slides by 0 and keeps its
+        # registers bit-identical.
+        v = jnp.clip(nv - b * LB, 0, LB)
+        bufd = jnp.concatenate([delay_s[...], blk], axis=1)
+        delay_s[...] = jax.vmap(
+            lambda r, s: jax.lax.dynamic_slice(r, (s,), (T1,)))(bufd, v)
+
+    @pl.when((b == NB - 1) & (f == F - 1))
+    def _flush():
+        out_acc_ref[...] = acc_ref[...] + part_s[...].T * scale
+        out_delay_ref[...] = delay_s[...]
+        out_amax_ref[...] = amax_s[...]
+
+
+def fir_mp_stream_octave(
+    x: jax.Array,
+    n: jax.Array,
+    start: jax.Array,
+    delay: jax.Array,
+    acc: jax.Array,
+    amax: jax.Array,
+    H: jax.Array,
+    lp: jax.Array,
+    gamma: jax.Array,
+    *,
+    scale: float = 1.0,
+    solver: str = "newton",
+    emit_next: bool = True,
+    update_amax: bool = False,
+    block_s: int = 8,
+    interpret: bool = False,
+):
+    """One octave of the stateful streaming step, as a single pallas_call.
+
+    x (S, L): this octave's chunk (invalid tails already zeroed/masked
+    upstream); n (S,): per-slot valid counts; start (S,): per-slot decimator
+    phase (consumed % 2); delay (S, T1): FIR delay line registers; acc
+    (S, F): this octave's accumulator columns; amax (S,): running amax
+    (updated in-kernel only when ``update_amax``); H (F, M): band-pass taps;
+    lp (M_lp,): anti-aliasing taps (ignored unless ``emit_next``).
+
+    Returns ``(acc', delay', amax', y_next | None)`` where ``y_next`` is
+    (S, ceil(L/LB) * LB//2) — slice to ``(L+1)//2`` for the next octave.
+    """
+    S, L = x.shape
+    F, M = H.shape
+    T1 = delay.shape[1]
+    (M_lp,) = lp.shape
+    LB = accumulate_block_len(L)
+    NB = -(-L // LB)
+    bs = min(block_s, S)
+    s_pad = (-S) % bs
+    Sp = S + s_pad
+    dt = x.dtype
+
+    xp = jnp.pad(x, ((0, s_pad), (0, NB * LB - L)))
+    pad1 = lambda a: jnp.pad(a, ((0, s_pad),))
+    n2 = pad1(n.astype(jnp.int32))[:, None]
+    start2 = pad1(start.astype(jnp.int32))[:, None]
+    delay_p = jnp.pad(delay, ((0, s_pad), (0, 0)))
+    acc_p = jnp.pad(acc, ((0, s_pad), (0, 0)))
+    amax2 = pad1(amax.astype(dt))[:, None]
+    H = H.astype(dt)
+    lp2 = lp.astype(dt)[None, :]
+    gamma_arr = jnp.asarray(gamma, dtype=dt).reshape(1, 1)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((Sp, F), dt),             # acc'
+        jax.ShapeDtypeStruct((Sp, T1), dt),            # delay'
+        jax.ShapeDtypeStruct((Sp, 1), dt),             # amax'
+    ]
+    out_specs = [
+        pl.BlockSpec((bs, F), lambda i, b, f: (i, 0)),
+        pl.BlockSpec((bs, T1), lambda i, b, f: (i, 0)),
+        pl.BlockSpec((bs, 1), lambda i, b, f: (i, 0)),
+    ]
+    if emit_next:
+        out_shape.append(jax.ShapeDtypeStruct((Sp, NB * (LB // 2)), dt))
+        out_specs.append(pl.BlockSpec((bs, LB // 2), lambda i, b, f: (i, b)))
+
+    outs = pl.pallas_call(
+        functools.partial(_fir_mp_stream_kernel, solver=solver, scale=scale,
+                          emit_next=emit_next, update_amax=update_amax,
+                          T1=T1, M=M, M_lp=M_lp, LB=LB),
+        grid=(Sp // bs, NB, F),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, b, f: (0, 0)),     # gamma
+            pl.BlockSpec((bs, LB), lambda i, b, f: (i, b)),   # signal
+            pl.BlockSpec((bs, 1), lambda i, b, f: (i, 0)),    # valid counts
+            pl.BlockSpec((bs, 1), lambda i, b, f: (i, 0)),    # decim phase
+            pl.BlockSpec((bs, T1), lambda i, b, f: (i, 0)),   # delay line
+            pl.BlockSpec((bs, F), lambda i, b, f: (i, 0)),    # accumulators
+            pl.BlockSpec((bs, 1), lambda i, b, f: (i, 0)),    # running amax
+            pl.BlockSpec((1, M), lambda i, b, f: (f, 0)),     # BP tap row
+            pl.BlockSpec((1, M_lp), lambda i, b, f: (0, 0)),  # LP taps
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((bs, T1), dt),    # delay line, carried across blocks
+            pltpu.VMEM((F, bs), dt),     # per-band partial accumulators
+            pltpu.VMEM((bs, 1), dt),     # running amax
+        ],
+        # scratch is carried across grid steps -> every axis must iterate
+        # sequentially on TPU (no parallel partitioning of the grid)
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(gamma_arr, xp, n2, start2, delay_p, acc_p, amax2, H, lp2)
+
+    acc_o = outs[0][:S]
+    delay_o = outs[1][:S]
+    amax_o = outs[2][:S, 0]
+    y_next = outs[3][:S] if emit_next else None
+    return acc_o, delay_o, amax_o, y_next
 
 
 def fir_mp_pallas(

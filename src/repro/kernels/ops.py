@@ -154,3 +154,72 @@ def fir_mp_bank_accumulate(x: jax.Array, H: jax.Array, gamma,
     s = _fir.fir_mp_bank_pallas(x2, H, gamma, accumulate=True, iters=iters,
                                 interpret=_interpret())      # (B, F)
     return s.reshape(*lead, H.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# fir_mp_stream: the session-shaped streaming step
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("solver", "update_amax", "block_s"))
+def fir_mp_stream(chunk: jax.Array, n: jax.Array, delays: tuple,
+                  consumed: tuple, acc: jax.Array, amax: jax.Array,
+                  bp_taps: tuple, lp_taps: tuple, gamma, *,
+                  solver: str = "newton", update_amax: bool = True,
+                  block_s: int = 8):
+    """Stateful multirate session step through the Pallas streaming kernel.
+
+    chunk (S, L): one slot-batched chunk, invalid tails already zeroed (and
+    quantized, if deployed quantized — in which case pass the pre-updated
+    running amax and ``update_amax=False``; without quantization the octave-0
+    kernel updates the running amax in VMEM scratch itself). ``n`` (S,) are
+    per-slot valid counts (0 for masked/inert slots), ``delays``/``consumed``
+    per-octave register tuples, ``acc`` (S, P) the concatenated per-band
+    accumulators, ``bp_taps[o]`` (F, M) / ``lp_taps[o]`` (M_lp,) the
+    precomputed filters.
+
+    One pallas_call per octave; each carries that octave's delay line,
+    per-band accumulator partials, and (octave 0) running amax in VMEM
+    scratch across its chunk-block grid steps — the per-chunk state never
+    round-trips through HBM inside the step, and the [delay, chunk] splice
+    happens in VMEM rather than as an XLA concatenation. The decimated
+    signal hops octaves through HBM exactly once, like the XLA path's
+    octave cascade.
+
+    Returns ``(delays', consumed', acc', amax')``. Masked slots (n == 0)
+    are inert: their registers come back bit-identical (delay slides by 0,
+    accumulator contributions are exactly +0.0).
+    """
+    num_octaves = len(delays)
+    S, L = chunk.shape
+    F = bp_taps[0].shape[0]
+    x_o = chunk
+    n_o = jnp.asarray(n, jnp.int32)
+    l_o = L
+    new_delays, new_consumed, acc_cols = [], [], []
+    amax_out = amax
+    interpret = _interpret()
+    for o in range(num_octaves):
+        start_o = jnp.remainder(consumed[o], 2).astype(jnp.int32)
+        emit = o < num_octaves - 1
+        lp = lp_taps[o] if emit else jnp.zeros((1,), chunk.dtype)
+        acc_o = jax.lax.slice_in_dim(acc, o * F, (o + 1) * F, axis=1)
+        amax_in = amax if o == 0 else jnp.zeros((S,), chunk.dtype)
+        acc_new, delay_new, amax_new, y_next = _fir.fir_mp_stream_octave(
+            x_o, n_o, start_o, delays[o], acc_o, amax_in, bp_taps[o], lp,
+            gamma, scale=2.0 ** o, solver=solver, emit_next=emit,
+            update_amax=(update_amax and o == 0), block_s=block_s,
+            interpret=interpret)
+        if o == 0:
+            amax_out = amax_new if update_amax else amax
+        new_delays.append(delay_new)
+        new_consumed.append(consumed[o] + n_o)
+        acc_cols.append(acc_new)
+        if emit:
+            l_next = (l_o + 1) // 2
+            x_o = y_next[:, :l_next]
+            n_o = jnp.maximum(0, (n_o - start_o + 1) // 2)
+            l_o = l_next
+    return (tuple(new_delays), tuple(new_consumed),
+            jnp.concatenate(acc_cols, axis=1), amax_out)

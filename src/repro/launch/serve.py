@@ -39,7 +39,8 @@ def _serve_acoustic(args):
     from repro.configs.esc10_mp import make_pipeline
     from repro.serving import StreamServer
 
-    pipe = make_pipeline(smoke=args.smoke, seed=args.seed)
+    pipe = make_pipeline(smoke=args.smoke, seed=args.seed,
+                         stream_impl=args.stream_impl)
     fs = pipe.config.fs
     server = StreamServer(pipe, capacity=args.streams,
                           max_chunk=max(args.chunk, 16))
@@ -139,6 +140,11 @@ def main(argv=None):
                     help="esc10-mp: sensor packet length in samples")
     ap.add_argument("--rounds", type=int, default=25,
                     help="esc10-mp: packets fed per stream")
+    ap.add_argument("--stream-impl", choices=["xla", "pallas"],
+                    default="xla",
+                    help="esc10-mp: session-step hot path — 'pallas' runs "
+                         "the stateful fir_mp_stream kernel (VMEM-carried "
+                         "delay lines; interpret mode off-TPU)")
     args = ap.parse_args(argv)
 
     if args.arch == ACOUSTIC_ARCH:

@@ -55,7 +55,10 @@ class StreamServer:
 
     Parameters
     ----------
-    pipeline:       the deployable ``InFilterPipeline``.
+    pipeline:       the deployable ``InFilterPipeline``. Its config's
+                    ``stream_impl`` picks the donated batch step's hot path
+                    ("xla" or the stateful "pallas" streaming kernel —
+                    bit-identical decisions either way).
     capacity:       number of slots S (streams resident at once).
     max_chunk:      largest per-call chunk; longer packets are split.
     min_chunk:      smallest pad bucket (tiny packets share one variant).
@@ -79,6 +82,13 @@ class StreamServer:
             raise ValueError("capacity must be >= 1")
         if not (0 < min_chunk <= max_chunk):
             raise ValueError("need 0 < min_chunk <= max_chunk")
+        # fail at construction, not on the first feed(): the Pallas
+        # streaming kernel has no MAC-mode variant
+        if pipeline.config.stream_impl == "pallas" \
+                and pipeline.config.mode != "mp":
+            raise ValueError(
+                "stream_impl='pallas' requires an MP-mode pipeline "
+                f"(got mode={pipeline.config.mode!r})")
         self.pipeline = pipeline
         self.capacity = capacity
         self.max_chunk = max_chunk
@@ -129,6 +139,7 @@ class StreamServer:
             "resident": len(self._sessions),
             "free_slots": len(self._free),
             "steps_run": self.steps_run,
+            "stream_impl": self.pipeline.config.stream_impl,
             "buckets": dict(sorted(self.bucket_counts.items())),
         }
 

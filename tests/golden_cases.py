@@ -1,0 +1,84 @@
+"""Golden regression case specs, shared by the fixture test
+(tests/test_golden.py) and the regenerator (scripts/regen_golden.py).
+
+Each case pins a full audio -> decision path: a seeded synthetic clip, a
+pipeline configuration (taps and classifier weights derive deterministically
+from the seed), a one-shot pass, and a fixed-chunking streamed pass through
+BOTH stream impls. The expected outputs live in tests/golden/<name>.npz;
+inputs are regenerated from the seed so fixtures stay tiny.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+# (name, config overrides, audio shape, chunking)
+CASES = {
+    "esc_mp_f32": dict(
+        cfg=dict(fs=8000.0, num_octaves=3, filters_per_octave=3,
+                 mode="mp", gamma_f=4.0),
+        shape=(2, 1000), chunk=160, seed=7,
+    ),
+    "esc_mp_quant8": dict(
+        cfg=dict(fs=8000.0, num_octaves=3, filters_per_octave=3,
+                 mode="mp", gamma_f=4.0, quant_bits=8),
+        shape=(2, 1000), chunk=160, seed=11,
+    ),
+    "esc_mp_bisect": dict(
+        cfg=dict(fs=4000.0, num_octaves=2, filters_per_octave=2,
+                 mode="mp", gamma_f=4.0, solver="bisect"),
+        shape=(1, 600), chunk=77, seed=13,
+    ),
+}
+
+
+def build_pipeline(case: dict, stream_impl: str = "xla"):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import kernel_machine as km
+    from repro.core.filterbank import FilterBank, FilterBankConfig
+    from repro.core.pipeline import InFilterPipeline
+
+    cfg = FilterBankConfig(**case["cfg"])._replace(stream_impl=stream_impl)
+    fb = FilterBank(cfg)
+    P = cfg.num_filters
+    clf = km.init_params(jax.random.PRNGKey(case["seed"]), P, 5)
+    mu = jax.random.normal(jax.random.PRNGKey(case["seed"] + 1), (P,)) * 0.1
+    sigma = jnp.abs(
+        jax.random.normal(jax.random.PRNGKey(case["seed"] + 2), (P,))) + 0.5
+    return InFilterPipeline.from_filterbank(fb, clf, mu, sigma)
+
+
+def make_audio(case: dict) -> np.ndarray:
+    rng = np.random.default_rng(case["seed"])
+    x = rng.standard_normal(case["shape"]).astype(np.float32)
+    x[:, 0] = 2.5          # known peak: quantized streaming is calibrated
+    return x
+
+
+def compute_outputs(case: dict) -> dict:
+    """The recorded surface: one-shot p/phi, streamed p (both impls), and
+    the final streamed accumulator registers."""
+    import jax.numpy as jnp
+
+    x = jnp.asarray(make_audio(case))
+    out = {}
+    for impl in ("xla", "pallas"):
+        pipe = build_pipeline(case, impl)
+        if impl == "xla":
+            p, phi = pipe.apply(x, return_features=True)
+            out["p_oneshot"] = np.asarray(p)
+            out["phi_oneshot"] = np.asarray(phi)
+        state = pipe.init_session(x.shape[0],
+                                  amax=jnp.max(jnp.abs(x), axis=-1))
+        p_s = None
+        for i in range(0, x.shape[1], case["chunk"]):
+            p_s, state = pipe.apply(x[:, i:i + case["chunk"]], state)
+        out[f"p_stream_{impl}"] = np.asarray(p_s)
+        out[f"acc_stream_{impl}"] = np.asarray(state.acc)
+    return out

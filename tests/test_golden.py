@@ -1,0 +1,75 @@
+"""Golden regression gate: seeded audio -> decision vectors, checked in.
+
+Any drift in the numerics of the deployed path — filter design, MP solver,
+reduction order, quantization, streaming registers — fails here LOUDLY with
+instructions, instead of surfacing as a silent accuracy shift on hardware.
+If a drift is intentional, regenerate with::
+
+    PYTHONPATH=src python scripts/regen_golden.py
+
+and commit the refreshed fixtures with an explanation.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from golden_cases import CASES, GOLDEN_DIR, compute_outputs
+
+# exact-match would overfit to compiler codegen (fixtures must survive jax
+# upgrades); 1e-5 is ~100x tighter than any real numerics change we gate on
+# (solver swaps and reduction reorders move decisions by >= 1e-4)
+ATOL = 1e-5
+
+_DRIFT_MSG = """
+
+GOLDEN NUMERICS DRIFT in case {name!r}, output {key!r}
+  max |delta| = {delta:.3e} (gate: atol={atol})
+
+The audio -> decision path no longer reproduces the checked-in fixture.
+If this change is INTENTIONAL (new solver/reduction/filter design), refresh:
+    PYTHONPATH=src python scripts/regen_golden.py
+and commit tests/golden/*.npz with an explanation. If it is not intentional,
+you just caught a numerics regression — do not regenerate over it.
+"""
+
+
+_CACHE = {}
+
+
+def _outputs(name):
+    if name not in _CACHE:
+        _CACHE[name] = compute_outputs(CASES[name])
+    return _CACHE[name]
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden_fixture(name):
+    path = os.path.join(GOLDEN_DIR, f"{name}.npz")
+    assert os.path.exists(path), (
+        f"missing fixture {path}; generate with "
+        "PYTHONPATH=src python scripts/regen_golden.py")
+    want = dict(np.load(path))
+    got = _outputs(name)
+    assert set(got) == set(want), (
+        f"{name}: recorded surface changed "
+        f"(have {sorted(got)}, fixture has {sorted(want)}) — regenerate")
+    for key in sorted(want):
+        delta = float(np.max(np.abs(got[key] - want[key]))) \
+            if want[key].size else 0.0
+        assert np.allclose(got[key], want[key], atol=ATOL), \
+            _DRIFT_MSG.format(name=name, key=key, delta=delta, atol=ATOL)
+
+
+def test_golden_streams_agree_bitwise():
+    """Inside one jax version the two stream impls must match exactly —
+    recorded once here so the fixture itself documents the contract."""
+    for name in sorted(CASES):
+        got = _outputs(name)
+        np.testing.assert_array_equal(
+            got["p_stream_xla"], got["p_stream_pallas"],
+            err_msg=f"{name}: stream impls diverged")
+        np.testing.assert_array_equal(
+            got["acc_stream_xla"], got["acc_stream_pallas"],
+            err_msg=f"{name}: stream accumulators diverged")

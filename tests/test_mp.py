@@ -3,59 +3,13 @@
 The invariants below are exactly the reverse-water-filling definition and
 the algebraic identities the hardware relies on."""
 
-import zlib
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-
-    settings.register_profile("ci", max_examples=40, deadline=None)
-    settings.load_profile("ci")
-except ImportError:
-    # Clean envs ship no hypothesis; fall back to a deterministic sampler so
-    # tier-1 collection (and the invariants) still run. Covers exactly the
-    # strategy surface used below: floats / integers / lists-of-floats.
-    _MAX_EXAMPLES = 40
-
-    class _Strategy:
-        def __init__(self, sample):
-            self.sample = sample  # rng -> drawn value
-
-    class _st:
-        @staticmethod
-        def floats(min_value, max_value, allow_nan=False):
-            return _Strategy(
-                lambda rng: float(rng.uniform(min_value, max_value)))
-
-        @staticmethod
-        def integers(min_value, max_value):
-            return _Strategy(
-                lambda rng: int(rng.integers(min_value, max_value + 1)))
-
-        @staticmethod
-        def lists(elems, min_size=0, max_size=10):
-            def sample(rng):
-                n = int(rng.integers(min_size, max_size + 1))
-                return [elems.sample(rng) for _ in range(n)]
-            return _Strategy(sample)
-
-    st = _st
-
-    def given(*strategies):
-        def deco(fn):
-            def wrapper(*args):
-                seed = zlib.crc32(fn.__qualname__.encode())
-                rng = np.random.default_rng(seed)
-                for _ in range(_MAX_EXAMPLES):
-                    fn(*args, *[s.sample(rng) for s in strategies])
-            wrapper.__name__ = fn.__name__
-            wrapper.__doc__ = fn.__doc__
-            return wrapper
-        return deco
+# hypothesis when installed, the deterministic fallback sampler otherwise —
+# shared by every property-testing module (see tests/conftest.py)
+from conftest import given, st
 
 from repro.core import mp as M
 
