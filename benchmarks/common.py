@@ -1,7 +1,9 @@
 """Shared benchmark utilities: timing + CSV emission.
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows so
-``python -m benchmarks.run`` output is machine-readable.
+``python -m benchmarks.run`` output is machine-readable. Rows are also
+collected in-process so the driver can emit a ``BENCH_pipeline.json``
+trajectory artifact (one file per run, diffable across PRs).
 """
 
 from __future__ import annotations
@@ -10,7 +12,9 @@ import time
 
 import jax
 
-__all__ = ["time_fn", "row"]
+__all__ = ["time_fn", "row", "drain_rows"]
+
+_ROWS: list = []
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -28,3 +32,14 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def row(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+    _ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                  "derived": derived})
+
+
+def drain_rows() -> list:
+    """Hand the rows emitted since the last drain to the caller (the
+    ``benchmarks.run`` driver groups them per module for the trajectory
+    artifact)."""
+    rows = list(_ROWS)
+    _ROWS.clear()
+    return rows

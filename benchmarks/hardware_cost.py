@@ -3,17 +3,25 @@
 The paper's headline is resource count: the MP design uses 0 DSPs and <1K
 slices because it is multiplierless. We can't synthesize Verilog here, but
 we can count the primitive operations each inference performs by walking
-the traced jaxpr of (a) the MP in-filter classifier and (b) the MAC
-baseline, and convert multiplier counts to LUT-equivalents with the paper's
-own figures (8x8 signed Baugh-Wooley multiplier = 72 LUTs; adds/compares
-= ~8 LUTs at 8 bit).
+the traced jaxpr and convert multiplier counts to LUT-equivalents with the
+paper's own figures (8x8 signed Baugh-Wooley multiplier = 72 LUTs;
+adds/compares = ~8 LUTs at 8 bit).
 
-Multiplications by power-of-two literals are classified as shifts (the MP
-bisection's halving step), exactly as the FPGA implements them.
+Since the fixed-point refactor the census has a REAL target: the integer
+hardware twin (``repro.core.fixed``, numerics="fixed") executes the whole
+audio -> decision path in int32. Its jaxpr is walked here with a HARD
+assertion that no multiply and no divide survives — the multiplierless
+claim as an executable regression gate, not prose. The float MP/MAC paths
+are kept for comparison (the float MP census still counts the pow2
+bisection halvings as shifts, exactly as the FPGA implements them).
+
+Run with ``--smoke`` (used by scripts/bench_smoke.sh) for a reduced config
+that still exercises the assertion.
 """
 
 from __future__ import annotations
 
+import argparse
 import math
 from collections import Counter
 
@@ -23,8 +31,9 @@ import numpy as np
 
 from benchmarks.common import row
 from repro.core.filterbank import FilterBank, FilterBankConfig
+from repro.core import fixed
 from repro.core import kernel_machine as km
-from repro.core import mp as mp_mod
+from repro.core.pipeline import InFilterPipeline
 
 FS = 16000.0
 N = 16000  # 1 s
@@ -54,9 +63,22 @@ def _out_elems(eqn) -> int:
     return tot
 
 
+def _in_elems(eqn) -> int:
+    v = eqn.invars[0]
+    n = 1
+    for d in getattr(v.aval, "shape", ()):
+        n *= d
+    return n
+
+
 MUL_OPS = {"mul"}
-ADD_OPS = {"add", "sub"}
-CMP_OPS = {"max", "min", "gt", "lt", "ge", "le", "select_n", "eq"}
+ADD_OPS = {"add", "sub", "neg"}
+CMP_OPS = {"max", "min", "gt", "lt", "ge", "le", "select_n", "eq", "abs",
+           "sign", "clamp"}
+SHIFT_OPS = {"shift_left", "shift_right_arithmetic", "shift_right_logical"}
+# reductions lower to one op per consumed element (an adder/comparator tree)
+REDUCE_ADD_OPS = {"reduce_sum"}
+REDUCE_CMP_OPS = {"reduce_max", "reduce_min"}
 
 
 def census(fn, *args) -> Counter:
@@ -110,8 +132,14 @@ def census(fn, *args) -> Counter:
                 counts["add"] += n
             elif name in CMP_OPS:
                 counts["compare"] += n
+            elif name in SHIFT_OPS:
+                counts["shift"] += n
+            elif name in REDUCE_ADD_OPS:
+                counts["add"] += max(_in_elems(eqn) - n, 0)
+            elif name in REDUCE_CMP_OPS:
+                counts["compare"] += max(_in_elems(eqn) - n, 0)
             elif name in ("exp", "log", "tanh", "logistic", "rsqrt", "sqrt",
-                          "div", "integer_pow"):
+                          "div", "integer_pow", "pow"):
                 counts["transcendental_or_div"] += n
 
     walk(jaxpr.jaxpr)
@@ -127,15 +155,60 @@ def lut_estimate(c: Counter) -> float:
             + c["transcendental_or_div"] * 200)
 
 
-def main():
-    x = jnp.zeros((1, N), jnp.float32)
-    P = 30
+def assert_multiplierless(c: Counter, tag: str) -> None:
+    """The hard gate: the integer hardware twin's jaxpr must contain ZERO
+    multiplies (pow2-literal scalings count as shifts) and ZERO divides —
+    the paper's primitive set is add/subtract/shift/compare only."""
+    bad = {k: c[k] for k in ("multiply", "transcendental_or_div") if c[k]}
+    if bad:
+        raise AssertionError(
+            f"{tag}: the integer jaxpr is NOT multiplierless: {bad} "
+            "(a float multiply or divide leaked into the fixed-point path)")
+
+
+def _fixed_pipeline(cfg, seed: int = 0) -> InFilterPipeline:
+    fb = FilterBank(cfg)
+    P = cfg.num_filters
+    params = km.init_params(jax.random.PRNGKey(seed), P, 10)
+    mu = jnp.zeros((P,))
+    sigma = jnp.ones((P,))
+    return InFilterPipeline.from_filterbank(fb, params, mu, sigma)
+
+
+def emit_rows(tag: str, c: Counter, n_samples: int) -> None:
+    per = {k: v / n_samples for k, v in c.items()}  # per input sample
+    row(f"hw.{tag}.mult_per_sample", 0.0, f"{per.get('multiply', 0):.1f}")
+    row(f"hw.{tag}.add_per_sample", 0.0, f"{per.get('add', 0):.1f}")
+    row(f"hw.{tag}.cmp_per_sample", 0.0, f"{per.get('compare', 0):.1f}")
+    row(f"hw.{tag}.shift_per_sample", 0.0, f"{per.get('shift', 0):.1f}")
+    row(f"hw.{tag}.lut_weighted_ops_per_sample", 0.0,
+        f"{lut_estimate(c) / n_samples:.0f} (ops-weighted; the FPGA time-"
+        f"multiplexes 3 MP modules so unit count is far lower)")
+
+
+def main(argv=()):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (3 octaves, 0.1 s) — still runs "
+                         "the multiplierless assertion on the integer path")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        n = 1600
+        base = FilterBankConfig(fs=4000.0, num_octaves=3,
+                                filters_per_octave=3, mode="mp",
+                                gamma_f=4.0, solver="bisect")
+    else:
+        n = N
+        base = FilterBankConfig(fs=FS, num_octaves=6, mode="mp",
+                                gamma_f=4.0, solver="bisect")
+    x = jnp.zeros((1, n), jnp.float32)
+    P = base.num_filters
 
     # --- MP in-filter path (bisection filtering + MP classifier) ---
     # solver="bisect": the census models the FPGA, whose MP modules run the
     # add/compare/shift bisection — not the software-fast Newton path
-    fb_mp = FilterBank(FilterBankConfig(fs=FS, num_octaves=6, mode="mp",
-                                        gamma_f=4.0, solver="bisect"))
+    fb_mp = FilterBank(base)
     params = km.init_params(jax.random.PRNGKey(0), P, 10)
 
     def mp_infer(x):
@@ -143,7 +216,7 @@ def main():
         return km.forward(params, s)
 
     # --- MAC baseline (conv filtering + linear classifier) ---
-    fb_mac = FilterBank(FilterBankConfig(fs=FS, num_octaves=6, mode="mac"))
+    fb_mac = FilterBank(base._replace(mode="mac"))
     w = jnp.zeros((P, 10))
     b = jnp.zeros((10,))
 
@@ -152,20 +225,28 @@ def main():
         return km.forward_baseline(w, b, s)
 
     for tag, fn in [("mp_infilter", mp_infer), ("mac_baseline", mac_infer)]:
-        c = census(fn, x)
-        per = {k: v / N for k, v in c.items()}  # per input sample
-        row(f"hw.{tag}.mult_per_sample", 0.0, f"{per.get('multiply', 0):.1f}")
-        row(f"hw.{tag}.add_per_sample", 0.0, f"{per.get('add', 0):.1f}")
-        row(f"hw.{tag}.cmp_per_sample", 0.0, f"{per.get('compare', 0):.1f}")
-        row(f"hw.{tag}.shift_per_sample", 0.0, f"{per.get('shift', 0):.1f}")
-        row(f"hw.{tag}.lut_weighted_ops_per_sample", 0.0,
-            f"{lut_estimate(c) / N:.0f} (ops-weighted; the FPGA time-"
-            f"multiplexes 3 MP modules so unit count is far lower)")
+        emit_rows(tag, census(fn, x), n)
+
+    # --- the integer hardware twin: census the REAL int32 jaxpr ----------
+    # (from quantized codes onward — the ADC rounding at the boundary is
+    # analog-side; everything after it must be add/sub/shift/compare)
+    for tag, mode in [("fixed_mp", "mp"), ("fixed_mac_shift_add", "mac")]:
+        pipe = _fixed_pipeline(base._replace(mode=mode, numerics="fixed"))
+        prog = pipe.fixed_program()
+        xq = fixed.quantize_signal(prog, x)
+        c = census(lambda q: fixed.infer_q(prog, q), xq)
+        assert_multiplierless(c, tag)
+        emit_rows(tag, c, n)
+        row(f"hw.{tag}.multiplierless_assert", 0.0,
+            "PASS (0 multiplies, 0 divides in the integer jaxpr)")
+
     row("hw.reference", 0.0,
         "paper Table I: 0 DSP, 1503 LUT, 2376 FF, 17mW@50MHz; "
-        "[6] CAR-IHC uses 4 DSPs (~890 LUT-equiv). Key check: MP path "
-        "multiplies/sample == 0 (multiplierless), MAC baseline > 0")
+        "[6] CAR-IHC uses 4 DSPs (~890 LUT-equiv). Key check: fixed_mp "
+        "multiplies/sample == 0 ENFORCED on the int32 jaxpr (was a float "
+        "proxy before the fixed-point refactor), MAC baseline > 0")
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(sys.argv[1:])

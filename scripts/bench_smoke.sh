@@ -9,4 +9,7 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m benchmarks.serve_streams --smoke --stream-impl both
 python -m benchmarks.pipeline_e2e --smoke
+# the multiplierless gate: census the int32 hardware-twin jaxpr and FAIL
+# if any float multiply or divide leaked into the fixed-point path
+python -m benchmarks.hardware_cost --smoke
 echo "bench_smoke OK"

@@ -7,6 +7,11 @@ Run this ONLY when a numerics change is intentional (new solver, new
 reduction order, retuned filters) — commit the refreshed .npz files together
 with the change and say why in the commit message. tests/test_golden.py
 fails loudly when the recorded audio -> decision vectors drift.
+
+The recorded surface includes the fixed-point hardware twin's INTEGER
+codes (``*_fixed_q``): those gate at exact equality, so any change to the
+integer datapath (specs, shift tables, bisection, CSD standardization)
+must regenerate here and justify itself.
 """
 
 from __future__ import annotations

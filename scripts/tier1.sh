@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the gate every PR must keep green (see ROADMAP.md).
 # Runs the test suite (which includes the streaming-parity harness in
-# tests/test_streaming_parity.py — the bit-for-bit XLA-vs-Pallas gate; the
-# `pallas` marker selects just the kernel-path subset), then the benchmark
-# smoke pass (bench_smoke.sh) so benchmark bit-rot is caught here rather
-# than at release time.
+# tests/test_streaming_parity.py — the bit-for-bit XLA-vs-Pallas gate —
+# and the fixed-point hardware-twin gates: tests/test_fixed.py carrier
+# parity + the EXACT-match integer golden fixtures in tests/test_golden.py;
+# the `pallas` marker selects just the kernel-path subset), then the
+# benchmark smoke pass (bench_smoke.sh, which also censuses the int32
+# jaxpr and fails on any multiply) so benchmark bit-rot is caught here
+# rather than at release time.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -35,7 +35,9 @@ FILTERBANK_SMOKE = FILTERBANK._replace(fs=4000.0, num_octaves=3,
 def make_pipeline(smoke: bool = False, seed: int = 0,
                   quant_bits: int | None = None,
                   num_classes: int = 10,
-                  stream_impl: str = "xla"):
+                  stream_impl: str = "xla",
+                  numerics: str = "float",
+                  fixed_amax: float | None = None):
     """Build a deployable ``InFilterPipeline`` at the paper's configuration.
 
     The classifier is randomly initialized with identity standardization —
@@ -43,7 +45,9 @@ def make_pipeline(smoke: bool = False, seed: int = 0,
     accuracy; use ``InFilterPipeline.fit`` for a trained pipeline.
     ``stream_impl`` selects the session-step hot path: "xla" (default) or
     "pallas" (the stateful ``fir_mp_stream`` kernel; interpret mode on CPU,
-    compiled on TPU)."""
+    compiled on TPU). ``numerics="fixed"`` builds the bit-true int32
+    hardware twin (one-shot only; ``fixed_amax`` calibrates the ADC
+    full-scale)."""
     import jax
     import jax.numpy as jnp
 
@@ -59,6 +63,13 @@ def make_pipeline(smoke: bool = False, seed: int = 0,
                          "expected 'xla' or 'pallas'")
     if stream_impl != "xla":
         cfg = cfg._replace(stream_impl=stream_impl)
+    if numerics not in ("float", "fixed"):
+        raise ValueError(f"unknown numerics {numerics!r}: "
+                         "expected 'float' or 'fixed'")
+    if numerics != "float":
+        cfg = cfg._replace(numerics=numerics)
+    if fixed_amax is not None:
+        cfg = cfg._replace(fixed_amax=float(fixed_amax))
     fb = FilterBank(cfg)
     P = cfg.num_filters
     clf = km.init_params(jax.random.PRNGKey(seed), P, num_classes)

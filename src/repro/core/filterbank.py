@@ -246,10 +246,22 @@ def quant_signal(x: jax.Array, cfg: "FilterBankConfig",
     return fake_quant(x, cfg.quant_bits, amax=amax)
 
 
+def _require_float_numerics(cfg: "FilterBankConfig", fn: str) -> None:
+    if cfg.numerics == "fixed":
+        raise ValueError(
+            f"{fn} is the float engine and ignores the fixed-point program; "
+            "with numerics='fixed' go through FilterBank.accumulate or "
+            "InFilterPipeline.apply/predict (repro.core.fixed)")
+    if cfg.numerics != "float":
+        raise ValueError(f"unknown numerics {cfg.numerics!r}: "
+                         "expected 'float' or 'fixed'")
+
+
 def multirate_band_outputs(x: jax.Array, bp_taps, lp_taps,
                            cfg: "FilterBankConfig",
                            amax: jax.Array | None = None) -> list:
     """Raw band-pass outputs per octave: list of (B, F, N/2^o) arrays."""
+    _require_float_numerics(cfg, "multirate_band_outputs")
     x = quant_signal(x, cfg, amax)
     outs = []
     x_o = x
@@ -269,6 +281,7 @@ def multirate_accumulate(x: jax.Array, bp_taps, lp_taps,
     at the same scale (the FPGA's per-band accumulators are read out raw, but
     the STD stage removes scale anyway; renormalizing keeps the pre-STD
     dynamic range uniform for fixed-point analysis)."""
+    _require_float_numerics(cfg, "multirate_accumulate")
     x = quant_signal(x, cfg, amax)
     parts = []
     x_o = x
@@ -304,6 +317,15 @@ class FilterBankConfig(NamedTuple):
     # a stateful kernel carrying delay lines / accumulators / running amax
     # in VMEM scratch across grid steps (bit-identical to xla in interpret
     # mode when use_pallas is False — both run the same solver math)
+    numerics: Literal["float", "fixed"] = "float"  # execution numerics:
+    # float = f32 arrays (optionally fake-quant under quant_bits, the QAT
+    # proxy); fixed = the bit-true int32 hardware twin (repro.core.fixed):
+    # power-of-two-scale fixed point, add/sub/shift/compare only — 8-bit
+    # signals/weights, 10-bit internal path per paper §V. One-shot only for
+    # now; the session-streaming integer path is follow-up work.
+    fixed_amax: float = 1.0    # fixed mode: ADC full-scale calibration (a
+    # STATIC power-of-two-snapped range; inputs beyond it saturate, exactly
+    # like the hardware front end)
 
     @property
     def num_filters(self) -> int:
@@ -314,7 +336,14 @@ class FilterBank:
     """Precomputed multirate filter bank. Call `features(x)` on (B, N) audio."""
 
     def __init__(self, config: FilterBankConfig):
+        if config.numerics not in ("float", "fixed"):
+            raise ValueError(f"unknown numerics {config.numerics!r}: "
+                             "expected 'float' or 'fixed'")
+        if config.numerics == "fixed" and config.mode not in ("mp", "mac"):
+            raise ValueError(
+                f"numerics='fixed' has no {config.mode!r}-mode datapath")
         self.config = config
+        self._fixed_bank = None   # lazy compile_bank cache (fixed numerics)
         c = config
         # Octave o (0-indexed) covers [nyq/2^(o+1), nyq/2^o] at rate fs/2^o.
         nyq = c.fs / 2.0
@@ -365,8 +394,28 @@ class FilterBank:
         return multirate_band_outputs(x, self._bp_by_octave, self._lp,
                                       self.config)
 
+    def fixed_bank(self):
+        """The compiled integer filter-bank program (numerics='fixed'):
+        static int32 taps + per-stage fixed-point formats, built once from
+        this bank's float taps. See ``repro.core.fixed.compile_bank``."""
+        if self._fixed_bank is None:
+            from repro.core import fixed
+            self._fixed_bank = fixed.compile_bank(
+                self.config, [np.asarray(t) for t in self._bp_by_octave],
+                [np.asarray(t) for t in self._lp])
+        return self._fixed_bank
+
     def accumulate(self, x: jax.Array) -> jax.Array:
-        """s_p = sum_n HWR(B_p(n)) for every filter. x: (B, N) -> (B, P)."""
+        """s_p = sum_n HWR(B_p(n)) for every filter. x: (B, N) -> (B, P).
+
+        With ``numerics='fixed'`` this runs the bit-true int32 datapath
+        (add/sub/shift/compare only) and dequantizes the 32-bit
+        accumulators; otherwise the float engine."""
+        if self.config.numerics == "fixed":
+            from repro.core import fixed
+            bank = self.fixed_bank()
+            xq = fixed.quantize_signal(bank, x)
+            return bank.acc.dequantize(fixed.bank_accumulate_q(bank, xq))
         return multirate_accumulate(x, self._bp_by_octave, self._lp,
                                     self.config)
 

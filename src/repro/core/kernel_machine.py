@@ -23,8 +23,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.mp import mp_exact, mp_newton
+from repro.core.quant import FixedPointSpec
 
-__all__ = ["MPKernelMachineParams", "init_params", "forward", "forward_baseline"]
+__all__ = ["MPKernelMachineParams", "init_params", "forward",
+           "forward_baseline", "quantize_params"]
 
 
 class MPKernelMachineParams(NamedTuple):
@@ -84,6 +86,31 @@ def forward(params: MPKernelMachineParams, K: jax.Array,
     p_pos = jax.nn.relu(z_pos - z)
     p_neg = jax.nn.relu(z_neg - z)
     return p_pos - p_neg
+
+
+def quantize_params(params: MPKernelMachineParams,
+                    rom_spec: FixedPointSpec,
+                    operand_spec: FixedPointSpec):
+    """Integer ROM contents for the fixed-point hardware twin
+    (``repro.core.fixed``): w+/w- are relu'd (the hardware ROMs store
+    nonnegative entries, exactly as ``forward`` enforces), quantized onto
+    the 8-bit ``rom_spec`` grid, then shift-aligned onto the 10-bit
+    ``operand_spec`` grid the MP adders run at (power-of-two scales, so the
+    alignment is a bit shift). Biases quantize directly at operand scale.
+    Returns ``(wp_q, wn_q, bpos_q, bneg_q)`` int32 arrays at
+    ``operand_spec.exp``."""
+    k = rom_spec.exp - operand_spec.exp
+
+    def align(q):
+        if k >= 0:
+            return jnp.left_shift(q, k)
+        return jnp.right_shift(q, -k)  # arithmetic: floor, like the shifter
+
+    wp_q = align(rom_spec.quantize(jax.nn.relu(params.w_pos)))
+    wn_q = align(rom_spec.quantize(jax.nn.relu(params.w_neg)))
+    bpos_q = operand_spec.quantize(params.b_pos)
+    bneg_q = operand_spec.quantize(params.b_neg)
+    return wp_q, wn_q, bpos_q, bneg_q
 
 
 def forward_baseline(w: jax.Array, b: jax.Array, K: jax.Array) -> jax.Array:

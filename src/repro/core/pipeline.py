@@ -43,6 +43,16 @@ layer buckets lengths to powers of two to bound this); within a call the
 octave-level valid lengths are data-dependent per-slot vectors handled with
 masking + per-row dynamic slices, so the step is fully jit-able.
 
+With ``config.numerics == "fixed"`` the stateless path executes the
+bit-true int32 hardware twin (``repro.core.fixed``): the audio quantizes
+onto the calibrated ADC grid and every stage runs in add/sub/shift/compare
+integer arithmetic, dequantizing only at the output surface. The session
+path rejects fixed numerics loudly until the int32 streaming step lands.
+Note the program lowering is host-side, so ``jax.jit`` the *compiled*
+program (``prog = pipe.fixed_program(); jit(lambda x: fixed.predict(prog,
+x))``) rather than ``apply`` itself — jitting ``apply`` directly raises a
+TypeError with that guidance.
+
 Migration (PR 2): ``init_state``/``step``/``StreamingState`` — the one-
 cohort streaming API — remain as thin shims over the session path and will
 go away; new code should use ``init_session``/``apply``/``SessionState``.
@@ -129,6 +139,7 @@ class InFilterPipeline:
         self.mu = mu                     # (P,)
         self.sigma = sigma               # (P,)
         self.clf = clf
+        self._fixed_prog = None          # lazy compile_pipeline cache
 
     # -- pytree protocol (config is static aux data; arrays are leaves) ----
 
@@ -185,9 +196,21 @@ class InFilterPipeline:
         """
         x = jnp.asarray(x)
         if state is None:
+            if self.config.numerics == "fixed":
+                from repro.core import fixed
+                p, phi = fixed.predict(self.fixed_program(), x)
+                return (p, phi) if return_features else p
             phi = self.features(x)
             p = km.forward(self.clf, phi, exact=False)
             return (p, phi) if return_features else p
+        if self.config.numerics == "fixed":
+            # the mode plumbing anticipates integer streaming (the session
+            # registers and delay lines quantize the same way), but the
+            # int32 session step has not landed yet — fail loudly instead
+            # of silently serving float results as "the hardware twin"
+            raise NotImplementedError(
+                "numerics='fixed' session streaming is not implemented yet; "
+                "fixed-point inference is one-shot only (state=None)")
         if isinstance(state, StreamingState):
             raise TypeError(
                 "apply() takes a SessionState (init_session); for the "
@@ -217,11 +240,40 @@ class InFilterPipeline:
 
         Under ``quant_bits`` the signal is quantized per stream row (scale =
         that row's amax, or the explicit ``amax`` override), matching the
-        session streaming path's running-amax semantics.
+        session streaming path's running-amax semantics. With
+        ``numerics='fixed'`` this dequantizes the integer path's 8-bit
+        standardized kernel vector instead (pow2-snapped sigma; see
+        ``repro.core.fixed``).
         """
+        if self.config.numerics == "fixed":
+            if amax is not None:
+                # the fixed program quantizes on its STATIC calibrated ADC
+                # grid; silently dropping a per-call amax override would
+                # hand back wrong-scale features
+                raise ValueError(
+                    "features(amax=...) has no effect under "
+                    "numerics='fixed' — the ADC full-scale is the static "
+                    "config.fixed_amax / fixed_program(amax=...) "
+                    "calibration")
+            from repro.core import fixed
+            prog = self.fixed_program()
+            _, phi_q, _ = fixed.infer_q(prog, fixed.quantize_signal(prog, x))
+            return prog.phi.dequantize(phi_q)
         s = fbm.multirate_accumulate(x, self.bp_taps, self.lp_taps,
                                      self.config, amax=amax)
         return (s - self.mu) / self.sigma
+
+    def fixed_program(self, **overrides):
+        """The compiled integer program for this pipeline (lazy, cached for
+        the no-override call). ``overrides`` pass through to
+        ``repro.core.fixed.compile_pipeline`` (amax, signal_bits,
+        internal_bits, phi_amax)."""
+        from repro.core import fixed
+        if overrides:
+            return fixed.compile_pipeline(self, **overrides)
+        if self._fixed_prog is None:
+            self._fixed_prog = fixed.compile_pipeline(self)
+        return self._fixed_prog
 
     def predict(self, x: jax.Array) -> jax.Array:
         """audio (B, N) -> signed per-class confidence p (B, C) in [-1, 1].
@@ -284,6 +336,13 @@ class InFilterPipeline:
         accumulation order, so in interpret mode they agree bit-for-bit.
         """
         c = self.config
+        if c.numerics == "fixed":
+            # also guards the deprecated step()/stream() shims, which call
+            # this directly: a fixed-point pipeline must never silently
+            # stream through the float engine
+            raise NotImplementedError(
+                "numerics='fixed' session streaming is not implemented yet; "
+                "fixed-point inference is one-shot only")
         S, L = chunk.shape
         n = jnp.where(state.active, jnp.asarray(valid, jnp.int32), 0)
         if L == 0:

@@ -1,23 +1,40 @@
 """Fixed-point quantization utilities (paper §V, Fig. 8).
 
-The FPGA datapath is 8-bit fixed point with a 10-bit internal path. We
-simulate symmetric fixed point Q(s, bits): values are round(x / s) clamped to
-[-(2^(b-1)), 2^(b-1)-1], stored as float carrying integer values so kernels
-remain dtype-uniform (the "counters + adders" semantics of the paper; MP only
-ever adds/compares these, so no precision explosion — §III-A).
+The FPGA datapath is 8-bit fixed point with a 10-bit internal path. Two
+levels of fidelity live here:
 
-`fake_quant` is the straight-through-estimator used for quantization-aware
-training of the MP system (forward quantized, gradient passes through).
+* :class:`QuantSpec` + ``fake_quant`` — the QAT proxy: values are
+  round(x / s) clamped to [-(2^(b-1)), 2^(b-1)-1], stored as float carrying
+  integer values so kernels remain dtype-uniform (the "counters + adders"
+  semantics of the paper; MP only ever adds/compares these, so no precision
+  explosion — §III-A). ``fake_quant`` is the straight-through-estimator used
+  for quantization-aware training of the MP system.
+
+* :class:`FixedPointSpec` — the hardware-twin type: a symmetric fixed-point
+  format whose scale is constrained to a POWER OF TWO (``2**exp``), so every
+  rescale between formats is a bit shift and the whole datapath can execute
+  in int32 with only add/subtract/shift/compare (see ``repro.core.fixed``).
+  ``pow2_spec_for`` snaps a tensor's range to the nearest covering
+  power-of-two scale.
 """
 
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["QuantSpec", "quantize", "dequantize", "fake_quant", "spec_for"]
+__all__ = [
+    "QuantSpec",
+    "FixedPointSpec",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "spec_for",
+    "pow2_spec_for",
+]
 
 
 class QuantSpec(NamedTuple):
@@ -33,11 +50,90 @@ class QuantSpec(NamedTuple):
         return (1 << (self.bits - 1)) - 1
 
 
-def spec_for(x: jax.Array, bits: int) -> QuantSpec:
-    """Symmetric per-tensor spec covering max |x|."""
+class FixedPointSpec(NamedTuple):
+    """Symmetric fixed point with a power-of-two LSB: value = q * 2**exp.
+
+    ``q`` is a signed integer in [qmin, qmax]. Because the scale is a power
+    of two, converting between two specs is a pure bit shift (left shift to
+    a finer exp — exact; right shift to a coarser exp — floor rounding),
+    which is what makes the integer datapath in ``repro.core.fixed``
+    multiplierless end to end.
+    """
+    bits: int
+    exp: int  # scale = 2.0 ** exp (exp may be negative: fractional LSBs)
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def scale(self) -> float:
+        return math.ldexp(1.0, self.exp)
+
+    @property
+    def amax(self) -> float:
+        """Largest representable magnitude."""
+        return self.qmax * self.scale
+
+    def quantize(self, x, dtype=jnp.int32) -> jax.Array:
+        """Round-to-nearest onto the grid, saturating clamp; int32 codes."""
+        q = jnp.round(jnp.asarray(x) * (1.0 / self.scale))
+        return jnp.clip(q, self.qmin, self.qmax).astype(dtype)
+
+    def dequantize(self, q) -> jax.Array:
+        """Exact (power-of-two) rescale of integer codes back to float."""
+        return jnp.asarray(q).astype(jnp.float32) * self.scale
+
+
+def _amax_of(x) -> float:
+    """max |x| with degenerate handling shared by the spec builders:
+    empty and all-zero tensors get amax = 1.0 (so quantize(0) == 0 and the
+    scale stays sane), non-finite input is rejected loudly instead of
+    producing a NaN/overflowing scale."""
+    x = jnp.asarray(x)
+    if x.size == 0:
+        return 1.0
     amax = float(jnp.max(jnp.abs(x)))
-    amax = amax if amax > 0 else 1.0
-    return QuantSpec(bits=bits, scale=amax / ((1 << (bits - 1)) - 1))
+    if not math.isfinite(amax):
+        raise ValueError(
+            f"spec_for: tensor has non-finite values (max |x| = {amax})")
+    return amax if amax > 0 else 1.0
+
+
+def spec_for(x: jax.Array, bits: int) -> QuantSpec:
+    """Symmetric per-tensor spec covering max |x|.
+
+    Degenerate tensors (empty, all-zero, or a single value) are handled:
+    empty/all-zero fall back to amax = 1.0; a single-value tensor gets the
+    spec that places that value exactly at qmax.
+    """
+    if bits < 2:
+        raise ValueError(f"spec_for: need bits >= 2, got {bits}")
+    return QuantSpec(bits=bits, scale=_amax_of(x) / ((1 << (bits - 1)) - 1))
+
+
+def pow2_spec_for(x, bits: int, amax: float | None = None) -> FixedPointSpec:
+    """Smallest power-of-two-scale spec covering max |x| (or ``amax``).
+
+    exp = ceil(log2(amax / qmax)): the finest power-of-two LSB whose qmax
+    still reaches amax. Shares ``spec_for``'s degenerate handling.
+    """
+    if bits < 2:
+        raise ValueError(f"pow2_spec_for: need bits >= 2, got {bits}")
+    if amax is None:
+        amax = _amax_of(x)
+    if not (math.isfinite(amax) and amax > 0):
+        raise ValueError(f"pow2_spec_for: need finite amax > 0, got {amax}")
+    qmax = (1 << (bits - 1)) - 1
+    exp = math.ceil(math.log2(amax / qmax) - 1e-12)
+    # guard the float log against landing one LSB short of covering amax
+    while math.ldexp(qmax, exp) < amax:
+        exp += 1
+    return FixedPointSpec(bits=bits, exp=exp)
 
 
 def quantize(x: jax.Array, spec: QuantSpec) -> jax.Array:

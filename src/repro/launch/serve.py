@@ -63,7 +63,10 @@ def _serve_acoustic(args):
     fed = args.streams * args.rounds
     print(f"arch={ACOUSTIC_ARCH} streams={args.streams} "
           f"chunk={args.chunk} ({args.chunk / fs * 1e3:.0f} ms) "
-          f"rounds={args.rounds}")
+          f"rounds={args.rounds} "
+          f"numerics={pipe.config.numerics}")  # float engine vs the fixed-
+    # point hardware twin (stats() repeats it so operators can tell a
+    # deployment preview from the float path mid-flight)
     print(f"served {fed} chunks in {wall*1e3:.0f} ms "
           f"({fed / max(wall, 1e-9):.0f} chunks/s, "
           f"{fed * args.chunk / max(wall, 1e-9) / 1e6:.2f} Msamples/s, "

@@ -26,6 +26,22 @@ from repro.models import layers as L
 __all__ = ["init_moe", "moe_block"]
 
 
+# Expert SELECTION rounds router logits onto this absolute grid (gate
+# values stay full precision). 2^-10 is ~100x above prefill/decode f32
+# recompute noise (~1e-5, the tie-flip source) yet ~30x below bf16's own
+# rounding step and far below any decision-relevant logit gap, so genuine
+# routing decisions are unchanged; grid ties resolve to the lowest expert
+# id in every execution path.
+ROUTE_SNAP_BITS = 10
+
+
+def _route_scores(logits):
+    """Rounded selection scores: floor(logits * 2^bits) — floor, not
+    round-to-nearest, so a score's cell assignment is a pure truncation of
+    its bits and ties break by expert id deterministically."""
+    return jnp.floor(logits * (2.0 ** ROUTE_SNAP_BITS))
+
+
 def init_moe(key, cfg) -> dict:
     d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
     ks = jax.random.split(key, 5)
@@ -69,7 +85,16 @@ def moe_block(p, x, cfg):
         C = min(C, g)
 
     logits = L.linear(xf, p["router"]).astype(jnp.float32)   # (T, E)
-    top_val, top_idx = lax.top_k(logits, K)                  # (T, K)
+    # Deterministic tie-robust routing: SELECT experts on rounded scores
+    # (exact ties broken by lowest expert id — lax.top_k is stable), then
+    # GATE with the full-precision logits of the selected experts. Near-
+    # tied gates otherwise flip between prefill and decode on ulp-level
+    # recompute noise (the jamba hybrid amplifies ~4e-6 SSM decode noise
+    # through top-2 routing; see tests/test_archs.py) — the snap grid
+    # collapses both paths' scores to the same value so the same experts
+    # win, while gate PRECISION is unaffected.
+    _, top_idx = lax.top_k(_route_scores(logits), K)         # (T, K)
+    top_val = jnp.take_along_axis(logits, top_idx, axis=-1)
     gates = jax.nn.softmax(top_val, axis=-1)
 
     xg = xf.reshape(G, g, D)

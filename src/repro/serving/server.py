@@ -89,6 +89,13 @@ class StreamServer:
             raise ValueError(
                 "stream_impl='pallas' requires an MP-mode pipeline "
                 f"(got mode={pipeline.config.mode!r})")
+        # the int32 session step hasn't landed; a fixed-point pipeline must
+        # not silently stream through the float engine
+        if pipeline.config.numerics == "fixed":
+            raise NotImplementedError(
+                "StreamServer: numerics='fixed' session streaming is not "
+                "implemented yet — fixed-point inference is one-shot only "
+                "(pipeline.apply / pipeline.predict)")
         self.pipeline = pipeline
         self.capacity = capacity
         self.max_chunk = max_chunk
@@ -140,6 +147,9 @@ class StreamServer:
             "free_slots": len(self._free),
             "steps_run": self.steps_run,
             "stream_impl": self.pipeline.config.stream_impl,
+            # operators must be able to tell a fixed-point deployment
+            # preview from the float path at a glance
+            "numerics": self.pipeline.config.numerics,
             "buckets": dict(sorted(self.bucket_counts.items())),
         }
 

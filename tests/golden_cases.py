@@ -62,9 +62,14 @@ def make_audio(case: dict) -> np.ndarray:
 
 
 def compute_outputs(case: dict) -> dict:
-    """The recorded surface: one-shot p/phi, streamed p (both impls), and
-    the final streamed accumulator registers."""
+    """The recorded surface: one-shot p/phi, streamed p (both impls), the
+    final streamed accumulator registers, and the fixed-point hardware
+    twin's INTEGER codes (p/phi/accumulators). The float entries gate with
+    a small atol; the ``*_fixed_q`` int entries must match EXACTLY — integer
+    arithmetic either reproduces or it drifted."""
     import jax.numpy as jnp
+
+    from repro.core import fixed
 
     x = jnp.asarray(make_audio(case))
     out = {}
@@ -74,6 +79,14 @@ def compute_outputs(case: dict) -> dict:
             p, phi = pipe.apply(x, return_features=True)
             out["p_oneshot"] = np.asarray(p)
             out["phi_oneshot"] = np.asarray(phi)
+            # the integer twin: calibrated on this clip, default 8/10-bit
+            prog = fixed.compile_pipeline(
+                pipe, calibration_audio=np.asarray(x))
+            p_q, phi_q, s_q = fixed.infer_q(
+                prog, fixed.quantize_signal(prog, x))
+            out["p_fixed_q"] = np.asarray(p_q, np.int32)
+            out["phi_fixed_q"] = np.asarray(phi_q, np.int32)
+            out["acc_fixed_q"] = np.asarray(s_q, np.int32)
         state = pipe.init_session(x.shape[0],
                                   amax=jnp.max(jnp.abs(x), axis=-1))
         p_s = None

@@ -1,0 +1,306 @@
+"""The fixed-point hardware twin (repro.core.fixed): bit-true parity
+between the int32 execution and the fake-quant float simulation, LSB
+properties of the integer MP bisection, the multiplierless census gate,
+and the numerics-mode plumbing through pipeline/filterbank/serving."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fixed
+from repro.core import kernel_machine as km
+from repro.core import mp as mp_mod
+from repro.core.filterbank import (FilterBank, FilterBankConfig,
+                                   multirate_accumulate)
+from repro.core.pipeline import InFilterPipeline
+from repro.core.quant import pow2_spec_for
+
+
+def _pipeline(num_octaves=3, filters_per_octave=3, num_classes=5,
+              fs=8000.0, seed=0, **cfg_over) -> InFilterPipeline:
+    kw = dict(mode="mp", gamma_f=4.0)
+    kw.update(cfg_over)
+    cfg = FilterBankConfig(fs=fs, num_octaves=num_octaves,
+                           filters_per_octave=filters_per_octave, **kw)
+    fb = FilterBank(cfg)
+    P = cfg.num_filters
+    clf = km.init_params(jax.random.PRNGKey(seed), P, num_classes)
+    mu = jax.random.normal(jax.random.PRNGKey(seed + 1), (P,)) * 0.1
+    sigma = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed + 2),
+                                      (P,))) + 0.5
+    return InFilterPipeline.from_filterbank(fb, clf, mu, sigma)
+
+
+def _audio(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# the load-bearing contract: int32 execution == fake-quant float simulation,
+# bit for bit, at every recorded stage
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,seed", [("mp", 0), ("mp", 7), ("mac", 0)])
+def test_int_and_float_carriers_agree_bitwise(mode, seed):
+    """The SAME program run on int32 codes and on float arrays carrying
+    the codes must produce identical integers at every surface (p, phi,
+    accumulators) — shifts floor identically, adds are exact, compares
+    agree. This is what makes the integer path *provably* the float
+    simulation's hardware twin rather than an approximation of it."""
+    x = _audio((3, 400), seed=seed)
+    pipe = _pipeline(mode=mode, fixed_amax=float(np.abs(x).max()),
+                     numerics="fixed", seed=seed)
+    prog = pipe.fixed_program(calibration_audio=x)
+    out_i = fixed.infer_q(prog, fixed.quantize_signal(prog, x, "int"))
+    out_f = fixed.infer_q(prog, fixed.quantize_signal(prog, x, "float"))
+    for a, b, name in zip(out_i, out_f, ["p_q", "phi_q", "s_q"]):
+        a = np.asarray(a)
+        b = np.asarray(b)
+        assert np.issubdtype(a.dtype, np.integer), name
+        assert np.issubdtype(b.dtype, np.floating), name
+        np.testing.assert_array_equal(a, b.astype(np.int64),
+                                      err_msg=f"{name}: carriers diverged")
+
+
+def test_int_and_float_carriers_agree_under_jit():
+    x = _audio((2, 300), seed=3)
+    pipe = _pipeline(numerics="fixed", fixed_amax=float(np.abs(x).max()))
+    prog = pipe.fixed_program(calibration_audio=x)
+    f_int = jax.jit(lambda q: fixed.infer_q(prog, q))
+    f_flt = jax.jit(lambda q: fixed.infer_q(prog, q))
+    out_i = f_int(fixed.quantize_signal(prog, x, "int"))
+    out_f = f_flt(fixed.quantize_signal(prog, x, "float"))
+    for a, b in zip(out_i, out_f):
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(b).astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# integer MP bisection: LSB-exact root bracketing
+# ---------------------------------------------------------------------------
+
+
+def test_fxp_mp_bisect_is_lsb_exact():
+    """The returned z is the smallest grid point with h(z) <= gamma:
+    h(z) <= gamma < h(z - 1)."""
+    rng = np.random.default_rng(0)
+    L = jnp.asarray(rng.integers(-200, 200, size=(64, 9)), jnp.int32)
+    for gamma_q in (1, 7, 64, 300):
+        z = fixed.fxp_mp_bisect(L, gamma_q, fixed.bisect_iters(gamma_q))
+        h = lambda zz: np.sum(np.maximum(np.asarray(L) -
+                                         np.asarray(zz)[:, None], 0), -1)
+        assert (h(z) <= gamma_q).all()
+        assert (h(z - 1) > gamma_q).all()
+
+
+def test_fxp_mp_bisect_tracks_float_solver_within_one_lsb():
+    rng = np.random.default_rng(1)
+    spec = pow2_spec_for(None, 10, amax=4.0)
+    Lf = jnp.asarray(rng.uniform(-3, 3, size=(32, 8)), jnp.float32)
+    Lq = spec.quantize(Lf)
+    gamma = 2.0
+    gamma_q = int(round(gamma / spec.scale))
+    z_q = fixed.fxp_mp_bisect(Lq, gamma_q, fixed.bisect_iters(gamma_q))
+    z_f = mp_mod.mp_bisect(spec.dequantize(Lq), gamma)
+    err = np.abs(np.asarray(spec.dequantize(z_q)) - np.asarray(z_f))
+    assert err.max() <= spec.scale * 1.001
+
+
+def test_fxp_mpabs_matches_concatenated_bisect():
+    rng = np.random.default_rng(2)
+    u = jnp.asarray(rng.integers(-300, 300, size=(16, 6)), jnp.int32)
+    gamma_q = 40
+    it = fixed.bisect_iters(gamma_q)
+    z1 = fixed.fxp_mpabs(u, gamma_q, it)
+    z2 = fixed.fxp_mp_bisect(jnp.concatenate([u, -u], axis=-1), gamma_q, it)
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+
+
+# ---------------------------------------------------------------------------
+# shift/add primitives
+# ---------------------------------------------------------------------------
+
+
+def test_shift_right_floor_semantics_both_carriers():
+    q = jnp.asarray([-7, -6, -5, -1, 0, 1, 5, 6, 7], jnp.int32)
+    for k in (1, 2, 3):
+        want = np.floor(np.asarray(q) / 2.0 ** k)
+        np.testing.assert_array_equal(
+            np.asarray(fixed.shift_right(q, k)), want)
+        np.testing.assert_array_equal(
+            np.asarray(fixed.shift_right(q.astype(jnp.float32), k)), want)
+
+
+def test_rescale_array_shifts_match_scalar():
+    q = jnp.asarray([[-33, 17, 1024, -5]], jnp.int32)
+    ks = jnp.asarray([2, -1, -3, 0], jnp.int32)
+    got = np.asarray(fixed.rescale(q, ks))[0]
+    want = [fixed.rescale(q[0, i], int(ks[i])) for i in range(4)]
+    np.testing.assert_array_equal(got, np.asarray(want))
+
+
+def test_fxp_fir_shift_add_equals_integer_convolution():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-100, 100, size=(2, 50)), jnp.int32)
+    h = rng.integers(-127, 128, size=7)
+    y = np.asarray(fixed.fxp_fir_shift_add(x, h))
+    for b in range(2):
+        ref = np.convolve(np.asarray(x)[b], h)[:50]
+        np.testing.assert_array_equal(y[b], ref)
+
+
+def test_csd_reconstructs_value():
+    for v in list(range(-130, 131)) + [1023, -1024, 255]:
+        assert sum(s << b for s, b in fixed._csd(v)) == v
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the paper's esc10-mp configuration
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fixed_predict_runs_esc10_mp_config():
+    """Acceptance: predict on the paper's deployed configuration runs end
+    to end through the integer path."""
+    from repro.configs.esc10_mp import make_pipeline
+    x = _audio((2, 16000), seed=5, scale=0.5)
+    pipe = make_pipeline(numerics="fixed", fixed_amax=float(np.abs(x).max()))
+    p = np.asarray(pipe.apply(jnp.asarray(x)))
+    assert p.shape == (2, 10)
+    assert np.isfinite(p).all()
+    assert np.abs(p).max() <= 1.0 + 1e-6
+
+
+def test_fixed_close_to_float_with_realistic_standardization():
+    """With mu/sigma that are actually the feature statistics (as training
+    produces), the 8/10-bit twin must land near the float engine: highly
+    correlated phi and mostly-agreeing decisions."""
+    x = _audio((12, 600), seed=6)
+    pipe = _pipeline(num_octaves=3, filters_per_octave=3)
+    s = np.asarray(pipe.apply(jnp.asarray(x), return_features=True)[1]) \
+        * np.asarray(pipe.sigma) + np.asarray(pipe.mu)  # undo fake stats
+    mu = jnp.asarray(s.mean(0))
+    sigma = jnp.asarray(s.std(0, ddof=1) + 1e-6)
+    pipe = InFilterPipeline(pipe.config, pipe.bp_taps, pipe.lp_taps,
+                            mu, sigma, pipe.clf)
+    p_flt, phi_flt = pipe.apply(jnp.asarray(x), return_features=True)
+    prog = fixed.compile_pipeline(pipe, calibration_audio=x)
+    p_fix, phi_fix = fixed.predict(prog, jnp.asarray(x))
+    corr = np.corrcoef(np.asarray(phi_flt).ravel(),
+                       np.asarray(phi_fix).ravel())[0, 1]
+    assert corr > 0.95, corr
+    agree = (np.asarray(p_flt).argmax(1) == np.asarray(p_fix).argmax(1))
+    assert agree.mean() >= 0.5, agree
+
+
+# ---------------------------------------------------------------------------
+# the multiplierless gate, as a test (the benchmark asserts it too)
+# ---------------------------------------------------------------------------
+
+
+def test_integer_jaxpr_is_multiplierless():
+    from benchmarks.hardware_cost import assert_multiplierless, census
+    x = _audio((1, 200), seed=7)
+    for mode in ("mp", "mac"):
+        pipe = _pipeline(num_octaves=2, filters_per_octave=2, mode=mode,
+                         numerics="fixed",
+                         fixed_amax=float(np.abs(x).max()))
+        prog = pipe.fixed_program()
+        xq = fixed.quantize_signal(prog, x)
+        c = census(lambda q: fixed.infer_q(prog, q), xq)
+        assert_multiplierless(c, f"test-{mode}")
+        assert c["add"] > 0 and c["compare"] > 0  # it actually computed
+
+
+# ---------------------------------------------------------------------------
+# numerics-mode plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_apply_routes_fixed_and_blocks_streaming():
+    x = _audio((2, 300), seed=8)
+    pipe = _pipeline(numerics="fixed", fixed_amax=float(np.abs(x).max()))
+    p, phi = pipe.apply(jnp.asarray(x), return_features=True)
+    assert p.shape[0] == 2 and phi.shape[0] == 2
+    # dequantized outputs sit exactly on their grids
+    prog = pipe.fixed_program()
+    np.testing.assert_array_equal(
+        np.asarray(p) / prog.out_spec.scale,
+        np.round(np.asarray(p) / prog.out_spec.scale))
+    state = pipe.init_session(2)
+    with pytest.raises(NotImplementedError, match="fixed"):
+        pipe.apply(jnp.asarray(x), state)
+
+
+def test_fixed_apply_under_jit_raises_with_guidance():
+    """jitting apply directly would trace the pipeline leaves into the
+    host-side program lowering — the error must say what to do instead."""
+    x = _audio((1, 200), seed=11)
+    pipe = _pipeline(num_octaves=2, filters_per_octave=2, numerics="fixed")
+    with pytest.raises(TypeError, match="fixed_program"):
+        jax.jit(InFilterPipeline.apply)(pipe, jnp.asarray(x))
+    # the supported pattern: precompile, then jit the program
+    prog = pipe.fixed_program()
+    p = jax.jit(lambda xx: fixed.predict(prog, xx))(jnp.asarray(x))[0]
+    np.testing.assert_array_equal(np.asarray(p),
+                                  np.asarray(pipe.apply(jnp.asarray(x))))
+
+
+def test_fixed_features_rejects_amax_override():
+    pipe = _pipeline(num_octaves=2, filters_per_octave=2, numerics="fixed")
+    x = jnp.asarray(_audio((1, 200), seed=12))
+    with pytest.raises(ValueError, match="fixed_amax"):
+        pipe.features(x, amax=jnp.asarray([0.5]))
+
+
+def test_filterbank_accumulate_routes_fixed():
+    x = _audio((2, 300), seed=9)
+    cfg = FilterBankConfig(fs=8000.0, num_octaves=3, filters_per_octave=3,
+                           mode="mp", gamma_f=4.0, numerics="fixed",
+                           fixed_amax=float(np.abs(x).max()))
+    fb_fix = FilterBank(cfg)
+    fb_flt = FilterBank(cfg._replace(numerics="float"))
+    s_fix = np.asarray(fb_fix.accumulate(jnp.asarray(x)))
+    s_flt = np.asarray(fb_flt.accumulate(jnp.asarray(x)))
+    rel = np.abs(s_fix - s_flt).max() / np.abs(s_flt).max()
+    assert rel < 0.15, rel  # 8-bit twin tracks the float bank
+    # the float helpers refuse to silently ignore the fixed program
+    with pytest.raises(ValueError, match="float engine"):
+        multirate_accumulate(jnp.asarray(x), fb_fix.bp_by_octave,
+                             fb_fix.lp_filters, cfg)
+
+
+def test_unknown_numerics_rejected():
+    cfg = FilterBankConfig(numerics="int8")
+    with pytest.raises(ValueError, match="numerics"):
+        FilterBank(cfg)
+
+
+def test_stream_server_rejects_fixed_pipeline():
+    from repro.serving import StreamServer
+    pipe = _pipeline(numerics="fixed")
+    with pytest.raises(NotImplementedError, match="fixed"):
+        StreamServer(pipe, capacity=2)
+
+
+def test_stream_server_stats_surface_numerics():
+    from repro.serving import StreamServer
+    pipe = _pipeline()
+    srv = StreamServer(pipe, capacity=2)
+    assert srv.stats()["numerics"] == "float"
+
+
+def test_octave_gain_calibration_monotone_grids():
+    """Calibrated register grids are never coarser than the ADC grid and
+    gains[0] is pinned to 0."""
+    x = _audio((4, 500), seed=10)
+    pipe = _pipeline(num_octaves=4, fixed_amax=float(np.abs(x).max()),
+                     numerics="fixed")
+    prog = pipe.fixed_program(calibration_audio=x)
+    exps = [st.in_spec.exp for st in prog.bank.octaves]
+    assert exps[0] == prog.signal.exp
+    assert all(e <= prog.signal.exp for e in exps)

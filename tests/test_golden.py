@@ -19,7 +19,10 @@ from golden_cases import CASES, GOLDEN_DIR, compute_outputs
 
 # exact-match would overfit to compiler codegen (fixtures must survive jax
 # upgrades); 1e-5 is ~100x tighter than any real numerics change we gate on
-# (solver swaps and reduction reorders move decisions by >= 1e-4)
+# (solver swaps and reduction reorders move decisions by >= 1e-4).
+# INTEGER outputs (the fixed-point hardware twin's *_fixed_q codes) are
+# exempt from that reasoning: integer add/shift/compare arithmetic has no
+# codegen wiggle room, so they gate at EXACT equality.
 ATOL = 1e-5
 
 _DRIFT_MSG = """
@@ -56,6 +59,15 @@ def test_golden_fixture(name):
         f"{name}: recorded surface changed "
         f"(have {sorted(got)}, fixture has {sorted(want)}) — regenerate")
     for key in sorted(want):
+        if np.issubdtype(want[key].dtype, np.integer):
+            # the integer twin either reproduces or it drifted — no atol
+            assert np.array_equal(got[key], want[key]), \
+                _DRIFT_MSG.format(
+                    name=name, key=key, atol="exact (integer)",
+                    delta=float(np.max(np.abs(
+                        got[key].astype(np.int64) -
+                        want[key].astype(np.int64)))))
+            continue
         delta = float(np.max(np.abs(got[key] - want[key]))) \
             if want[key].size else 0.0
         assert np.allclose(got[key], want[key], atol=ATOL), \

@@ -1,0 +1,135 @@
+"""Direct coverage for core/quant.py: round-trip properties, clamp
+saturation, the STE gradient, degenerate spec handling, and the
+power-of-two spec builder the fixed-point twin is built on."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import (FixedPointSpec, QuantSpec, dequantize,
+                              fake_quant, pow2_spec_for, quantize, spec_for)
+
+
+class TestRoundTrip:
+    def test_quantize_dequantize_idempotent(self):
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(256),
+                        jnp.float32) * 3.0
+        spec = spec_for(x, 8)
+        q = quantize(x, spec)
+        q2 = quantize(dequantize(q, spec), spec)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+
+    def test_quantized_values_are_integers_in_range(self):
+        x = jnp.linspace(-5.0, 5.0, 101)
+        spec = spec_for(x, 6)
+        q = np.asarray(quantize(x, spec))
+        np.testing.assert_array_equal(q, np.round(q))
+        assert q.min() >= spec.qmin and q.max() <= spec.qmax
+
+    def test_clamp_saturates_at_qmin_qmax(self):
+        spec = QuantSpec(bits=8, scale=0.1)
+        q = np.asarray(quantize(jnp.asarray([1e6, -1e6]), spec))
+        assert q[0] == spec.qmax == 127
+        assert q[1] == spec.qmin == -128
+
+    def test_fixed_point_spec_round_trip(self):
+        x = jnp.asarray(np.random.default_rng(1).standard_normal(128),
+                        jnp.float32)
+        spec = pow2_spec_for(x, 8)
+        q = spec.quantize(x)
+        q2 = spec.quantize(spec.dequantize(q))
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+        # pow2 dequantization is EXACT: q * 2^exp has no rounding
+        deq = np.asarray(spec.dequantize(q))
+        np.testing.assert_array_equal(
+            deq, np.asarray(q, np.float64) * spec.scale)
+
+
+class TestSTE:
+    def test_fake_quant_gradient_passes_through_in_range(self):
+        x = jnp.asarray([-0.7, -0.2, 0.1, 0.65])
+        g = jax.grad(lambda v: jnp.sum(fake_quant(v, 8, amax=1.0)))(x)
+        np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-6)
+
+    def test_fake_quant_gradient_zero_when_clipped(self):
+        x = jnp.asarray([3.0, -4.0])  # far beyond amax=1.0 -> clipped
+        g = jax.grad(lambda v: jnp.sum(fake_quant(v, 8, amax=1.0)))(x)
+        np.testing.assert_allclose(np.asarray(g), 0.0, atol=1e-6)
+
+    def test_fake_quant_forward_is_quantized(self):
+        x = jnp.asarray(np.random.default_rng(2).standard_normal(64),
+                        jnp.float32)
+        y = np.asarray(fake_quant(x, 4))
+        assert len(np.unique(y)) <= 16  # 4 bits -> at most 16 levels
+
+
+class TestSpecForEdges:
+    def test_all_zero_tensor(self):
+        spec = spec_for(jnp.zeros((8,)), 8)
+        assert spec.scale == pytest.approx(1.0 / 127)
+        assert np.asarray(quantize(jnp.zeros((8,)), spec)).max() == 0
+
+    def test_empty_tensor(self):
+        spec = spec_for(jnp.zeros((0,)), 8)
+        assert spec.scale == pytest.approx(1.0 / 127)
+
+    def test_single_value_hits_qmax(self):
+        spec = spec_for(jnp.asarray([2.5]), 8)
+        assert np.asarray(quantize(jnp.asarray([2.5]), spec))[0] == 127
+
+    def test_nonfinite_raises(self):
+        with pytest.raises(ValueError, match="non-finite"):
+            spec_for(jnp.asarray([1.0, jnp.inf]), 8)
+        with pytest.raises(ValueError, match="non-finite"):
+            spec_for(jnp.asarray([jnp.nan]), 8)
+
+    def test_bad_bits_raises(self):
+        with pytest.raises(ValueError, match="bits"):
+            spec_for(jnp.ones((4,)), 1)
+        with pytest.raises(ValueError, match="bits"):
+            pow2_spec_for(jnp.ones((4,)), 0)
+
+
+class TestPow2Spec:
+    def test_scale_is_power_of_two_and_covers(self):
+        rng = np.random.default_rng(3)
+        for _ in range(20):
+            amax = float(10.0 ** rng.uniform(-4, 4))
+            spec = pow2_spec_for(None, 8, amax=amax)
+            assert spec.scale == math.ldexp(1.0, spec.exp)
+            assert spec.qmax * spec.scale >= amax           # covers
+            assert spec.qmax * (spec.scale / 2) < amax      # minimal
+
+    def test_from_tensor(self):
+        x = jnp.asarray([0.1, -0.9, 0.4])
+        spec = pow2_spec_for(x, 8)
+        assert spec.amax >= 0.9
+        frac, _ = math.frexp(spec.scale)
+        assert frac == 0.5  # a pure power of two
+
+    def test_degenerate_tensors(self):
+        assert pow2_spec_for(jnp.zeros((4,)), 8) == \
+            pow2_spec_for(None, 8, amax=1.0)
+        assert pow2_spec_for(jnp.zeros((0,)), 8) == \
+            pow2_spec_for(None, 8, amax=1.0)
+
+    def test_exact_pow2_amax(self):
+        # amax already on the grid: qmax * 2^exp must still cover it
+        spec = pow2_spec_for(None, 8, amax=2.0)
+        assert spec.qmax * spec.scale >= 2.0
+
+    def test_bad_amax_raises(self):
+        with pytest.raises(ValueError, match="amax"):
+            pow2_spec_for(None, 8, amax=0.0)
+        with pytest.raises(ValueError, match="amax"):
+            pow2_spec_for(None, 8, amax=float("inf"))
+
+
+def test_fixed_point_spec_fields():
+    spec = FixedPointSpec(bits=10, exp=-7)
+    assert spec.qmin == -512 and spec.qmax == 511
+    assert spec.scale == 2.0 ** -7
+    assert spec.amax == 511 * 2.0 ** -7
