@@ -15,8 +15,12 @@ claim as an executable regression gate, not prose. The float MP/MAC paths
 are kept for comparison (the float MP census still counts the pow2
 bisection halvings as shifts, exactly as the FPGA implements them).
 
+Both the one-shot program AND the per-chunk integer streaming step
+(``fixed.session_step_q`` — what a deployed FPGA executes per sensor
+packet) are censused and asserted multiplierless.
+
 Run with ``--smoke`` (used by scripts/bench_smoke.sh) for a reduced config
-that still exercises the assertion.
+that still exercises the assertions.
 """
 
 from __future__ import annotations
@@ -239,6 +243,26 @@ def main(argv=()):
         emit_rows(tag, c, n)
         row(f"hw.{tag}.multiplierless_assert", 0.0,
             "PASS (0 multiplies, 0 divides in the integer jaxpr)")
+
+    # --- the integer STREAMING step: what a deployed FPGA actually runs --
+    # per sensor packet (delay-line splice, kept-only decimation, readout
+    # every chunk). Censused per chunk and asserted multiplierless — the
+    # per-chunk step, not the one-shot program, is the deployment datapath.
+    chunk_len = 160  # one 10 ms packet at 16 kHz (smoke: same length)
+    for tag, mode in [("fixed_mp_stream", "mp"),
+                      ("fixed_mac_stream", "mac")]:
+        pipe = _fixed_pipeline(base._replace(mode=mode, numerics="fixed"))
+        prog = pipe.fixed_program()
+        state = pipe.init_session(1)
+        xq = fixed.quantize_signal(prog, jnp.zeros((1, chunk_len)))
+        nv = jnp.full((1,), chunk_len, jnp.int32)
+        c = census(lambda st, q, v: fixed.session_step_q(prog, st, q, v),
+                   state, xq, nv)
+        assert_multiplierless(c, tag)
+        emit_rows(tag, c, chunk_len)
+        row(f"hw.{tag}.multiplierless_assert", 0.0,
+            f"PASS (0 mul/div in the per-chunk int32 streaming jaxpr, "
+            f"chunk={chunk_len})")
 
     row("hw.reference", 0.0,
         "paper Table I: 0 DSP, 1503 LUT, 2376 FF, 17mW@50MHz; "

@@ -9,7 +9,8 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m benchmarks.serve_streams --smoke --stream-impl both
 python -m benchmarks.pipeline_e2e --smoke
-# the multiplierless gate: census the int32 hardware-twin jaxpr and FAIL
-# if any float multiply or divide leaked into the fixed-point path
+# the multiplierless gate: census the int32 hardware-twin jaxprs — the
+# one-shot program AND the per-chunk integer streaming step (what an FPGA
+# executes per sensor packet) — and FAIL if any multiply/divide leaked in
 python -m benchmarks.hardware_cost --smoke
 echo "bench_smoke OK"

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Intra-repo markdown link checker (the tier-1 docs gate).
+
+Scans README.md, ROADMAP.md and docs/*.md for markdown links and inline
+file references, and fails when a RELATIVE target (no scheme, no anchor-only
+link) does not exist on disk — so a renamed module or moved doc breaks
+tier-1 instead of rotting silently. External http(s) links are not fetched.
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _sources() -> list:
+    srcs = ["README.md", "ROADMAP.md"]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        srcs += sorted(os.path.join("docs", f) for f in os.listdir(docs)
+                       if f.endswith(".md"))
+    return srcs
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")   # [text](target)
+
+
+def check(path: str) -> list:
+    errors = []
+    base = os.path.dirname(os.path.join(REPO, path))
+    in_fence = False
+    with open(os.path.join(REPO, path)) as f:
+        for lineno, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            # inline code spans aren't links (`consumed[o](S,)` etc.)
+            line = re.sub(r"`[^`]*`", "", line)
+            for target in LINK_RE.findall(line):
+                if "://" in target or target.startswith(("mailto:", "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                if not os.path.exists(os.path.normpath(
+                        os.path.join(base, rel))):
+                    errors.append(f"{path}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    sources = _sources()
+    errors = []
+    for src in sources:
+        if os.path.exists(os.path.join(REPO, src)):
+            errors.extend(check(src))
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"check_docs: {len(errors)} broken intra-repo link(s)",
+              file=sys.stderr)
+        return 1
+    print(f"check_docs OK ({len(sources)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

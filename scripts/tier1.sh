@@ -11,5 +11,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# docs gate: broken intra-repo links in README/ROADMAP/docs fail tier-1
+python scripts/check_docs.py
 python -m pytest -x -q "$@"
 scripts/bench_smoke.sh

@@ -46,8 +46,10 @@ def make_pipeline(smoke: bool = False, seed: int = 0,
     ``stream_impl`` selects the session-step hot path: "xla" (default) or
     "pallas" (the stateful ``fir_mp_stream`` kernel; interpret mode on CPU,
     compiled on TPU). ``numerics="fixed"`` builds the bit-true int32
-    hardware twin (one-shot only; ``fixed_amax`` calibrates the ADC
-    full-scale)."""
+    hardware twin — one-shot AND session streaming, with chunked decisions
+    bit-for-bit equal to one-shot inference (``fixed_amax`` calibrates the
+    static ADC full-scale; fixed requires stream_impl="xla" until the int
+    Pallas kernel lands)."""
     import jax
     import jax.numpy as jnp
 

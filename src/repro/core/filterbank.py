@@ -248,10 +248,12 @@ def quant_signal(x: jax.Array, cfg: "FilterBankConfig",
 
 def _require_float_numerics(cfg: "FilterBankConfig", fn: str) -> None:
     if cfg.numerics == "fixed":
-        raise ValueError(
-            f"{fn} is the float engine and ignores the fixed-point program; "
-            "with numerics='fixed' go through FilterBank.accumulate or "
-            "InFilterPipeline.apply/predict (repro.core.fixed)")
+        from repro.core.quant import unsupported_fixed
+        raise unsupported_fixed(
+            fn, followup=None,
+            hint="this is the float engine and ignores the fixed-point "
+                 "program; go through FilterBank.accumulate or "
+                 "InFilterPipeline.apply/predict (repro.core.fixed)")
     if cfg.numerics != "float":
         raise ValueError(f"unknown numerics {cfg.numerics!r}: "
                          "expected 'float' or 'fixed'")
@@ -321,8 +323,11 @@ class FilterBankConfig(NamedTuple):
     # float = f32 arrays (optionally fake-quant under quant_bits, the QAT
     # proxy); fixed = the bit-true int32 hardware twin (repro.core.fixed):
     # power-of-two-scale fixed point, add/sub/shift/compare only — 8-bit
-    # signals/weights, 10-bit internal path per paper §V. One-shot only for
-    # now; the session-streaming integer path is follow-up work.
+    # signals/weights, 10-bit internal path per paper §V. Both one-shot AND
+    # session streaming (stream_impl="xla"; integer registers, chunked
+    # decisions bit-for-bit equal to one-shot from the first chunk —
+    # docs/numerics.md). stream_impl="pallas" has no int32 kernel yet and
+    # is rejected at kernel-selection time (ROADMAP follow-up).
     fixed_amax: float = 1.0    # fixed mode: ADC full-scale calibration (a
     # STATIC power-of-two-snapped range; inputs beyond it saturate, exactly
     # like the hardware front end)

@@ -37,7 +37,10 @@ The deployment preview is driven through ``FilterBankConfig``:
 ``FilterBank.accumulate`` through :func:`compile_pipeline` /
 :func:`compile_bank` programs (static int32 taps, ROMs and shift tables
 derived from the float pipeline plus a calibrated ADC full-scale
-``fixed_amax``).
+``fixed_amax``). Session streaming runs the same program chunk-by-chunk
+through :func:`session_step_q` — every ``SessionState`` register carried as
+an integer in the fixed-point grid, with chunked decisions bit-for-bit
+equal to one-shot :func:`infer_q` (docs/numerics.md has the argument).
 """
 
 from __future__ import annotations
@@ -72,6 +75,8 @@ __all__ = [
     "infer_q",
     "quantize_signal",
     "predict",
+    "readout_q",
+    "session_step_q",
     "shift_left",
     "shift_right",
     "rescale",
@@ -208,22 +213,28 @@ def fxp_mp_dot(win, w, gamma_q, iters: int, spec: FixedPointSpec):
 
 
 def fxp_fir_bank(x, H, gamma_q, iters: int, spec: FixedPointSpec,
-                 chunk_n: Optional[int] = 1024):
+                 chunk_n: Optional[int] = 1024, pad: bool = True):
     """Multi-filter MP FIR on the integer grid: x (..., N), H (F, M) ->
     (..., F, N). Causal zero-padded form (matches the one-shot float path's
     ``mp_conv1d_bank(pad=True)`` window contents); long signals solve in
-    ``chunk_n``-position blocks exactly like the float bank."""
+    ``chunk_n``-position blocks exactly like the float bank.
+
+    ``pad=False`` computes ONLY the fully-covered positions — output p's
+    window is ``x[p .. p+M-1]``, shape (..., F, N-M+1). The integer session
+    step splices its delay-line registers in front of the chunk and uses
+    this form; every window solve is an independent LSB-deterministic
+    bisection, so shared positions match the padded form bit-for-bit."""
     H = _c(H, x)
     F, M = H.shape
     lead = x.shape[:-1]
-    N = x.shape[-1]
-    x2 = x.reshape(-1, N)
+    N = x.shape[-1] if pad else x.shape[-1] - M + 1
+    x2 = x.reshape(-1, x.shape[-1])
     hr = H[:, ::-1].reshape(F, 1, 1, M)
 
     def solve(win):  # (B, Q, M) -> (F, B, Q)
         return fxp_mp_dot(win[None], hr, gamma_q, iters, spec)
 
-    xp = jnp.pad(x2, ((0, 0), (M - 1, 0)))
+    xp = jnp.pad(x2, ((0, 0), (M - 1, 0))) if pad else x2
     if chunk_n is None or N <= chunk_n:
         idx = jnp.arange(N)[:, None] + jnp.arange(M)[None, :]
         y = solve(xp[:, idx])
@@ -260,18 +271,20 @@ def _csd(v: int) -> list:
     return terms
 
 
-def fxp_fir_shift_add(x, h_q: np.ndarray):
+def fxp_fir_shift_add(x, h_q: np.ndarray, pad: bool = True):
     """Constant-coefficient FIR as trace-time-unrolled CSD shift/adds:
     y(n) = sum_k h[k] x(n-k) with every tap expanded into signed powers of
     two — the classic multiplierless realization of a MAC FIR. ``h_q`` must
     be STATIC host integers (the ROM contents). Output q-values carry scale
-    2**(x.exp + h.exp)."""
+    2**(x.exp + h.exp). ``pad=False`` keeps only the fully-covered positions
+    (shape ``(..., N-M+1)``) — the session step's delay-splice form."""
     h_q = np.asarray(h_q)
     assert h_q.ndim == 1
     M = h_q.shape[0]
-    N = x.shape[-1]
-    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(M - 1, 0)])
-    y = jnp.zeros_like(x)
+    N = x.shape[-1] if pad else x.shape[-1] - M + 1
+    xp = x if not pad else \
+        jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(M - 1, 0)])
+    y = jnp.zeros(x.shape[:-1] + (N,), x.dtype)
     for k_tap in range(M):
         sk = jax.lax.slice_in_dim(xp, M - 1 - k_tap, M - 1 - k_tap + N,
                                   axis=x.ndim - 1)
@@ -281,11 +294,20 @@ def fxp_fir_shift_add(x, h_q: np.ndarray):
     return y
 
 
-def fxp_hwr_accumulate(y):
+def fxp_hwr_accumulate(y, valid=None):
     """s = sum_n [y_n]_+ over the last axis. Integer adds are associative,
     so no blocked-reduction ordering is needed for bit parity (unlike the
-    float path's ``filterbank.hwr_accumulate``)."""
-    return jnp.sum(_relu(y), axis=-1)
+    float path's ``filterbank.hwr_accumulate``) — and chunked streaming
+    accumulation is EXACTLY one-shot accumulation, not merely close.
+
+    ``valid`` (broadcastable to ``y.shape[:-1]``, trailing axis dropped —
+    e.g. ``n[:, None]`` for a (S, F, l) bank output) zeroes positions >=
+    valid before the sum, so padded slots contribute no-op terms."""
+    h = _relu(y)
+    if valid is not None:
+        pos = jax.lax.broadcasted_iota(jnp.int32, y.shape, y.ndim - 1)
+        h = jnp.where(pos < jnp.asarray(valid)[..., None], h, 0)
+    return jnp.sum(h, axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -465,7 +487,7 @@ def compile_bank(cfg, bp_taps, lp_taps, *, amax: float | None = None,
         # align ROM onto the internal grid (host-side floor shift)
         k = rom_spec.exp - spec.exp
         aligned = rom * (1 << k) if k >= 0 else rom >> (-k)
-        return rom, rom_spec, spec, jnp.asarray(aligned, jnp.int32)
+        return rom, rom_spec, spec, np.asarray(aligned, np.int32)
 
     pre = []
     for o in range(num_oct):
@@ -524,6 +546,11 @@ def compile_pipeline(pipe, *, amax: float | None = None,
     (host array) derives the ADC full-scale (when ``amax`` is None) and the
     per-octave register pre-gains; or pass ``octave_gains`` directly. Must
     be called with CONCRETE (non-traced) pipeline arrays.
+
+    The one program serves BOTH execution shapes with one parity contract:
+    one-shot :func:`infer_q` and chunked :func:`session_step_q` produce
+    identical integer codes (any chunking, from the first chunk), and each
+    runs bit-identically on int32 or float-carried integers.
     """
     from repro.core import kernel_machine as km
 
@@ -557,7 +584,7 @@ def compile_pipeline(pipe, *, amax: float | None = None,
 
     mu = np.asarray(pipe.mu, np.float64)
     sigma = np.asarray(pipe.sigma, np.float64)
-    mu_q = jnp.asarray(np.round(mu / bank.acc.scale), jnp.int32)
+    mu_q = np.asarray(np.round(mu / bank.acc.scale), np.int32)
     # phi = (s - mu) * g with g = 2**(acc.exp - phi.exp) / sigma, realized
     # as the best two-term CSD approximation g ~= 2**k1 + sign * 2**k2
     phi = pow2_spec_for(None, tb, amax=phi_amax)
@@ -574,9 +601,9 @@ def compile_pipeline(pipe, *, amax: float | None = None,
                 if err < best[0]:
                     best = (err, k1, k2, sign)
         k1s.append(best[1]); k2s.append(best[2]); s2s.append(best[3])
-    phi_shift_q = jnp.asarray(k1s, jnp.int32)
-    phi_shift2_q = jnp.asarray(k2s, jnp.int32)
-    phi_sign2_q = jnp.asarray(s2s, jnp.int32)
+    phi_shift_q = np.asarray(k1s, np.int32)
+    phi_shift2_q = np.asarray(k2s, np.int32)
+    phi_sign2_q = np.asarray(s2s, np.int32)
 
     # classifier operand grid: cover |w|max + |phi|max at internal bits
     wp = np.maximum(np.asarray(pipe.clf.w_pos, np.float64), 0.0)
@@ -710,3 +737,121 @@ def predict(prog: FixedPointProgram, x, carrier: str = "int"):
     xq = quantize_signal(prog, x, carrier=carrier)
     p_q, phi_q, _ = infer_q(prog, xq)
     return prog.out_spec.dequantize(p_q), prog.phi.dequantize(phi_q)
+
+
+# ---------------------------------------------------------------------------
+# integer session streaming: every SessionState register is an int in the
+# fixed-point grid, and chunked execution is bit-for-bit the one-shot
+# program (see docs/numerics.md for the exactness argument)
+# ---------------------------------------------------------------------------
+
+
+def readout_q(prog: FixedPointProgram, acc_q):
+    """Pure readout from 32-bit accumulator registers: (p_q, phi_q).
+    The decision from all evidence so far — what a zero-length session
+    chunk (and every chunk's trailing readout) computes."""
+    phi_q = standardize_q(prog, acc_q)
+    return classifier_q(prog.clf, phi_q), phi_q
+
+
+def session_step_q(prog: FixedPointProgram, state, chunk_q, n):
+    """One slot-batched INTEGER session step: signal codes in, codes out.
+
+    The int32 mirror of the pipeline's XLA session cascade. ``state`` is a
+    ``SessionState``-shaped namedtuple whose registers are carried on the
+    fixed-point grid: per-octave delay lines hold that octave's 8-bit
+    signal-register codes (``OctaveStage.in_spec``), ``acc`` is the 32-bit
+    accumulator at ``prog.bank.acc``, and ``amax`` is the running max
+    |signal code| (pure calibration telemetry — the ADC grid is STATIC, so
+    unlike the float path no quantization scale depends on it). ``chunk_q``
+    is (S, L) ADC codes with positions >= ``n`` already zeroed; ``n`` is
+    (S,) int32 effective valid counts (active mask applied by the caller).
+
+    Exactness: every band value at a global stream position is one
+    LSB-deterministic integer bisection over a window of octave-register
+    codes, the delay lines carry those codes losslessly across chunk
+    boundaries (zero-initialized registers == the one-shot path's zero
+    padding), and integer accumulator addition is associative — so ANY
+    chunk partition reproduces the one-shot :func:`infer_q` codes
+    bit-for-bit, from the FIRST chunk (no peak-seen caveat). Returns
+    ``(state', p_q, phi_q)``.
+
+    Carrier-generic like every ``fxp_*`` kernel: int32 registers run the
+    hardware path (what ``benchmarks/hardware_cost.py`` censuses — zero
+    multiplies/divides per chunk); float-carried registers run the
+    fake-quant twin bit-identically.
+    """
+    bank = prog.bank
+    S, L = chunk_q.shape
+    if L == 0:
+        p_q, phi_q = readout_q(prog, state.acc)
+        return state, p_q, phi_q
+    T1 = state.delays[0].shape[1]
+    # running amax telemetry: invalid positions are zero codes, so they
+    # never raise the max (|code| >= 0 and the register starts at 0)
+    amax = jnp.maximum(state.amax, jnp.max(jnp.abs(chunk_q), axis=-1))
+    x_o, n_o = chunk_q, n
+    l_max = L
+    delays, consumed, parts = [], [], []
+    for o, st in enumerate(bank.octaves):
+        M_bp = st.bp_q.shape[-1]
+        # splice the delay registers in front of the chunk: in-chunk
+        # position p sits at buf[T1 + p] with its full FIR history
+        buf = jnp.concatenate([state.delays[o], x_o], axis=1)
+        buf_bp = buf[:, T1 - (M_bp - 1):]
+        if bank.mode == "mp":
+            band = fxp_fir_bank(rescale(buf_bp, st.sig_shift), st.bp_q,
+                                st.gamma_bp, st.iters_bp, st.band_spec,
+                                pad=False)                     # (S, F, l_max)
+        else:
+            bands = [rescale(fxp_fir_shift_add(buf_bp, st.bp_rom[f],
+                                               pad=False), st.bp_prod_shift)
+                     for f in range(st.bp_rom.shape[0])]
+            band = _clamp(jnp.stack(bands, axis=-2), st.band_spec)
+        parts.append(shift_left(fxp_hwr_accumulate(band, n_o[:, None]),
+                                st.acc_shift))
+        # register update: the last T1 *valid* samples become the new delay
+        # line (slots with n_o == 0 re-read their old registers: inert)
+        delays.append(jax.vmap(
+            lambda b, s: jax.lax.dynamic_slice_in_dim(b, s, T1, axis=0)
+        )(buf, n_o))
+        consumed.append(state.consumed[o] + n_o)
+        if st.lp_q is not None:
+            M_lp = st.lp_q.shape[-1]
+            # ÷2 decimator keeps even GLOBAL positions; each slot's phase
+            # is its octave-sample parity (bit-and, not a divider)
+            start = jnp.bitwise_and(state.consumed[o], 1)          # (S,)
+            l_next = (l_max + 1) // 2
+            buf_lp = buf[:, T1 - (M_lp - 1):]
+            if bank.mode == "mp":
+                # solve ONLY the kept positions: stride-2 window gather
+                # (kept sample k of slot s ends at start_s + 2k + M_lp - 1)
+                xw = jnp.pad(rescale(buf_lp, st.lp_sig_shift),
+                             ((0, 0), (0, 1)))
+                widx = ((jnp.arange(l_next) << 1)[:, None]
+                        + jnp.arange(M_lp)[None, :])       # (l_next, M_lp)
+                win = jax.vmap(lambda r, s: r[s + widx])(xw, start)
+                kept = fxp_mp_dot(win, _c(st.lp_q[0, ::-1], xw),
+                                  st.gamma_lp, st.iters_lp, st.lp_spec)
+            else:
+                y_lp = _clamp(rescale(fxp_fir_shift_add(buf_lp, st.lp_rom[0],
+                                                        pad=False),
+                                      st.lp_prod_shift), st.lp_spec)
+                y_pad = jnp.pad(y_lp, ((0, 0), (0, 2 * l_next + 1 - l_max)))
+                kept = jax.vmap(
+                    lambda r, s: jax.lax.dynamic_slice_in_dim(
+                        r, s, 2 * l_next, axis=0)
+                )(y_pad, start)[:, ::2]
+            # requantize onto the next octave's 8-bit register bank (its
+            # exp carries that octave's calibrated pre-gain)
+            x_o = _clamp(rescale(kept, st.lp_out_shift),
+                         bank.octaves[o + 1].in_spec)
+            # kept-count update: arithmetic shift, not an integer divide
+            # (the census must stay divider-free)
+            n_o = jnp.right_shift(jnp.maximum(n_o - start + 1, 0), 1)
+            l_max = l_next
+    acc = state.acc + jnp.concatenate(parts, axis=-1)
+    state = state._replace(delays=tuple(delays), consumed=tuple(consumed),
+                           acc=acc, amax=amax, count=state.count + n)
+    p_q, phi_q = readout_q(prog, acc)
+    return state, p_q, phi_q

@@ -98,18 +98,32 @@ def quantize_params(params: MPKernelMachineParams,
     ``operand_spec`` grid the MP adders run at (power-of-two scales, so the
     alignment is a bit shift). Biases quantize directly at operand scale.
     Returns ``(wp_q, wn_q, bpos_q, bneg_q)`` int32 arrays at
-    ``operand_spec.exp``."""
+    ``operand_spec.exp``.
+
+    HOST-side lowering (numpy, concrete params only): program compilation
+    must be able to run while a jit trace is active — e.g. the lazy
+    ``fixed_program()`` cache populating inside a jitted closure's first
+    session step — and any jnp op here would be staged into that trace."""
+    import numpy as np
+
     k = rom_spec.exp - operand_spec.exp
 
-    def align(q):
-        if k >= 0:
-            return jnp.left_shift(q, k)
-        return jnp.right_shift(q, -k)  # arithmetic: floor, like the shifter
+    def quant(x, spec):
+        # f32 multiply-by-reciprocal, exactly like FixedPointSpec.quantize
+        # on device — the ROM codes must not depend on which host lowered
+        # them (pow2 reciprocals are exact; round is half-to-even in both)
+        q = np.round(np.asarray(x, np.float32)
+                     * np.float32(1.0 / spec.scale))
+        return np.clip(q, spec.qmin, spec.qmax).astype(np.int64)
 
-    wp_q = align(rom_spec.quantize(jax.nn.relu(params.w_pos)))
-    wn_q = align(rom_spec.quantize(jax.nn.relu(params.w_neg)))
-    bpos_q = operand_spec.quantize(params.b_pos)
-    bneg_q = operand_spec.quantize(params.b_neg)
+    def align(q):
+        # shifts on host ints: left exact, right floors like the shifter
+        return (q << k if k >= 0 else q >> (-k)).astype(np.int32)
+
+    wp_q = align(quant(np.maximum(np.asarray(params.w_pos), 0.0), rom_spec))
+    wn_q = align(quant(np.maximum(np.asarray(params.w_neg), 0.0), rom_spec))
+    bpos_q = quant(params.b_pos, operand_spec).astype(np.int32)
+    bneg_q = quant(params.b_neg, operand_spec).astype(np.int32)
     return wp_q, wn_q, bpos_q, bneg_q
 
 

@@ -43,15 +43,23 @@ layer buckets lengths to powers of two to bound this); within a call the
 octave-level valid lengths are data-dependent per-slot vectors handled with
 masking + per-row dynamic slices, so the step is fully jit-able.
 
-With ``config.numerics == "fixed"`` the stateless path executes the
-bit-true int32 hardware twin (``repro.core.fixed``): the audio quantizes
-onto the calibrated ADC grid and every stage runs in add/sub/shift/compare
-integer arithmetic, dequantizing only at the output surface. The session
-path rejects fixed numerics loudly until the int32 streaming step lands.
-Note the program lowering is host-side, so ``jax.jit`` the *compiled*
-program (``prog = pipe.fixed_program(); jit(lambda x: fixed.predict(prog,
-x))``) rather than ``apply`` itself — jitting ``apply`` directly raises a
-TypeError with that guidance.
+With ``config.numerics == "fixed"`` BOTH paths execute the bit-true int32
+hardware twin (``repro.core.fixed``): the audio quantizes onto the static
+calibrated ADC grid and every stage runs in add/sub/shift/compare integer
+arithmetic, dequantizing only at the output surface. The session path
+carries every register as an integer in the fixed-point grid (8-bit
+octave-signal delay lines, 32-bit accumulators, running max |code|), and —
+because the ADC grid is static and integer addition is associative —
+chunked streaming decisions are bit-for-bit equal to one-shot ``apply(x)``
+from the FIRST chunk, with no peak-seen caveat (docs/numerics.md). Only
+``stream_impl="xla"`` streams fixed numerics; the int Pallas streaming
+kernel is a tracked ROADMAP follow-up and is rejected at kernel-selection
+time. Note the program lowering is host-side, so ``jax.jit`` a closure
+over a *concrete* pipeline (``jit(lambda x, st: pipe.apply(x, st))``) or
+the compiled program (``prog = pipe.fixed_program(); jit(lambda x:
+fixed.predict(prog, x))``) rather than ``InFilterPipeline.apply`` with the
+pipeline as a traced pytree argument — that raises a TypeError with this
+guidance.
 
 Migration (PR 2): ``init_state``/``step``/``StreamingState`` — the one-
 cohort streaming API — remain as thin shims over the session path and will
@@ -193,6 +201,16 @@ class InFilterPipeline:
         ``(p, state')`` — note output-first, unlike the deprecated ``step``
         — or ``(p, phi, state')`` with ``return_features=True``. ``p`` is
         each slot's decision from all evidence so far.
+
+        Numerics and the parity guarantee: with ``numerics="float"``
+        (default) both paths run the f32 engine; streamed decisions match
+        one-shot to f32 round-off, bit-for-bit when the whole signal fits
+        one call, and under ``quant_bits`` bit-for-bit once the running
+        amax has seen the stream's peak. With ``numerics="fixed"`` both
+        paths run the bit-true int32 hardware twin and streamed decisions
+        (and every register) are bit-for-bit equal to one-shot ``apply(x)``
+        under ANY chunking, from the first chunk — the ADC grid is static
+        and integer addition is associative (docs/numerics.md).
         """
         x = jnp.asarray(x)
         if state is None:
@@ -203,14 +221,6 @@ class InFilterPipeline:
             phi = self.features(x)
             p = km.forward(self.clf, phi, exact=False)
             return (p, phi) if return_features else p
-        if self.config.numerics == "fixed":
-            # the mode plumbing anticipates integer streaming (the session
-            # registers and delay lines quantize the same way), but the
-            # int32 session step has not landed yet — fail loudly instead
-            # of silently serving float results as "the hardware twin"
-            raise NotImplementedError(
-                "numerics='fixed' session streaming is not implemented yet; "
-                "fixed-point inference is one-shot only (state=None)")
         if isinstance(state, StreamingState):
             raise TypeError(
                 "apply() takes a SessionState (init_session); for the "
@@ -265,14 +275,28 @@ class InFilterPipeline:
 
     def fixed_program(self, **overrides):
         """The compiled integer program for this pipeline (lazy, cached for
-        the no-override call). ``overrides`` pass through to
+        the no-override call — the program ``apply``/``features`` and the
+        session streaming path execute). ``overrides`` pass through to
         ``repro.core.fixed.compile_pipeline`` (amax, signal_bits,
-        internal_bits, phi_amax)."""
+        internal_bits, phi_amax, octave_gains, calibration_audio) and
+        return a fresh, UNcached program; use :meth:`calibrate_fixed` to
+        make a calibrated program the pinned one."""
         from repro.core import fixed
         if overrides:
             return fixed.compile_pipeline(self, **overrides)
         if self._fixed_prog is None:
             self._fixed_prog = fixed.compile_pipeline(self)
+        return self._fixed_prog
+
+    def calibrate_fixed(self, calibration_audio, **overrides):
+        """Compile the integer program calibrated on ``calibration_audio``
+        (ADC full-scale + per-octave register pre-gains) and PIN it as this
+        pipeline's cached program, so one-shot ``apply``/``features`` AND
+        the integer session-streaming path all execute the calibrated
+        datapath. Returns the program."""
+        from repro.core import fixed
+        self._fixed_prog = fixed.compile_pipeline(
+            self, calibration_audio=calibration_audio, **overrides)
         return self._fixed_prog
 
     def predict(self, x: jax.Array) -> jax.Array:
@@ -296,11 +320,23 @@ class InFilterPipeline:
         — e.g. a calibrated ADC full-scale) so quantized streaming is
         bit-faithful from the first chunk. ``active`` sets the admission
         mask (default: all slots active; a StreamServer starts all-inactive
-        and admits via open())."""
+        and admits via open()).
+
+        With ``numerics="fixed"`` every register is an integer on the
+        fixed-point grid (``dtype`` is ignored): delay lines hold 8-bit
+        octave-signal codes, ``acc`` the 32-bit accumulators, and ``amax``
+        the running max |ADC code| — telemetry only, since the ADC grid is
+        static (a float ``amax`` seed is converted to codes)."""
         c = self.config
         T1 = self._delay_len
+        if c.numerics == "fixed":
+            dtype = jnp.int32
         if amax is None:
             amax_arr = jnp.zeros((capacity,), dtype)
+        elif c.numerics == "fixed":
+            amax_arr = jnp.broadcast_to(
+                self.fixed_program().signal.quantize(jnp.abs(
+                    jnp.asarray(amax, jnp.float32))), (capacity,))
         else:
             amax_arr = jnp.broadcast_to(
                 jnp.asarray(amax, dtype), (capacity,))
@@ -337,12 +373,7 @@ class InFilterPipeline:
         """
         c = self.config
         if c.numerics == "fixed":
-            # also guards the deprecated step()/stream() shims, which call
-            # this directly: a fixed-point pipeline must never silently
-            # stream through the float engine
-            raise NotImplementedError(
-                "numerics='fixed' session streaming is not implemented yet; "
-                "fixed-point inference is one-shot only")
+            return self._session_step_fixed(state, chunk, valid)
         S, L = chunk.shape
         n = jnp.where(state.active, jnp.asarray(valid, jnp.int32), 0)
         if L == 0:
@@ -361,6 +392,41 @@ class InFilterPipeline:
                              "expected 'xla' or 'pallas'")
         phi = (state.acc - self.mu) / self.sigma
         return state, km.forward(self.clf, phi, exact=False), phi
+
+    def _session_step_fixed(self, state: SessionState, chunk: jax.Array,
+                            valid: jax.Array):
+        """The int32 session step: quantize the chunk onto the static ADC
+        grid, zero invalid positions, and run the integer cascade
+        (``fixed.session_step_q``) — every register stays on the
+        fixed-point grid and chunked decisions are bit-for-bit the one-shot
+        program's. The kernel selection happens HERE: only the XLA cascade
+        has an integer variant so far."""
+        from repro.core import fixed
+        from repro.core.quant import unsupported_fixed
+        c = self.config
+        if c.stream_impl == "pallas":
+            # kernel-selection time, not construction time: an int32
+            # fir_mp_stream variant is the tracked follow-up
+            raise unsupported_fixed(
+                "stream_impl='pallas' session streaming",
+                hint="the stateful fir_mp_stream kernel has no int32 "
+                     "variant; stream fixed numerics with "
+                     "stream_impl='xla'")
+        if c.stream_impl != "xla":
+            raise ValueError(f"unknown stream_impl {c.stream_impl!r}: "
+                             "expected 'xla' or 'pallas'")
+        prog = self.fixed_program()
+        S, L = chunk.shape
+        n = jnp.where(state.active, jnp.asarray(valid, jnp.int32), 0)
+        if L == 0:
+            xq = jnp.zeros((S, 0), jnp.int32)
+        else:
+            xq = fixed.quantize_signal(prog, chunk)
+            pos0 = jax.lax.broadcasted_iota(jnp.int32, (S, L), 1)
+            xq = jnp.where(pos0 < n[:, None], xq, 0)
+        state, p_q, phi_q = fixed.session_step_q(prog, state, xq, n)
+        return state, prog.out_spec.dequantize(p_q), \
+            prog.phi.dequantize(phi_q)
 
     def _cascade_pallas(self, state: SessionState, chunk: jax.Array,
                         n: jax.Array) -> SessionState:

@@ -34,7 +34,33 @@ __all__ = [
     "fake_quant",
     "spec_for",
     "pow2_spec_for",
+    "unsupported_fixed",
 ]
+
+
+def unsupported_fixed(feature: str, *, hint: str | None = None,
+                      followup: str | None = "Fixed-point Pallas kernels"
+                      ) -> Exception:
+    """The one way this repo says "numerics='fixed' has no path here".
+
+    Every surface that rejects the fixed-point mode builds its exception
+    here, so rejections stay consistent and each one names where the int32
+    support is tracked. ``hint`` redirects to the surface that DOES support
+    fixed numerics; ``followup`` names the ROADMAP.md open item that will
+    remove the rejection (``None`` for permanent redirects — the caller is
+    simply the wrong entry point, not a missing feature).
+
+    Returns the exception (``NotImplementedError`` for follow-ups,
+    ``ValueError`` for wrong-entry-point redirects) — callers ``raise`` it.
+    """
+    msg = f"{feature} does not support numerics='fixed'"
+    if hint:
+        msg += f": {hint}"
+    if followup:
+        msg += (f" — the int32 path here is the {followup!r} follow-up "
+                "in ROADMAP.md")
+        return NotImplementedError(msg)
+    return ValueError(msg)
 
 
 class QuantSpec(NamedTuple):
@@ -93,11 +119,18 @@ def _amax_of(x) -> float:
     """max |x| with degenerate handling shared by the spec builders:
     empty and all-zero tensors get amax = 1.0 (so quantize(0) == 0 and the
     scale stays sane), non-finite input is rejected loudly instead of
-    producing a NaN/overflowing scale."""
-    x = jnp.asarray(x)
+    producing a NaN/overflowing scale.
+
+    Host-side on purpose (numpy): the spec builders run during program
+    lowering, which must work even while a jit trace is active (a jnp op
+    here would be staged into the trace and the float() below would see a
+    tracer). A traced argument still fails loudly — np.asarray refuses
+    tracers."""
+    import numpy as np
+    x = np.asarray(x)
     if x.size == 0:
         return 1.0
-    amax = float(jnp.max(jnp.abs(x)))
+    amax = float(np.max(np.abs(x)))
     if not math.isfinite(amax):
         raise ValueError(
             f"spec_for: tensor has non-finite values (max |x| = {amax})")

@@ -40,7 +40,9 @@ def _serve_acoustic(args):
     from repro.serving import StreamServer
 
     pipe = make_pipeline(smoke=args.smoke, seed=args.seed,
-                         stream_impl=args.stream_impl)
+                         stream_impl=args.stream_impl,
+                         numerics=args.numerics,
+                         fixed_amax=args.fixed_amax)
     fs = pipe.config.fs
     server = StreamServer(pipe, capacity=args.streams,
                           max_chunk=max(args.chunk, 16))
@@ -148,6 +150,17 @@ def main(argv=None):
                     help="esc10-mp: session-step hot path — 'pallas' runs "
                          "the stateful fir_mp_stream kernel (VMEM-carried "
                          "delay lines; interpret mode off-TPU)")
+    ap.add_argument("--numerics", choices=["float", "fixed"],
+                    default="float",
+                    help="esc10-mp: 'fixed' serves the bit-true int32 "
+                         "hardware twin — integer session registers, "
+                         "streamed decisions bit-for-bit equal to one-shot "
+                         "inference (requires --stream-impl xla)")
+    ap.add_argument("--fixed-amax", type=float, default=None,
+                    help="esc10-mp: ADC full-scale for --numerics fixed "
+                         "(default: the config's static 1.0; the synthetic "
+                         "sensors here peak around 4, so pass ~4.0 to "
+                         "avoid saturating the demo)")
     args = ap.parse_args(argv)
 
     if args.arch == ACOUSTIC_ARCH:

@@ -58,7 +58,14 @@ class StreamServer:
     pipeline:       the deployable ``InFilterPipeline``. Its config's
                     ``stream_impl`` picks the donated batch step's hot path
                     ("xla" or the stateful "pallas" streaming kernel —
-                    bit-identical decisions either way).
+                    bit-identical decisions either way). Its
+                    ``numerics`` picks the engine: "float" (f32 registers)
+                    or "fixed" — the bit-true int32 hardware twin, whose
+                    streamed decisions are bit-for-bit equal to one-shot
+                    ``pipeline.apply(x)`` under any chunking
+                    (``stats()["numerics"]`` reports the live mode;
+                    fixed + "pallas" is rejected here at construction —
+                    no int32 kernel yet).
     capacity:       number of slots S (streams resident at once).
     max_chunk:      largest per-call chunk; longer packets are split.
     min_chunk:      smallest pad bucket (tiny packets share one variant).
@@ -89,13 +96,14 @@ class StreamServer:
             raise ValueError(
                 "stream_impl='pallas' requires an MP-mode pipeline "
                 f"(got mode={pipeline.config.mode!r})")
-        # the int32 session step hasn't landed; a fixed-point pipeline must
-        # not silently stream through the float engine
-        if pipeline.config.numerics == "fixed":
-            raise NotImplementedError(
-                "StreamServer: numerics='fixed' session streaming is not "
-                "implemented yet — fixed-point inference is one-shot only "
-                "(pipeline.apply / pipeline.predict)")
+        if pipeline.config.numerics == "fixed" \
+                and pipeline.config.stream_impl == "pallas":
+            from repro.core.quant import unsupported_fixed
+            raise unsupported_fixed(
+                "StreamServer with stream_impl='pallas'",
+                hint="the stateful fir_mp_stream kernel has no int32 "
+                     "variant; serve fixed numerics with "
+                     "stream_impl='xla'")
         self.pipeline = pipeline
         self.capacity = capacity
         self.max_chunk = max_chunk
@@ -116,7 +124,21 @@ class StreamServer:
                 mesh, sh.sanitize((dp, None), (capacity, max_chunk), mesh))
             self._valid_sharding = jax.sharding.NamedSharding(
                 mesh, sh.sanitize((dp,), (capacity,), mesh))
-        self._step = jax.jit(_batched_step, donate_argnums=(1,))
+        if pipeline.config.numerics == "fixed":
+            # the integer program lowers HOST-side (concrete ROMs/shift
+            # tables), so the pipeline cannot ride along as a traced pytree
+            # argument the way the float step's weights do. Precompile once
+            # and jit a closure over the concrete pipeline: the step's only
+            # traced inputs are the donated integer registers + the chunk.
+            pipeline.fixed_program()
+            fixed_step = jax.jit(
+                lambda state, chunk, valid: _batched_step(
+                    pipeline, state, chunk, valid),
+                donate_argnums=(0,))
+            self._step = lambda pipe, state, chunk, valid: \
+                fixed_step(state, chunk, valid)
+        else:
+            self._step = jax.jit(_batched_step, donate_argnums=(1,))
         self._free = list(range(capacity - 1, -1, -1))  # pop() -> slot 0 first
         self._sessions: dict[str, Session] = {}
         self._manager = None
@@ -158,7 +180,10 @@ class StreamServer:
     def open(self, session_id: str) -> Session:
         """Admit a stream. If a checkpoint for this id exists (prior
         eviction), the session resumes from it bit-exactly; otherwise the
-        slot starts from the cleared-register state."""
+        slot starts from the cleared-register state. Holds for BOTH
+        numerics modes — an evicted fixed-mode session's integer registers
+        round-trip the named-checkpoint store losslessly (dtype-checked),
+        so a reopened int32 stream continues bit-for-bit."""
         if session_id in self._sessions:
             raise ValueError(f"session {session_id!r} already open")
         # validate at admission (checkpoint-name charset), BEFORE any state
@@ -189,9 +214,10 @@ class StreamServer:
         return sess
 
     def close(self, session_id: str, *, checkpoint: bool = False) -> Session:
-        """Release a session's slot. ``checkpoint=True`` parks its state for
-        a later ``open`` (same as eviction); otherwise any parked copy is
-        discarded — a future ``open`` of this id starts fresh."""
+        """Release a session's slot. ``checkpoint=True`` parks its state
+        (float or integer registers alike) for a later ``open`` (same as
+        eviction); otherwise any parked copy is discarded — a future
+        ``open`` of this id starts fresh."""
         sess = self._sessions.pop(session_id)
         if checkpoint:
             self._park(sess)
@@ -250,6 +276,12 @@ class StreamServer:
         Everything that can share a compiled call does: per wave, all
         pending segments are padded into one (S, L_bucket) batch with
         per-slot valid counts, and absent/inactive slots ride along inertly.
+
+        Chunks are always float audio regardless of numerics: a fixed-mode
+        server quantizes onto its static ADC grid inside the step, and its
+        decisions equal one-shot inference on the concatenated audio
+        bit-for-bit (a float server matches to f32 round-off, bit-for-bit
+        under ``quant_bits`` once the running amax has seen the peak).
         """
         reqs = []
         for r in requests:

@@ -64,9 +64,10 @@ def make_audio(case: dict) -> np.ndarray:
 def compute_outputs(case: dict) -> dict:
     """The recorded surface: one-shot p/phi, streamed p (both impls), the
     final streamed accumulator registers, and the fixed-point hardware
-    twin's INTEGER codes (p/phi/accumulators). The float entries gate with
-    a small atol; the ``*_fixed_q`` int entries must match EXACTLY — integer
-    arithmetic either reproduces or it drifted."""
+    twin's INTEGER codes — one-shot (p/phi/accumulators) AND streamed
+    through the int32 session step (``*_stream_fixed_q``). The float
+    entries gate with a small atol; every ``*_fixed_q`` int entry must
+    match EXACTLY — integer arithmetic either reproduces or it drifted."""
     import jax.numpy as jnp
 
     from repro.core import fixed
@@ -87,6 +88,19 @@ def compute_outputs(case: dict) -> dict:
             out["p_fixed_q"] = np.asarray(p_q, np.int32)
             out["phi_fixed_q"] = np.asarray(phi_q, np.int32)
             out["acc_fixed_q"] = np.asarray(s_q, np.int32)
+            # int32 session streaming: same taps, same calibrated program
+            # (pinned via calibrate_fixed), fed in the case's chunking —
+            # must land on the SAME integer codes as the one-shot rows
+            pipe_fx = build_pipeline(
+                dict(case, cfg=dict(case["cfg"], numerics="fixed")), impl)
+            pipe_fx.calibrate_fixed(np.asarray(x))
+            state = pipe_fx.init_session(x.shape[0])
+            p_s = None
+            for i in range(0, x.shape[1], case["chunk"]):
+                p_s, state = pipe_fx.apply(x[:, i:i + case["chunk"]], state)
+            out["p_stream_fixed_q"] = np.asarray(
+                np.round(np.asarray(p_s) / prog.out_spec.scale), np.int32)
+            out["acc_stream_fixed_q"] = np.asarray(state.acc, np.int32)
         state = pipe.init_session(x.shape[0],
                                   amax=jnp.max(jnp.abs(x), axis=-1))
         p_s = None

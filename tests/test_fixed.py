@@ -216,12 +216,41 @@ def test_integer_jaxpr_is_multiplierless():
         assert c["add"] > 0 and c["compare"] > 0  # it actually computed
 
 
+@pytest.mark.parametrize("mode", ["mp", "mac"])
+def test_session_step_carriers_agree_bitwise(mode):
+    """The integer session step is carrier-generic like every fxp_* kernel:
+    int32 registers (the hardware) and float-carried integer registers (the
+    fake-quant twin) march through identical chunked states."""
+    x = _audio((2, 320), seed=17)
+    pipe = _pipeline(mode=mode, numerics="fixed",
+                     fixed_amax=float(np.abs(x).max()))
+    prog = pipe.fixed_program()
+    xq_i = fixed.quantize_signal(prog, jnp.asarray(x), "int")
+    xq_f = fixed.quantize_signal(prog, jnp.asarray(x), "float")
+    st_i = pipe.init_session(2)
+    # carrier registers go float; count/consumed stay int bookkeeping
+    st_f = st_i._replace(
+        delays=tuple(d.astype(jnp.float32) for d in st_i.delays),
+        acc=st_i.acc.astype(jnp.float32),
+        amax=st_i.amax.astype(jnp.float32))
+    n = jnp.full((2,), 160, jnp.int32)
+    for off in (0, 160):
+        st_i, p_i, phi_i = fixed.session_step_q(
+            prog, st_i, xq_i[:, off:off + 160], n)
+        st_f, p_f, phi_f = fixed.session_step_q(
+            prog, st_f, xq_f[:, off:off + 160], n)
+        np.testing.assert_array_equal(np.asarray(p_i),
+                                      np.asarray(p_f).astype(np.int64))
+    np.testing.assert_array_equal(np.asarray(st_i.acc),
+                                  np.asarray(st_f.acc).astype(np.int64))
+
+
 # ---------------------------------------------------------------------------
 # numerics-mode plumbing
 # ---------------------------------------------------------------------------
 
 
-def test_pipeline_apply_routes_fixed_and_blocks_streaming():
+def test_pipeline_apply_routes_fixed_and_streams_it():
     x = _audio((2, 300), seed=8)
     pipe = _pipeline(numerics="fixed", fixed_amax=float(np.abs(x).max()))
     p, phi = pipe.apply(jnp.asarray(x), return_features=True)
@@ -231,9 +260,14 @@ def test_pipeline_apply_routes_fixed_and_blocks_streaming():
     np.testing.assert_array_equal(
         np.asarray(p) / prog.out_spec.scale,
         np.round(np.asarray(p) / prog.out_spec.scale))
+    # the session path runs the SAME integer program chunk-by-chunk:
+    # int32 registers, decisions exactly equal to the one-shot codes
     state = pipe.init_session(2)
-    with pytest.raises(NotImplementedError, match="fixed"):
-        pipe.apply(jnp.asarray(x), state)
+    assert state.acc.dtype == jnp.int32
+    p_s = None
+    for i in range(0, 300, 77):
+        p_s, state = pipe.apply(jnp.asarray(x[:, i:i + 77]), state)
+    np.testing.assert_array_equal(np.asarray(p_s), np.asarray(p))
 
 
 def test_fixed_apply_under_jit_raises_with_guidance():
@@ -280,11 +314,31 @@ def test_unknown_numerics_rejected():
         FilterBank(cfg)
 
 
-def test_stream_server_rejects_fixed_pipeline():
+def test_stream_server_serves_fixed_pipeline():
+    """PR 5: the rejection is gone — a fixed-point pipeline streams, the
+    server's registers are integer, and stats() reports the live mode."""
     from repro.serving import StreamServer
     pipe = _pipeline(numerics="fixed")
-    with pytest.raises(NotImplementedError, match="fixed"):
-        StreamServer(pipe, capacity=2)
+    srv = StreamServer(pipe, capacity=2)
+    assert srv.stats()["numerics"] == "fixed"
+    assert srv.state.acc.dtype == jnp.int32
+    srv.open("s")
+    (res,) = srv.feed([("s", _audio((160,), seed=21))])
+    p = np.asarray(pipe.apply(jnp.asarray(_audio((160,), seed=21))[None]))[0]
+    assert res.label == int(p.argmax())
+
+
+def test_unsupported_fixed_helper_message_shape():
+    """All remaining fixed rejections build here: follow-ups are
+    NotImplementedError naming the ROADMAP item; wrong-entry-point
+    redirects are ValueError without one."""
+    from repro.core.quant import unsupported_fixed
+    err = unsupported_fixed("somewhere")
+    assert isinstance(err, NotImplementedError)
+    assert "ROADMAP.md" in str(err) and "Fixed-point Pallas" in str(err)
+    err = unsupported_fixed("an entry point", followup=None, hint="go there")
+    assert isinstance(err, ValueError)
+    assert "ROADMAP" not in str(err) and "go there" in str(err)
 
 
 def test_stream_server_stats_surface_numerics():

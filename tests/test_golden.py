@@ -85,3 +85,18 @@ def test_golden_streams_agree_bitwise():
         np.testing.assert_array_equal(
             got["acc_stream_xla"], got["acc_stream_pallas"],
             err_msg=f"{name}: stream accumulators diverged")
+
+
+def test_golden_fixed_stream_is_bitwise_one_shot():
+    """The int32 session step's contract, documented by the fixture itself:
+    chunked fixed-point streaming lands on EXACTLY the one-shot integer
+    codes — static ADC grid + associative integer accumulation, so there
+    is no peak-seen caveat and no atol."""
+    for name in sorted(CASES):
+        got = _outputs(name)
+        np.testing.assert_array_equal(
+            got["p_stream_fixed_q"], got["p_fixed_q"],
+            err_msg=f"{name}: fixed stream decisions != one-shot codes")
+        np.testing.assert_array_equal(
+            got["acc_stream_fixed_q"], got["acc_fixed_q"],
+            err_msg=f"{name}: fixed stream accumulators != one-shot codes")

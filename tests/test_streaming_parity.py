@@ -16,6 +16,12 @@ streaming kernel"):
 * **Single chunk == one-shot, bit-for-bit**: with the whole signal in one
   call, both streaming impls reproduce the one-shot accumulate exactly
   (shared ``hwr_accumulate`` blocking).
+* **Fixed-point streaming == one-shot, bit-for-bit, ANY chunking** (PR 5):
+  with ``numerics="fixed"`` the int32 session step must land on EXACTLY
+  the one-shot integer program's codes — registers and decisions gate with
+  ``==`` from the first chunk (static ADC grid, associative integer adds;
+  docs/numerics.md), and the remaining fixed rejection (int Pallas) names
+  its ROADMAP follow-up.
 
 Randomization comes through the hypothesis-or-fallback sampler in
 ``conftest.py``: each example draws one seed; numpy generates audio, chunk
@@ -323,6 +329,168 @@ def test_mac_mode_rejects_pallas_stream_impl():
                             px.mu, px.sigma, px.clf)
     with pytest.raises(ValueError, match="pallas"):
         pipe.apply(jnp.zeros((2, 64)), pipe.init_session(2))
+
+
+# ---------------------------------------------------------------------------
+# fixed-point (int32) session streaming: EXACT equality, not allclose —
+# the ADC grid is static and integer addition is associative, so any chunk
+# partition must reproduce the one-shot integer program bit-for-bit from
+# the FIRST chunk (no peak-seen caveat, unlike quant_bits float streaming)
+# ---------------------------------------------------------------------------
+
+
+_FIXED_PIPES = {}
+
+
+def _fixed_pipe(**cfg_over):
+    """A numerics='fixed' pipeline + its closure-jitted session step (the
+    program lowers host-side, so the pipeline must NOT ride along as a
+    traced pytree the way _APP passes it)."""
+    key = tuple(sorted(cfg_over.items()))
+    if key not in _FIXED_PIPES:
+        kw = dict(_BASE, numerics="fixed", fixed_amax=3.0)
+        kw.update(cfg_over)
+        cfg = FilterBankConfig(**kw)
+        fb = FilterBank(cfg)
+        P = cfg.num_filters
+        clf = km.init_params(jax.random.PRNGKey(0), P, 4)
+        mu = jax.random.normal(jax.random.PRNGKey(1), (P,)) * 0.1 + 1.0
+        sigma = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (P,))) + 0.5
+        pipe = InFilterPipeline(cfg, fb.bp_by_octave, fb.lp_filters,
+                                mu, sigma, clf)
+        app = jax.jit(lambda st, ch, v: pipe.apply(ch, st, valid=v))
+        _FIXED_PIPES[key] = (pipe, app)
+    return _FIXED_PIPES[key]
+
+
+@pytest.mark.parametrize("mode", ["mp", "mac"])
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10 ** 9))
+def test_fixed_random_chunking_is_bitwise_one_shot(mode, seed):
+    """Random chunk partitions through the int32 session step reproduce the
+    one-shot integer program EXACTLY: decisions, features, and the 32-bit
+    accumulator registers all gate with ==, from the first chunk."""
+    from repro.core import fixed
+
+    rng = np.random.default_rng(seed)
+    pipe, app = _fixed_pipe(mode=mode)
+    prog = pipe.fixed_program()
+    S = 2
+    lens, n = _partition(rng)
+    x = jnp.asarray(rng.standard_normal((S, n)).astype(np.float32))
+    p_q, phi_q, s_q = fixed.infer_q(prog, fixed.quantize_signal(prog, x))
+    p_one = prog.out_spec.dequantize(p_q)
+
+    state = pipe.init_session(S)
+    assert state.acc.dtype == jnp.int32
+    assert all(d.dtype == jnp.int32 for d in state.delays)
+    p_s = None
+    off = 0
+    for ln in lens:
+        ch = x[:, off:off + ln]
+        off += ln
+        p_s, state = app(state, ch, jnp.full((S,), ln, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(state.acc), np.asarray(s_q),
+                                  err_msg=f"seed={seed}: acc registers")
+    np.testing.assert_array_equal(np.asarray(p_s), np.asarray(p_one),
+                                  err_msg=f"seed={seed}: decisions")
+    assert int(state.count[0]) == n
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10 ** 9))
+def test_fixed_slot_lifecycles_bitwise(seed):
+    """Random open/feed/close lifecycles with per-slot valid counts: every
+    completed slot's decision equals its dedicated one-shot integer run
+    EXACTLY, and garbage in non-fed rows never perturbs a register."""
+    rng = np.random.default_rng(seed)
+    pipe, app = _fixed_pipe()
+    S = 3
+    total = [int(rng.integers(40, 200)) for _ in range(S)]
+    audio = [rng.standard_normal(t).astype(np.float32) for t in total]
+    fed = [0] * S
+    state = pipe.init_session(S)
+    last_p = [None] * S
+    for _ in range(20):
+        slot = int(rng.integers(S))
+        take = min(int(rng.choice(_LEN_MENU)), total[slot] - fed[slot])
+        L = min((l for l in _LEN_MENU if l >= max(take, 1)),
+                default=_LEN_MENU[-1])
+        chunk = (rng.standard_normal((S, L)) * 50.0).astype(np.float32)
+        chunk[slot, :take] = audio[slot][fed[slot]:fed[slot] + take]
+        valid = np.zeros((S,), np.int32)
+        valid[slot] = take
+        fed[slot] += take
+        p, state = app(state, jnp.asarray(chunk), jnp.asarray(valid))
+        last_p[slot] = np.asarray(p[slot])
+    for s in range(S):
+        if fed[s] != total[s]:
+            continue
+        ref = np.asarray(pipe.apply(jnp.asarray(audio[s])[None]))[0]
+        np.testing.assert_array_equal(last_p[s], ref,
+                                      err_msg=f"seed={seed} slot={s}")
+
+
+def test_fixed_zero_length_chunk_is_pure_readout():
+    pipe, app = _fixed_pipe()
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 150))
+    state = pipe.init_session(2)
+    p1, state = app(state, x, jnp.full((2,), 150, jnp.int32))
+    p0, state2 = app(state, jnp.zeros((2, 0)), jnp.zeros((2,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(state2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fixed_rejects_pallas_stream_impl_at_kernel_selection():
+    """The int Pallas streaming kernel is a tracked follow-up: selecting it
+    with fixed numerics must fail loudly AND name the ROADMAP item."""
+    pipe, _ = _fixed_pipe()
+    cfg = pipe.config._replace(stream_impl="pallas")
+    bad = InFilterPipeline(cfg, pipe.bp_taps, pipe.lp_taps,
+                           pipe.mu, pipe.sigma, pipe.clf)
+    with pytest.raises(NotImplementedError, match="ROADMAP"):
+        bad.apply(jnp.zeros((2, 64)), bad.init_session(2))
+
+
+def test_fixed_stream_server_end_to_end(tmp_path):
+    """StreamServer serves numerics='fixed': open/feed/split/evict/reopen,
+    with the final decision per stream equal (exactly — same codes, same
+    dequantization) to one-shot inference on the concatenated audio, and
+    the int32 registers round-tripping the named-checkpoint store."""
+    from repro.serving import StreamServer
+
+    pipe, _ = _fixed_pipe()
+    rng = np.random.default_rng(9)
+    xa = rng.standard_normal(700).astype(np.float32)
+    xb = rng.standard_normal(420).astype(np.float32)
+    srv = StreamServer(pipe, capacity=2, max_chunk=256,
+                       checkpoint_dir=str(tmp_path))
+    assert srv.stats()["numerics"] == "fixed"
+    assert srv.state.acc.dtype == jnp.int32
+    srv.open("a")
+    srv.open("b")
+    out = []
+    out += srv.feed([("a", xa[:300]), ("b", xb[:33])])
+    out += srv.feed([("b", xb[33:420]), ("a", xa[300:301])])
+    srv.evict("a")                      # parks int32 registers on disk
+    srv.open("a")                       # restores them dtype-checked
+    out += srv.feed([("a", xa[301:700])])
+    final = {r.session_id: (r.label, r.confidence) for r in out}
+    for sid, x in (("a", xa), ("b", xb)):
+        p = np.asarray(pipe.apply(jnp.asarray(x)[None]))[0]
+        assert final[sid] == (int(p.argmax()), float(p.max())), sid
+
+
+def test_fixed_server_rejects_pallas_at_construction():
+    from repro.serving import StreamServer
+
+    pipe, _ = _fixed_pipe()
+    cfg = pipe.config._replace(stream_impl="pallas")
+    bad = InFilterPipeline(cfg, pipe.bp_taps, pipe.lp_taps,
+                           pipe.mu, pipe.sigma, pipe.clf)
+    with pytest.raises(NotImplementedError, match="ROADMAP"):
+        StreamServer(bad, capacity=2)
 
 
 def test_stream_server_pallas_bitwise_matches_xla_server(tmp_path):
