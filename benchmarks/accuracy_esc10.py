@@ -65,8 +65,8 @@ def main():
         acc = trainer.evaluate(params, K_te, jnp.asarray(ds.y_test), qbits)
         results[tag] = (per_class, acc)
         for c, name in enumerate(ESC10_CLASSES):
-            row(f"esc10.{tag}.{name}", 0.0, f"ova_acc={per_class[c]:.3f}")
-        row(f"esc10.{tag}.multiclass", 0.0, f"acc={acc:.3f}")
+            row(f"esc10.{tag}.{name}", None, f"ova_acc={per_class[c]:.3f}")
+        row(f"esc10.{tag}.multiclass", None, f"acc={acc:.3f}")
     us = (time.time() - t0) * 1e6
     row("esc10.total_runtime", us,
         "paper_avg=0.88 (ESC-10, Table II/III)")

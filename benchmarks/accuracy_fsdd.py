@@ -35,8 +35,8 @@ def main():
         tr = trainer.evaluate(params, K_tr, jnp.asarray(ds.y_train), qbits)
         te = trainer.evaluate(params, K_te, jnp.asarray(ds.y_test), qbits)
         out[tag] = (tr, te)
-        row(f"fsdd.{tag}", 0.0, f"train={tr:.3f} test={te:.3f}")
-    row("fsdd.reference", 0.0,
+        row(f"fsdd.{tag}", None, f"train={tr:.3f} test={te:.3f}")
+    row("fsdd.reference", None,
         "paper: Theo 92/93, Nicolas 99/98 (MP float, Table IV)")
     return out
 

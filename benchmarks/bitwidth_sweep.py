@@ -70,17 +70,17 @@ def main():
         int_te = float(((np.asarray(pq_te)[:, baby] > 0) ==
                         (np.asarray(ds.y_test) == baby)).mean())
         accs_int[bits] = (int_tr, int_te)
-        row(f"bitwidth.{bits}b", 0.0,
+        row(f"bitwidth.{bits}b", None,
             f"train={acc_tr:.3f} test={acc_te:.3f} "
             f"int_train={int_tr:.3f} int_test={int_te:.3f}")
     # the Fig. 8 claim, checked numerically: >= 8b stable, < 8b degrades
     stable = min(accs[b][1] for b in (16, 12, 10, 8))
     low = accs[4][1]
-    row("bitwidth.claim", 0.0,
+    row("bitwidth.claim", None,
         f"stable_min(>=8b)={stable:.3f} at4b={low:.3f} "
         f"degrades={'yes' if low <= stable else 'no'}")
     stable_int = min(accs_int[b][1] for b in (16, 12, 10, 8))
-    row("bitwidth.claim_int", 0.0,
+    row("bitwidth.claim_int", None,
         f"int stable_min(>=8b)={stable_int:.3f} at4b={accs_int[4][1]:.3f} "
         "(true int32 execution, not the QAT proxy)")
     return accs

@@ -30,9 +30,15 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def row(name: str, us: float, derived: str = "") -> None:
-    print(f"{name},{us:.1f},{derived}", flush=True)
-    _ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+def row(name: str, us: float | None, derived: str = "") -> None:
+    """Emit one CSV row. ``us=None`` marks a non-timing row (accuracy,
+    parity, census): the CSV field is empty and the JSON trajectory gets
+    ``us_per_call: null`` — never 0.0, so tooling can't mistake it for a
+    free call."""
+    us_txt = "" if us is None else f"{us:.1f}"
+    print(f"{name},{us_txt},{derived}", flush=True)
+    _ROWS.append({"name": name,
+                  "us_per_call": None if us is None else round(float(us), 1),
                   "derived": derived})
 
 

@@ -37,7 +37,7 @@ def main():
     tones = [6000, 3000, 1500, 750, 375, 190]  # one per octave
     for o, tone in enumerate(tones):
         sel, peak = selectivity(fb, tone)
-        row(f"fig4.downsampled_16tap.octave{o+1}", 0.0,
+        row(f"fig4.downsampled_16tap.octave{o+1}", None,
             f"tone={tone}Hz selectivity={sel:.1f} peak_filter={peak} "
             f"peak_octave={fb.octave_of[peak]+1}")
 
@@ -55,8 +55,8 @@ def main():
     inband = (freqs >= lo) & (freqs <= hi)
     c16 = r16[inband].mean() / (r16[~inband].mean() + 1e-9)
     c200 = r200[inband].mean() / (r200[~inband].mean() + 1e-9)
-    row("fig4.fullrate_16tap_lowband", 0.0, f"contrast={c16:.2f}")
-    row("fig4.fullrate_200tap_lowband", 0.0,
+    row("fig4.fullrate_16tap_lowband", None, f"contrast={c16:.2f}")
+    row("fig4.fullrate_200tap_lowband", None,
         f"contrast={c200:.2f} (16-tap needs downsampling: "
         f"{'confirmed' if c200 > 3 * c16 else 'NOT confirmed'})")
 
@@ -66,7 +66,7 @@ def main():
     fb_mp = FilterBank(cfg._replace(mode="mp", gamma_f=4.0))
     mp_ = np.asarray(fb_mp.accumulate(x))[0]
     corr = float(np.corrcoef(mac, mp_)[0, 1])
-    row("fig6.mp_vs_mac_chirp_corr", 0.0,
+    row("fig6.mp_vs_mac_chirp_corr", None,
         f"corr={corr:.3f} (distortion present but structure preserved)")
     return corr
 

@@ -11,7 +11,11 @@ benchmark results are a diffable file instead of scrollback. Modules:
   bitwidth_sweep       Fig. 8     (accuracy vs bit width, QAT + true-int)
   filterbank_response  Fig. 4/6   (downsampling + MP distortion)
   hardware_cost        Table I/II (op census -> LUT equivalents; asserts
-                       the int32 hardware twin is multiplierless)
+                       the int32 hardware twin is multiplierless, incl.
+                       the Pallas-lowered streaming kernel)
+  kernel_sweep         streaming-kernel shape sweep (block_s x chunk x
+                       capacity, float + int; feeds the committed
+                       autotune table)
   microbench           kernel reference timings
   pipeline_e2e         unified audio->decision pipeline: one-shot vs
                        streaming vs the seed per-filter path
@@ -34,6 +38,7 @@ MODULES = [
     "microbench",
     "pipeline_e2e",
     "serve_streams",
+    "kernel_sweep",
     "filterbank_response",
     "hardware_cost",
     "accuracy_fsdd",

@@ -15,9 +15,14 @@ could not deliver.
 
 ``--stream-impl`` selects the session-step hot path ("xla" | "pallas" |
 "both"); "both" additionally reports pallas-vs-xla speedup and their
-bit-for-bit decision parity. Off-TPU the Pallas kernel runs in interpret
-mode, so its CPU numbers measure wiring, not the VMEM-residency win — the
->=1.5x target is a TPU measurement (see ROADMAP).
+bit-for-bit decision parity. ``--numerics fixed`` serves the bit-true
+int32 hardware twin instead of the float engine — there the "both" parity
+row is a HARD bitwise gate (int Pallas == int XLA registers and
+decisions), and the streaming-parity row compares streamed decisions
+against one-shot ``apply`` at exact equality. Off-TPU the Pallas kernels
+run in interpret mode, so CPU numbers measure wiring, not the
+VMEM-residency win — the >=1.5x target is a TPU measurement (see
+ROADMAP).
 
     PYTHONPATH=src python -m benchmarks.serve_streams [--slots 256] [--smoke]
 
@@ -52,13 +57,26 @@ def main(argv=()):
                     default="xla",
                     help="session-step hot path; 'both' also reports the "
                          "pallas-vs-xla speedup and decision parity")
+    ap.add_argument("--numerics", choices=["float", "fixed"],
+                    default="float",
+                    help="serving engine; 'fixed' serves the bit-true "
+                         "int32 hardware twin (parity rows become exact-"
+                         "equality gates)")
     args = ap.parse_args(argv)
     S = 16 if args.smoke else args.slots
     CH = args.chunk
     iters = 2 if args.smoke else 3
     primary_impl = "xla" if args.stream_impl == "both" else args.stream_impl
+    nm = args.numerics
+    tag = "" if nm == "float" else ".fixed"
 
-    pipe = make_pipeline(smoke=True, stream_impl=primary_impl)
+    def _pipe(impl):
+        # fixed: full-scale at ~4 sigma of the N(0,1) test audio so the
+        # static ADC grid is exercised, not just saturated
+        return make_pipeline(smoke=True, stream_impl=impl, numerics=nm,
+                             fixed_amax=4.0 if nm == "fixed" else None)
+
+    pipe = _pipe(primary_impl)
     rng = np.random.default_rng(0)
     audio = rng.standard_normal((S, ROUNDS * CH)).astype(np.float32)
 
@@ -66,7 +84,13 @@ def main(argv=()):
     # upload + one decision readback PER STREAM per packet (exactly what a
     # stream-at-a-time server pays; the slot-batched server amortizes all
     # three across S streams) ----------------------------------------------
-    step = jax.jit(InFilterPipeline.step)
+    if nm == "fixed":
+        # the integer program lowers host-side: jit a closure over the
+        # concrete pipeline (same shape as the server's donated step)
+        _step = jax.jit(lambda s, c: InFilterPipeline.step(pipe, s, c))
+        step = lambda p, s, c: _step(s, c)  # noqa: E731
+    else:
+        step = jax.jit(InFilterPipeline.step)
 
     def naive():
         states = [pipe.init_state(1) for _ in range(S)]
@@ -80,7 +104,7 @@ def main(argv=()):
         return labels
 
     us_naive = time_fn(naive, warmup=1, iters=iters)
-    row(f"serve_streams.naive_loop.S{S}xC{CH}", us_naive,
+    row(f"serve_streams.naive_loop{tag}.S{S}xC{CH}", us_naive,
         f"{S * ROUNDS / us_naive * 1e6:.0f} chunks/s")
 
     # -- slot-batched server: ONE donated compiled call per round -----------
@@ -98,14 +122,14 @@ def main(argv=()):
         return res
 
     us_srv = time_fn(served, warmup=1, iters=iters)
-    row(f"serve_streams.stream_server.S{S}xC{CH}", us_srv,
+    row(f"serve_streams.stream_server{tag}.S{S}xC{CH}", us_srv,
         f"speedup_vs_naive={us_naive / us_srv:.2f}x")
-    row(f"serve_streams.per_chunk_latency.S{S}", us_srv / ROUNDS,
+    row(f"serve_streams.per_chunk_latency{tag}.S{S}", us_srv / ROUNDS,
         f"{S * ROUNDS / us_srv * 1e6:.0f} chunks/s")
 
     # -- stateful Pallas streaming kernel vs the XLA session step -----------
     if args.stream_impl == "both":
-        pipe_k = make_pipeline(smoke=True, stream_impl="pallas")
+        pipe_k = _pipe("pallas")
         server_k = StreamServer(pipe_k, capacity=S, max_chunk=CH)
         for sid in ids:
             server_k.open(sid)
@@ -119,11 +143,12 @@ def main(argv=()):
             return res
 
         us_k = time_fn(served_pallas, warmup=1, iters=iters)
-        # decision parity on FRESH servers (history-free comparison)
-        fresh = []
+        # decision parity on FRESH servers (history-free comparison);
+        # registers are compared too — the server-parity gate covers the
+        # full SessionState, not just the argmax
+        fresh, regs = [], []
         for impl in ("xla", "pallas"):
-            srv = StreamServer(make_pipeline(smoke=True, stream_impl=impl),
-                               capacity=S, max_chunk=CH)
+            srv = StreamServer(_pipe(impl), capacity=S, max_chunk=CH)
             for sid in ids:
                 srv.open(sid)
             res = None
@@ -131,24 +156,52 @@ def main(argv=()):
                 res = srv.feed([(sid, audio[i, r * CH:(r + 1) * CH])
                                 for i, sid in enumerate(ids)])
             fresh.append(res)
-        bitwise = all(a.label == b.label and a.confidence == b.confidence
-                      for a, b in zip(*fresh))
-        row(f"serve_streams.stream_server_pallas.S{S}xC{CH}", us_k,
+            regs.append(np.asarray(srv.state.acc))
+        bitwise = (all(a.label == b.label and a.confidence == b.confidence
+                       for a, b in zip(*fresh))
+                   and bool(np.array_equal(*regs)))
+        if nm == "fixed" and not bitwise:
+            # the int kernels carry an EXACT parity contract — a mismatch
+            # is a correctness bug, not a benchmark footnote
+            raise AssertionError(
+                "fixed-numerics server parity violated: int Pallas != "
+                "int XLA decisions/registers")
+        row(f"serve_streams.stream_server_pallas{tag}.S{S}xC{CH}", us_k,
             f"speedup_vs_xla={us_srv / us_k:.2f}x bitwise={bitwise} "
             f"(interpret mode off-TPU; >=1.5x target is a TPU number)")
 
-    # -- quantized streaming parity (running amax, seeded = held stream) ----
-    pipe_q = make_pipeline(smoke=True, quant_bits=8, stream_impl=primary_impl)
-    xq = jnp.asarray(rng.standard_normal((4, 8 * CH)).astype(np.float32))
-    p_one = pipe_q.predict(xq)
-    amax0 = jnp.max(jnp.abs(xq), axis=-1)
-    state = pipe_q.init_session(4, amax=amax0)
-    p_s = None
-    for i in range(0, xq.shape[1], CH):
-        p_s, state = pipe_q.apply(xq[:, i:i + CH], state)
-    err = float(jnp.max(jnp.abs(p_s - p_one)))
-    row("serve_streams.quant_parity", 0.0,
-        f"stream_vs_oneshot={err:.2e} bitwise={bool(err == 0.0)}")
+    if nm == "fixed":
+        # -- fixed streaming parity: chunked == one-shot at EXACT equality
+        # (static ADC grid; docs/numerics.md) -------------------------------
+        pipe_q = _pipe(primary_impl)
+        xq = jnp.asarray(rng.standard_normal((4, 8 * CH)).astype(np.float32))
+        p_one = pipe_q.apply(xq)
+        state = pipe_q.init_session(4)
+        p_s = None
+        for i in range(0, xq.shape[1], CH):
+            p_s, state = pipe_q.apply(xq[:, i:i + CH], state)
+        exact = bool(np.array_equal(np.asarray(p_s), np.asarray(p_one)))
+        row(f"serve_streams.fixed_parity.{primary_impl}", None,
+            f"stream_vs_oneshot bitwise={exact}")
+        if not exact:
+            raise AssertionError(
+                "fixed-numerics streaming parity violated: chunked apply "
+                "!= one-shot apply")
+    else:
+        # -- quantized streaming parity (running amax, seeded = held
+        # stream) -----------------------------------------------------------
+        pipe_q = make_pipeline(smoke=True, quant_bits=8,
+                               stream_impl=primary_impl)
+        xq = jnp.asarray(rng.standard_normal((4, 8 * CH)).astype(np.float32))
+        p_one = pipe_q.predict(xq)
+        amax0 = jnp.max(jnp.abs(xq), axis=-1)
+        state = pipe_q.init_session(4, amax=amax0)
+        p_s = None
+        for i in range(0, xq.shape[1], CH):
+            p_s, state = pipe_q.apply(xq[:, i:i + CH], state)
+        err = float(jnp.max(jnp.abs(p_s - p_one)))
+        row("serve_streams.quant_parity", None,
+            f"stream_vs_oneshot={err:.2e} bitwise={bool(err == 0.0)}")
 
 
 if __name__ == "__main__":

@@ -8,9 +8,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m benchmarks.serve_streams --smoke --stream-impl both
+# fixed numerics through BOTH stream impls: the server-parity and
+# streaming-parity rows are exact-equality gates (int Pallas == int XLA ==
+# one-shot), so int-kernel bit-rot fails the smoke, not just the tests
+python -m benchmarks.serve_streams --smoke --stream-impl both --numerics fixed
 python -m benchmarks.pipeline_e2e --smoke
+# the streaming-kernel shape sweep entry point (tiny grid; exercises the
+# autotune-table plumbing for the float AND int stream kernels)
+python -m benchmarks.kernel_sweep --smoke
 # the multiplierless gate: census the int32 hardware-twin jaxprs — the
-# one-shot program AND the per-chunk integer streaming step (what an FPGA
-# executes per sensor packet) — and FAIL if any multiply/divide leaked in
+# one-shot program, the per-chunk integer streaming step (what an FPGA
+# executes per sensor packet), AND the Pallas-lowered int streaming kernel
+# — and FAIL if any multiply/divide leaked in
 python -m benchmarks.hardware_cost --smoke
 echo "bench_smoke OK"

@@ -46,10 +46,11 @@ def make_pipeline(smoke: bool = False, seed: int = 0,
     ``stream_impl`` selects the session-step hot path: "xla" (default) or
     "pallas" (the stateful ``fir_mp_stream`` kernel; interpret mode on CPU,
     compiled on TPU). ``numerics="fixed"`` builds the bit-true int32
-    hardware twin — one-shot AND session streaming, with chunked decisions
-    bit-for-bit equal to one-shot inference (``fixed_amax`` calibrates the
-    static ADC full-scale; fixed requires stream_impl="xla" until the int
-    Pallas kernel lands)."""
+    hardware twin — one-shot AND session streaming, under either
+    stream_impl, with chunked decisions bit-for-bit equal to one-shot
+    inference (``fixed_amax`` calibrates the static ADC full-scale;
+    stream_impl="pallas" routes the identical integer step through
+    ``kernels.fir_mp_stream_q``)."""
     import jax
     import jax.numpy as jnp
 

@@ -250,7 +250,7 @@ def _require_float_numerics(cfg: "FilterBankConfig", fn: str) -> None:
     if cfg.numerics == "fixed":
         from repro.core.quant import unsupported_fixed
         raise unsupported_fixed(
-            fn, followup=None,
+            fn,
             hint="this is the float engine and ignores the fixed-point "
                  "program; go through FilterBank.accumulate or "
                  "InFilterPipeline.apply/predict (repro.core.fixed)")
@@ -307,7 +307,8 @@ class FilterBankConfig(NamedTuple):
     lp_taps: int = 6           # paper: LP window size 6
     mode: Literal["mp", "mac"] = "mp"
     gamma_f: float = 4.0       # MP parameter for the filtering operation
-    use_pallas: bool = False   # route MP FIR through the fused Pallas kernel
+    use_pallas: bool = False   # route MP FIR through the fused Pallas
+    # kernels (float, or the integer bank kernels under numerics="fixed")
     spacing: Literal["octave", "greenwood"] = "octave"
     quant_bits: int | None = None  # quantize taps + signal (Fig. 8 sweep)
     solver: Literal["newton", "bisect"] = "newton"  # non-exact MP scheme:
@@ -324,10 +325,10 @@ class FilterBankConfig(NamedTuple):
     # proxy); fixed = the bit-true int32 hardware twin (repro.core.fixed):
     # power-of-two-scale fixed point, add/sub/shift/compare only — 8-bit
     # signals/weights, 10-bit internal path per paper §V. Both one-shot AND
-    # session streaming (stream_impl="xla"; integer registers, chunked
-    # decisions bit-for-bit equal to one-shot from the first chunk —
-    # docs/numerics.md). stream_impl="pallas" has no int32 kernel yet and
-    # is rejected at kernel-selection time (ROADMAP follow-up).
+    # session streaming, under EITHER stream_impl (integer registers,
+    # chunked decisions bit-for-bit equal to one-shot from the first chunk
+    # — docs/numerics.md); stream_impl="pallas" runs the VMEM-resident
+    # integer kernel fir_mp_stream_q, bit-identical to the XLA step.
     fixed_amax: float = 1.0    # fixed mode: ADC full-scale calibration (a
     # STATIC power-of-two-snapped range; inputs beyond it saturate, exactly
     # like the hardware front end)
@@ -420,7 +421,8 @@ class FilterBank:
             from repro.core import fixed
             bank = self.fixed_bank()
             xq = fixed.quantize_signal(bank, x)
-            return bank.acc.dequantize(fixed.bank_accumulate_q(bank, xq))
+            return bank.acc.dequantize(fixed.bank_accumulate_q(
+                bank, xq, use_pallas=self.config.use_pallas))
         return multirate_accumulate(x, self._bp_by_octave, self._lp,
                                     self.config)
 

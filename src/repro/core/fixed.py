@@ -41,6 +41,9 @@ derived from the float pipeline plus a calibrated ADC full-scale
 through :func:`session_step_q` — every ``SessionState`` register carried as
 an integer in the fixed-point grid, with chunked decisions bit-for-bit
 equal to one-shot :func:`infer_q` (docs/numerics.md has the argument).
+With ``stream_impl="pallas"`` the identical step runs through the
+VMEM-resident integer kernel (``repro.kernels.fir_mp_stream_q``) —
+bit-for-bit the same registers and decisions.
 """
 
 from __future__ import annotations
@@ -650,28 +653,50 @@ def quantize_signal(prog, x, carrier: str = "int"):
     return signal.quantize(x, dtype=dtype)
 
 
-def bank_accumulate_q(bank: FixedBankProgram, xq):
+def bank_accumulate_q(bank: FixedBankProgram, xq, *,
+                      use_pallas: bool = False):
     """Quantized signal (B, N) -> 32-bit accumulators (B, P) at
     ``bank.acc``. The integer mirror of ``filterbank.multirate_accumulate``
-    (renormalization by 2**octave is folded into ``acc_shift``)."""
+    (renormalization by 2**octave is folded into ``acc_shift``).
+
+    ``use_pallas`` routes the MP band solves + HWR accumulation through the
+    fused integer Pallas kernels (``kernels.fir_mp_bank_q*`` — one
+    VMEM-resident signal block per octave), bit-for-bit equal to the XLA
+    ``fxp_*`` path; MAC mode always runs the XLA shift-add FIR."""
+    if use_pallas and bank.mode == "mp":
+        from repro.kernels import fir_mp_bank_q, fir_mp_bank_q_accumulate
     x_o = xq
     parts = []
     for o, st in enumerate(bank.octaves):
         if bank.mode == "mp":
             x_op = rescale(x_o, st.sig_shift)
-            band = fxp_fir_bank(x_op, st.bp_q, st.gamma_bp, st.iters_bp,
-                                st.band_spec)
+            if use_pallas:
+                parts.append(shift_left(fir_mp_bank_q_accumulate(
+                    x_op, st.bp_q, gamma_q=st.gamma_bp, iters=st.iters_bp,
+                    qmin=int(st.band_spec.qmin),
+                    qmax=int(st.band_spec.qmax)), st.acc_shift))
+            else:
+                band = fxp_fir_bank(x_op, st.bp_q, st.gamma_bp, st.iters_bp,
+                                    st.band_spec)
+                parts.append(shift_left(fxp_hwr_accumulate(band),
+                                        st.acc_shift))
         else:
             bands = [rescale(fxp_fir_shift_add(x_o, st.bp_rom[f]),
                              st.bp_prod_shift)
                      for f in range(st.bp_rom.shape[0])]
             band = _clamp(jnp.stack(bands, axis=-2), st.band_spec)
-        parts.append(shift_left(fxp_hwr_accumulate(band), st.acc_shift))
+            parts.append(shift_left(fxp_hwr_accumulate(band), st.acc_shift))
         if st.lp_q is not None:
             if bank.mode == "mp":
                 x_lp = rescale(x_o, st.lp_sig_shift)
-                y_lp = fxp_fir_bank(x_lp, st.lp_q, st.gamma_lp, st.iters_lp,
-                                    st.lp_spec)[..., 0, :]
+                if use_pallas:
+                    y_lp = fir_mp_bank_q(
+                        x_lp, st.lp_q, gamma_q=st.gamma_lp,
+                        iters=st.iters_lp, qmin=int(st.lp_spec.qmin),
+                        qmax=int(st.lp_spec.qmax))[..., 0, :]
+                else:
+                    y_lp = fxp_fir_bank(x_lp, st.lp_q, st.gamma_lp,
+                                        st.iters_lp, st.lp_spec)[..., 0, :]
             else:
                 y_lp = _clamp(rescale(fxp_fir_shift_add(x_o, st.lp_rom[0]),
                                       st.lp_prod_shift), st.lp_spec)
@@ -719,23 +744,25 @@ def classifier_q(clf: FixedClassifier, K_q):
     return _relu(z_pos - z) - _relu(z_neg - z)
 
 
-def infer_q(prog: FixedPointProgram, xq):
+def infer_q(prog: FixedPointProgram, xq, *, use_pallas: bool = False):
     """The pure-integer inference program: quantized signal codes in,
     (p_q, phi_q, s_q) codes out. This is the function
     ``benchmarks/hardware_cost.py`` censuses — its jaxpr must contain no
-    multiply and no divide."""
-    s_q = bank_accumulate_q(prog.bank, xq)
+    multiply and no divide (with or without ``use_pallas``, which swaps the
+    MP bank solves onto the fused integer Pallas kernels bit-for-bit)."""
+    s_q = bank_accumulate_q(prog.bank, xq, use_pallas=use_pallas)
     phi_q = standardize_q(prog, s_q)
     p_q = classifier_q(prog.clf, phi_q)
     return p_q, phi_q, s_q
 
 
-def predict(prog: FixedPointProgram, x, carrier: str = "int"):
+def predict(prog: FixedPointProgram, x, carrier: str = "int", *,
+            use_pallas: bool = False):
     """Float audio (B, N) -> dequantized (p, phi): the deployment-preview
     surface. ``p`` carries scale ``2**clf.spec.exp`` (the [-1, 1] signed
     confidence on the operand grid)."""
     xq = quantize_signal(prog, x, carrier=carrier)
-    p_q, phi_q, _ = infer_q(prog, xq)
+    p_q, phi_q, _ = infer_q(prog, xq, use_pallas=use_pallas)
     return prog.out_spec.dequantize(p_q), prog.phi.dequantize(phi_q)
 
 

@@ -51,10 +51,11 @@ carries every register as an integer in the fixed-point grid (8-bit
 octave-signal delay lines, 32-bit accumulators, running max |code|), and —
 because the ADC grid is static and integer addition is associative —
 chunked streaming decisions are bit-for-bit equal to one-shot ``apply(x)``
-from the FIRST chunk, with no peak-seen caveat (docs/numerics.md). Only
-``stream_impl="xla"`` streams fixed numerics; the int Pallas streaming
-kernel is a tracked ROADMAP follow-up and is rejected at kernel-selection
-time. Note the program lowering is host-side, so ``jax.jit`` a closure
+from the FIRST chunk, with no peak-seen caveat (docs/numerics.md). Both
+stream impls stream fixed numerics: ``stream_impl="pallas"`` routes the
+identical integer step through the VMEM-resident kernel
+(``kernels.fir_mp_stream_q``) with bit-for-bit the same registers and
+decisions. Note the program lowering is host-side, so ``jax.jit`` a closure
 over a *concrete* pipeline (``jit(lambda x, st: pipe.apply(x, st))``) or
 the compiled program (``prog = pipe.fixed_program(); jit(lambda x:
 fixed.predict(prog, x))``) rather than ``InFilterPipeline.apply`` with the
@@ -216,7 +217,9 @@ class InFilterPipeline:
         if state is None:
             if self.config.numerics == "fixed":
                 from repro.core import fixed
-                p, phi = fixed.predict(self.fixed_program(), x)
+                p, phi = fixed.predict(
+                    self.fixed_program(), x,
+                    use_pallas=self.config.use_pallas)
                 return (p, phi) if return_features else p
             phi = self.features(x)
             p = km.forward(self.clf, phi, exact=False)
@@ -267,7 +270,9 @@ class InFilterPipeline:
                     "calibration")
             from repro.core import fixed
             prog = self.fixed_program()
-            _, phi_q, _ = fixed.infer_q(prog, fixed.quantize_signal(prog, x))
+            _, phi_q, _ = fixed.infer_q(
+                prog, fixed.quantize_signal(prog, x),
+                use_pallas=self.config.use_pallas)
             return prog.phi.dequantize(phi_q)
         s = fbm.multirate_accumulate(x, self.bp_taps, self.lp_taps,
                                      self.config, amax=amax)
@@ -396,23 +401,15 @@ class InFilterPipeline:
     def _session_step_fixed(self, state: SessionState, chunk: jax.Array,
                             valid: jax.Array):
         """The int32 session step: quantize the chunk onto the static ADC
-        grid, zero invalid positions, and run the integer cascade
-        (``fixed.session_step_q``) — every register stays on the
-        fixed-point grid and chunked decisions are bit-for-bit the one-shot
-        program's. The kernel selection happens HERE: only the XLA cascade
-        has an integer variant so far."""
+        grid, zero invalid positions, and run the integer cascade — every
+        register stays on the fixed-point grid and chunked decisions are
+        bit-for-bit the one-shot program's. The kernel selection happens
+        HERE: "xla" runs ``fixed.session_step_q``; "pallas" runs the
+        VMEM-resident integer kernel (``kernels.fir_mp_stream_q``) —
+        bit-identical registers and decisions either way."""
         from repro.core import fixed
-        from repro.core.quant import unsupported_fixed
         c = self.config
-        if c.stream_impl == "pallas":
-            # kernel-selection time, not construction time: an int32
-            # fir_mp_stream variant is the tracked follow-up
-            raise unsupported_fixed(
-                "stream_impl='pallas' session streaming",
-                hint="the stateful fir_mp_stream kernel has no int32 "
-                     "variant; stream fixed numerics with "
-                     "stream_impl='xla'")
-        if c.stream_impl != "xla":
+        if c.stream_impl not in ("xla", "pallas"):
             raise ValueError(f"unknown stream_impl {c.stream_impl!r}: "
                              "expected 'xla' or 'pallas'")
         prog = self.fixed_program()
@@ -424,9 +421,38 @@ class InFilterPipeline:
             xq = fixed.quantize_signal(prog, chunk)
             pos0 = jax.lax.broadcasted_iota(jnp.int32, (S, L), 1)
             xq = jnp.where(pos0 < n[:, None], xq, 0)
-        state, p_q, phi_q = fixed.session_step_q(prog, state, xq, n)
+        if c.stream_impl == "pallas":
+            state, p_q, phi_q = self._cascade_pallas_fixed(prog, state,
+                                                           xq, n)
+        else:
+            state, p_q, phi_q = fixed.session_step_q(prog, state, xq, n)
         return state, prog.out_spec.dequantize(p_q), \
             prog.phi.dequantize(phi_q)
+
+    def _cascade_pallas_fixed(self, prog, state: SessionState,
+                              xq: jax.Array, n: jax.Array):
+        """Integer octave cascade through the stateful int Pallas kernel
+        (``kernels.fir_mp_stream_q``): the same registers-in-VMEM state
+        machine as the float ``_cascade_pallas``, on the fixed-point
+        datapath — bit-for-bit equal to ``fixed.session_step_q``."""
+        from repro.core import fixed
+        c = self.config
+        if c.mode != "mp":
+            raise ValueError(
+                f"stream_impl='pallas' runs the MP streaming kernel; it has "
+                f"no {c.mode!r}-mode variant (use stream_impl='xla')")
+        if xq.shape[1] == 0:
+            # a zero-length chunk is a pure readout: no register moves
+            p_q, phi_q = fixed.readout_q(prog, state.acc)
+            return state, p_q, phi_q
+        from repro.kernels import fir_mp_stream_q
+        delays, consumed, acc, amax = fir_mp_stream_q(
+            prog, xq, n, state.delays, state.consumed, state.acc,
+            state.amax)
+        state = state._replace(delays=delays, consumed=consumed, acc=acc,
+                               amax=amax, count=state.count + n)
+        p_q, phi_q = fixed.readout_q(prog, acc)
+        return state, p_q, phi_q
 
     def _cascade_pallas(self, state: SessionState, chunk: jax.Array,
                         n: jax.Array) -> SessionState:

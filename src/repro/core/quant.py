@@ -39,16 +39,16 @@ __all__ = [
 
 
 def unsupported_fixed(feature: str, *, hint: str | None = None,
-                      followup: str | None = "Fixed-point Pallas kernels"
-                      ) -> Exception:
+                      followup: str | None = None) -> Exception:
     """The one way this repo says "numerics='fixed' has no path here".
 
     Every surface that rejects the fixed-point mode builds its exception
-    here, so rejections stay consistent and each one names where the int32
-    support is tracked. ``hint`` redirects to the surface that DOES support
-    fixed numerics; ``followup`` names the ROADMAP.md open item that will
-    remove the rejection (``None`` for permanent redirects — the caller is
-    simply the wrong entry point, not a missing feature).
+    here, so rejections stay consistent. ``hint`` redirects to the surface
+    that DOES support fixed numerics; ``followup`` names the ROADMAP.md
+    open item that will remove the rejection, and a caller that claims one
+    must name it explicitly — the default (``None``) is a permanent
+    redirect: the caller is simply the wrong entry point, not a missing
+    feature.
 
     Returns the exception (``NotImplementedError`` for follow-ups,
     ``ValueError`` for wrong-entry-point redirects) — callers ``raise`` it.

@@ -19,6 +19,14 @@ Kernels:
                  accumulators and running amax in VMEM scratch across grid
                  steps (the step()-shaped streaming hot path; bit-identical
                  to the XLA session step in interpret mode)
+  fir_mp_bank_q / fir_mp_stream_q - the INTEGER twins of the two fused
+                 kernels: the bit-true fixed-point datapath (integer MP
+                 bisection, shift/add/compare only) on the same grids,
+                 bit-for-bit equal to the fxp_* XLA kernels and censused
+                 multiplier-free by benchmarks/hardware_cost.py
+
+Default block shapes come from the committed autotune table
+(stream_shapes.json, refreshed by benchmarks/kernel_sweep.py).
 """
 
 from repro.kernels.ops import (  # noqa: F401
@@ -28,5 +36,8 @@ from repro.kernels.ops import (  # noqa: F401
     fir_mp_accumulate,
     fir_mp_bank,
     fir_mp_bank_accumulate,
+    fir_mp_bank_q,
+    fir_mp_bank_q_accumulate,
     fir_mp_stream,
+    fir_mp_stream_q,
 )

@@ -1,4 +1,4 @@
-"""Pallas kernel: in-filter MP FIR (paper eq. 8 + 9, Fig. 5).
+"""Pallas kernels: in-filter MP FIR (paper eq. 8 + 9, Fig. 5).
 
 y[b, n] = mpabs(h + x[b, n-M+1..n]) - mpabs(h - x[b, n-M+1..n])
 
@@ -14,8 +14,21 @@ Optionally fuses the paper's entire in-filter readout
 so one HBM read of the signal produces the scalar kernel feature directly —
 the TPU analogue of the FPGA's per-band accumulator register.
 
-Tiling: grid over batch tiles; block holds (block_b, N) rows in VMEM
-(1 s @ 16 kHz f32 = 64 KiB/row; block_b=8 -> 0.5 MiB).
+Four kernel families live here, two grid layouts:
+
+* one-shot (``fir_mp_pallas`` / ``fir_mp_bank_pallas``): grid over
+  (batch_tile,) or (batch_tile, filter) — the whole signal row is resident
+  per step; block holds (block_b, N) rows in VMEM (1 s @ 16 kHz f32 =
+  64 KiB/row; block_b=8 -> 0.5 MiB).
+* streaming (``fir_mp_stream_octave``): grid (slot_tile, chunk_block,
+  filter) — per-slot FIR delay lines, partial accumulators and running
+  amax carried in VMEM scratch across the chunk_block axis.
+
+Each has an integer twin (``fir_mp_bank_q_pallas`` /
+``fir_mp_stream_octave_q``) executing ``repro.core.fixed``'s bit-true
+fixed-point datapath — integer bisection, shift/add/compare only — on the
+same grids, bit-for-bit equal to the ``fxp_*`` XLA kernels on either
+carrier (int32, or f32-carried integer codes).
 """
 
 from __future__ import annotations
@@ -27,6 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import fixed as fx
 from repro.core import mp as mp_mod
 from repro.core.filterbank import accumulate_block_len
 
@@ -34,7 +48,7 @@ DEFAULT_ITERS = 26
 
 
 def _fir_mp_body(x, h_ref, gamma, *, iters: int, M: int):
-    """x: (bb, N) already left-padded by M-1 zeros upstream is NOT assumed;
+    """x: (bb, N) raw signal rows — NO upstream left-padding is assumed;
     windows clamp at the left edge by zero-shifting (streaming from zeroed
     registers, as the FPGA does)."""
     bb, N = x.shape
@@ -413,3 +427,362 @@ def fir_mp_pallas(
     if accumulate:
         return out[:B, 0]
     return out[:B, :N]
+
+
+# ---------------------------------------------------------------------------
+# integer (fixed-point) kernels: the bit-true hardware twin, VMEM-resident
+# ---------------------------------------------------------------------------
+#
+# Both kernels below run repro.core.fixed's datapath INSIDE the pallas_call:
+# integer bisection (arithmetic-shift midpoints, exact integer constraint
+# sums), saturating clamps onto static spec bounds, and integer HWR
+# accumulation. They are carrier-generic like every fxp_* kernel: on int32
+# they are the hardware path (benchmarks/hardware_cost.py censuses the
+# Pallas-lowered jaxpr to zero multiplies/divides); on f32-carried integer
+# codes they are the fake-quant twin, bit-identical below 2**24.
+#
+# Parity with the XLA fxp_* kernels is by construction: every output value
+# is one LSB-deterministic bisection over the SAME operand multiset
+# {h_k +- x(n-k)} (integer max and adds are order-independent), so the
+# Pallas and XLA paths agree bit-for-bit — no blocked-reduction ordering
+# machinery needed (the float kernels' tree_sum/accumulate_block_len dance
+# exists only because float addition is not associative).
+
+
+def _fxp_mpabs_ops(ops, gamma_q, iters: int):
+    """fixed.fxp_mpabs over an unrolled operand list (each (bb, N)): the
+    per-position integer bisection, shift/add/compare only."""
+    g = fx._c(gamma_q, ops[0])
+    hi = jnp.abs(ops[0])
+    for t in ops[1:]:
+        hi = jnp.maximum(hi, jnp.abs(t))
+    lo = hi - g
+
+    def body(_, state):
+        lo, hi = state
+        mid = fx.shift_right(lo + hi, 1)
+        h = jnp.zeros_like(mid)
+        for t in ops:
+            h = h + fx._relu(t - mid) + fx._relu(-t - mid)
+        too_low = h > g
+        lo = jnp.where(too_low, mid, lo)
+        hi = jnp.where(too_low, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return hi
+
+
+def _fxp_fir_mp_body(x, h_ref, *, gamma_q, iters, qmin, qmax, M):
+    """Integer twin of ``_fir_mp_body``: x (bb, N) signal codes (already on
+    the stage's internal grid), h_ref (1, M) tap codes. Pairs x-shift k with
+    tap h(k), forming the same operand multiset as ``fixed.fxp_fir_bank``'s
+    reversed-tap windows; operand sums saturate onto [qmin, qmax] (the
+    10-bit internal path) before the solve, exactly like ``fxp_mp_dot``."""
+    bb, N = x.shape
+
+    def shifted(k):
+        if k == 0:
+            return x
+        return jnp.concatenate(
+            [jnp.zeros((bb, k), x.dtype), x[:, : N - k]], axis=1)
+
+    us, vs = [], []
+    for k in range(M):
+        hk = h_ref[0, k]
+        xk = shifted(k)
+        us.append(jnp.clip(hk + xk, qmin, qmax))
+        vs.append(jnp.clip(hk - xk, qmin, qmax))
+    return (_fxp_mpabs_ops(us, gamma_q, iters)
+            - _fxp_mpabs_ops(vs, gamma_q, iters))
+
+
+def _fir_mp_bank_q_kernel(x_ref, h_ref, out_ref, *, gamma_q, iters, qmin,
+                          qmax, M, accumulate, valid_n):
+    y = _fxp_fir_mp_body(x_ref[...], h_ref, gamma_q=gamma_q, iters=iters,
+                         qmin=qmin, qmax=qmax, M=M)
+    if accumulate:
+        # integer HWR + accumulate: mask the padded tail (positions >=
+        # valid_n see partial windows of real data), then a plain sum —
+        # integer adds are associative, any order reproduces the XLA bits
+        n_idx = jax.lax.broadcasted_iota(jnp.int32, y.shape, 1)
+        y = jnp.where(n_idx < valid_n, fx._relu(y), 0)
+        out_ref[...] = jnp.sum(y, axis=-1, keepdims=True)
+    else:
+        out_ref[...] = y[None]
+
+
+def fir_mp_bank_q_pallas(
+    xq: jax.Array,
+    H_q: jax.Array,
+    *,
+    gamma_q: int,
+    iters: int,
+    qmin: int,
+    qmax: int,
+    accumulate: bool = False,
+    block_b: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """One-shot integer bank kernel: xq (B, N) signal codes already on the
+    stage's internal grid, H_q (F, M) tap codes -> (F, B, N) band codes, or
+    (B, F) integer HWR sums (at the stage grid — the caller applies
+    ``acc_shift``).
+
+    Same grid as the float ``fir_mp_bank_pallas``: (batch_tile, filter)
+    with filter INNERMOST, so the (block_b, N) signal block stays
+    VMEM-resident across the whole octave's filter set and only the (1, M)
+    tap row re-fetches per filter. ``gamma_q``/``iters``/``qmin``/``qmax``
+    are STATIC program constants (ROM contents), not kernel operands.
+    Output positions match ``fixed.fxp_fir_bank(pad=True)`` bit-for-bit.
+    """
+    B, N = xq.shape
+    F, M = H_q.shape
+    b_pad = (-B) % block_b
+    n_pad = (-N) % 128
+    xp = jnp.pad(xq, ((0, b_pad), (0, n_pad)))
+    Bp, Np = xp.shape
+    H_q = H_q.astype(xq.dtype)
+
+    if accumulate:
+        out_spec = pl.BlockSpec((block_b, 1), lambda i, j: (i, j))
+        out_shape = jax.ShapeDtypeStruct((Bp, F), xq.dtype)
+    else:
+        out_spec = pl.BlockSpec((1, block_b, Np), lambda i, j: (j, i, 0))
+        out_shape = jax.ShapeDtypeStruct((F, Bp, Np), xq.dtype)
+
+    out = pl.pallas_call(
+        functools.partial(_fir_mp_bank_q_kernel, gamma_q=int(gamma_q),
+                          iters=int(iters), qmin=int(qmin), qmax=int(qmax),
+                          M=M, accumulate=accumulate, valid_n=N),
+        grid=(Bp // block_b, F),
+        in_specs=[
+            pl.BlockSpec((block_b, Np), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, M), lambda i, j: (j, 0)),
+        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(xp, H_q)
+
+    if accumulate:
+        return out[:B, :]
+    return out[:, :B, :N]
+
+
+def _fir_mp_stream_q_kernel(x_ref, n_ref, start_ref, delay_ref, acc_ref,
+                            amax_ref, h_ref, lp_ref, *refs,
+                            stage, next_qmin, next_qmax, emit_next,
+                            update_amax, T1, M, M_lp, LB):
+    """One grid step of the INTEGER streaming octave kernel.
+
+    Same grid and VMEM-scratch state machine as ``_fir_mp_stream_kernel``
+    — (slot_block, chunk_block, filter), filter innermost, delay line /
+    per-band partial accumulators / running amax carried in scratch across
+    the chunk_block axis — but every op is the fixed-point datapath:
+
+    * window codes rescale onto the band grid by ``stage.sig_shift``
+      (a static shift), operand sums clamp onto the 10-bit internal specs,
+      and each position solves by integer bisection
+      (``fixed.fxp_mp_dot``) — LSB-deterministic, so no float-style
+      reduction-order bookkeeping is needed anywhere;
+    * the flush applies ``stage.acc_shift`` as a left shift (the int mirror
+      of the float kernel's ``* 2**octave`` renorm — shifts distribute over
+      the partial sums, so flush-time shifting equals the XLA session
+      step's per-chunk shift bit-for-bit);
+    * the decimator tail emits NEXT-OCTAVE register codes directly:
+      ``clamp(rescale(kept, lp_out_shift))`` onto [next_qmin, next_qmax]
+      happens in-kernel, so y_next needs no post-processing.
+
+    All gammas/iters/shifts/clamp bounds come from the compiled
+    ``fixed.OctaveStage`` — static ROM constants, never kernel operands.
+    """
+    if emit_next:
+        out_acc_ref, out_delay_ref, out_amax_ref, out_next_ref = refs[:4]
+        delay_s, part_s, amax_s = refs[4:]
+    else:
+        out_acc_ref, out_delay_ref, out_amax_ref = refs[:3]
+        delay_s, part_s, amax_s = refs[3:]
+
+    b = pl.program_id(1)
+    f = pl.program_id(2)
+    NB = pl.num_programs(1)
+    F = pl.num_programs(2)
+
+    @pl.when((b == 0) & (f == 0))
+    def _init():
+        delay_s[...] = delay_ref[...]
+        part_s[...] = jnp.zeros_like(part_s)
+        amax_s[...] = amax_ref[...]
+
+    blk = x_ref[...]                              # (bs, LB) register codes
+    nv = n_ref[...][:, 0]                         # (bs,) valid counts
+
+    if update_amax:
+        # running max |code| telemetry (octave 0): invalid tails are zero
+        # codes and never raise the max — integer max is associative, so
+        # blockwise max == whole-chunk max
+        @pl.when(f == 0)
+        def _amax():
+            amax_s[...] = jnp.maximum(
+                amax_s[...],
+                jnp.max(jnp.abs(blk), axis=-1, keepdims=True))
+
+    # --- band-pass filter f over this block (integer MP solve) ------------
+    hist = delay_s[:, T1 - (M - 1):] if M > 1 else delay_s[:, T1:]
+    bufv = jnp.concatenate([hist, blk], axis=1)   # (bs, M-1+LB)
+    idx = (jax.lax.broadcasted_iota(jnp.int32, (LB, M), 0)
+           + jax.lax.broadcasted_iota(jnp.int32, (LB, M), 1))
+    win = fx.rescale(bufv[:, idx], stage.sig_shift)    # onto the band grid
+    h = h_ref[...][0, ::-1]                       # conv tap order, as in XLA
+    y = fx.fxp_mp_dot(win, h, stage.gamma_bp, stage.iters_bp,
+                      stage.band_spec)
+    pos = b * LB + jax.lax.broadcasted_iota(jnp.int32, (1, LB), 1)
+    hwr = jnp.where(pos < nv[:, None], fx._relu(y), 0)
+    part_s[pl.ds(f, 1), :] = (part_s[pl.ds(f, 1), :]
+                              + jnp.sum(hwr, axis=-1)[None, :])
+
+    @pl.when(f == F - 1)
+    def _block_tail():
+        # LP + ÷2 decimation: solve ONLY the kept positions (LB is even, so
+        # each slot's keep-parity is constant across blocks; kept j of
+        # block b lands at out position b*LB/2 + j), then requantize onto
+        # the next octave's register grid in-kernel.
+        if emit_next:
+            histl = (delay_s[:, T1 - (M_lp - 1):] if M_lp > 1
+                     else delay_s[:, T1:])
+            bufl = jnp.concatenate([histl, blk], axis=1)
+            widx = (2 * jax.lax.broadcasted_iota(jnp.int32, (LB // 2, M_lp), 0)
+                    + jax.lax.broadcasted_iota(jnp.int32, (LB // 2, M_lp), 1))
+            stv = start_ref[...][:, 0]            # per-slot phase in {0, 1}
+            winl = fx.rescale(
+                jax.vmap(lambda r, s: r[s + widx])(bufl, stv),
+                stage.lp_sig_shift)
+            lp = lp_ref[...][0, ::-1]
+            kept = fx.fxp_mp_dot(winl, lp, stage.gamma_lp, stage.iters_lp,
+                                 stage.lp_spec)
+            out_next_ref[...] = jnp.clip(
+                fx.rescale(kept, stage.lp_out_shift), next_qmin, next_qmax)
+        # slide the delay line by this block's VALID sample count; a
+        # zero-valid (masked/inert) slot slides by 0 and keeps its
+        # registers bit-identical.
+        v = jnp.clip(nv - b * LB, 0, LB)
+        bufd = jnp.concatenate([delay_s[...], blk], axis=1)
+        delay_s[...] = jax.vmap(
+            lambda r, s: jax.lax.dynamic_slice(r, (s,), (T1,)))(bufd, v)
+
+    @pl.when((b == NB - 1) & (f == F - 1))
+    def _flush():
+        out_acc_ref[...] = acc_ref[...] + fx.shift_left(part_s[...].T,
+                                                        stage.acc_shift)
+        out_delay_ref[...] = delay_s[...]
+        out_amax_ref[...] = amax_s[...]
+
+
+def fir_mp_stream_octave_q(
+    x: jax.Array,
+    n: jax.Array,
+    start: jax.Array,
+    delay: jax.Array,
+    acc: jax.Array,
+    amax: jax.Array,
+    *,
+    stage,
+    next_spec=None,
+    emit_next: bool = True,
+    update_amax: bool = False,
+    block_s: int = 8,
+    interpret: bool = False,
+):
+    """One octave of the INTEGER streaming step, as a single pallas_call.
+
+    x (S, L): this octave's chunk of register codes (invalid tails already
+    zeroed upstream); n (S,): per-slot valid counts; start (S,): per-slot
+    decimator phase (``consumed & 1``); delay (S, T1): delay-line register
+    codes; acc (S, F): 32-bit accumulator columns; amax (S,): running max
+    |code| (updated in-kernel only when ``update_amax`` — octave 0).
+    ``stage`` is the compiled :class:`repro.core.fixed.OctaveStage` (taps,
+    gammas, iteration counts, shifts and clamp bounds — all static);
+    ``next_spec`` the NEXT octave's register spec (required with
+    ``emit_next``).
+
+    Returns ``(acc', delay', amax', y_next | None)`` where ``y_next`` is
+    (S, ceil(L/LB) * LB//2) next-octave register codes — slice to
+    ``(L+1)//2``. Carrier-generic: int32 or f32-carried codes.
+    """
+    S, L = x.shape
+    F, M = stage.bp_q.shape
+    T1 = delay.shape[1]
+    LB = accumulate_block_len(L)
+    NB = -(-L // LB)
+    bs = min(block_s, S)
+    s_pad = (-S) % bs
+    Sp = S + s_pad
+    dt = x.dtype
+
+    if emit_next:
+        lp2 = stage.lp_q.astype(dt)              # (1, M_lp)
+        next_qmin, next_qmax = int(next_spec.qmin), int(next_spec.qmax)
+    else:
+        lp2 = jnp.zeros((1, 1), dt)
+        next_qmin = next_qmax = 0
+    (_, M_lp) = lp2.shape
+
+    xp = jnp.pad(x, ((0, s_pad), (0, NB * LB - L)))
+    pad1 = lambda a: jnp.pad(a, ((0, s_pad),))
+    n2 = pad1(n.astype(jnp.int32))[:, None]
+    start2 = pad1(start.astype(jnp.int32))[:, None]
+    delay_p = jnp.pad(delay, ((0, s_pad), (0, 0)))
+    acc_p = jnp.pad(acc, ((0, s_pad), (0, 0)))
+    amax2 = pad1(amax.astype(dt))[:, None]
+    H = stage.bp_q.astype(dt)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((Sp, F), dt),             # acc'
+        jax.ShapeDtypeStruct((Sp, T1), dt),            # delay'
+        jax.ShapeDtypeStruct((Sp, 1), dt),             # amax'
+    ]
+    out_specs = [
+        pl.BlockSpec((bs, F), lambda i, b, f: (i, 0)),
+        pl.BlockSpec((bs, T1), lambda i, b, f: (i, 0)),
+        pl.BlockSpec((bs, 1), lambda i, b, f: (i, 0)),
+    ]
+    if emit_next:
+        out_shape.append(jax.ShapeDtypeStruct((Sp, NB * (LB // 2)), dt))
+        out_specs.append(pl.BlockSpec((bs, LB // 2), lambda i, b, f: (i, b)))
+
+    outs = pl.pallas_call(
+        functools.partial(_fir_mp_stream_q_kernel, stage=stage,
+                          next_qmin=next_qmin, next_qmax=next_qmax,
+                          emit_next=emit_next, update_amax=update_amax,
+                          T1=T1, M=M, M_lp=M_lp, LB=LB),
+        grid=(Sp // bs, NB, F),
+        in_specs=[
+            pl.BlockSpec((bs, LB), lambda i, b, f: (i, b)),   # signal codes
+            pl.BlockSpec((bs, 1), lambda i, b, f: (i, 0)),    # valid counts
+            pl.BlockSpec((bs, 1), lambda i, b, f: (i, 0)),    # decim phase
+            pl.BlockSpec((bs, T1), lambda i, b, f: (i, 0)),   # delay line
+            pl.BlockSpec((bs, F), lambda i, b, f: (i, 0)),    # accumulators
+            pl.BlockSpec((bs, 1), lambda i, b, f: (i, 0)),    # running amax
+            pl.BlockSpec((1, M), lambda i, b, f: (f, 0)),     # BP tap row
+            pl.BlockSpec((1, M_lp), lambda i, b, f: (0, 0)),  # LP taps
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((bs, T1), dt),    # delay line, carried across blocks
+            pltpu.VMEM((F, bs), dt),     # per-band partial accumulators
+            pltpu.VMEM((bs, 1), dt),     # running amax
+        ],
+        # scratch is carried across grid steps -> every axis must iterate
+        # sequentially on TPU (no parallel partitioning of the grid)
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(xp, n2, start2, delay_p, acc_p, amax2, H, lp2)
+
+    acc_o = outs[0][:S]
+    delay_o = outs[1][:S]
+    amax_o = outs[2][:S, 0]
+    y_next = outs[3][:S] if emit_next else None
+    return acc_o, delay_o, amax_o, y_next

@@ -3,11 +3,20 @@
 Responsibilities:
   * interpret-mode fallback on CPU (this container) vs compiled on TPU;
   * shape canonicalization (leading batch dims flattened);
+  * default block shapes from the committed autotune table
+    (``stream_shapes.best_block_s``, refreshed by
+    ``benchmarks/kernel_sweep.py --update-table``);
   * a custom VJP for `mp_linear` so the multiplierless layer is trainable
     end-to-end: forward runs the fused Pallas kernel, backward applies the
     water-filling subgradient (support-set masks recomputed from z — the
     same trick as softmax-recompute in flash attention: cheaper to rebuild
     the mask than to store it).
+
+The integer wrappers (``fir_mp_bank_q*``, ``fir_mp_stream_q``) drive the
+fixed-point twins. ``fir_mp_stream_q`` is NOT itself jitted: it takes the
+compiled ``fixed.FixedPointProgram`` (host-side ROMs and shift tables), so
+— exactly like ``fixed.session_step_q`` — callers jit a closure over a
+concrete program.
 """
 
 from __future__ import annotations
@@ -20,6 +29,7 @@ import jax.numpy as jnp
 from repro.kernels import fir_mp as _fir
 from repro.kernels import mp_linear as _lin
 from repro.kernels import mp_waterfill as _wf
+from repro.kernels.stream_shapes import best_block_s
 
 
 def _interpret() -> bool:
@@ -167,7 +177,7 @@ def fir_mp_stream(chunk: jax.Array, n: jax.Array, delays: tuple,
                   consumed: tuple, acc: jax.Array, amax: jax.Array,
                   bp_taps: tuple, lp_taps: tuple, gamma, *,
                   solver: str = "newton", update_amax: bool = True,
-                  block_s: int = 8):
+                  block_s: int | None = None):
     """Stateful multirate session step through the Pallas streaming kernel.
 
     chunk (S, L): one slot-batched chunk, invalid tails already zeroed (and
@@ -189,10 +199,15 @@ def fir_mp_stream(chunk: jax.Array, n: jax.Array, delays: tuple,
 
     Returns ``(delays', consumed', acc', amax')``. Masked slots (n == 0)
     are inert: their registers come back bit-identical (delay slides by 0,
-    accumulator contributions are exactly +0.0).
+    accumulator contributions are exactly +0.0). ``block_s=None`` (default)
+    consults the committed autotune table (``stream_shapes``) for the
+    best-known slot tile at this capacity — shape choice never changes
+    values, only VMEM tiling.
     """
     num_octaves = len(delays)
     S, L = chunk.shape
+    if block_s is None:
+        block_s = best_block_s("fir_mp_stream", S)
     F = bp_taps[0].shape[0]
     x_o = chunk
     n_o = jnp.asarray(n, jnp.int32)
@@ -220,6 +235,109 @@ def fir_mp_stream(chunk: jax.Array, n: jax.Array, delays: tuple,
             l_next = (l_o + 1) // 2
             x_o = y_next[:, :l_next]
             n_o = jnp.maximum(0, (n_o - start_o + 1) // 2)
+            l_o = l_next
+    return (tuple(new_delays), tuple(new_consumed),
+            jnp.concatenate(acc_cols, axis=1), amax_out)
+
+
+# ---------------------------------------------------------------------------
+# integer (fixed-point) wrappers: the VMEM-resident hardware twin
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gamma_q", "iters", "qmin", "qmax"))
+def fir_mp_bank_q(xq: jax.Array, H_q: jax.Array, *, gamma_q: int,
+                  iters: int, qmin: int, qmax: int):
+    """Integer bank FIR through the fused Pallas kernel: xq (..., N) signal
+    codes already on the stage's internal grid, H_q (F, M) tap codes ->
+    (..., F, N) band codes, bit-for-bit ``fixed.fxp_fir_bank(pad=True)``.
+    ``gamma_q``/``iters``/``qmin``/``qmax`` are static program constants."""
+    lead = xq.shape[:-1]
+    x2 = xq.reshape(-1, xq.shape[-1])
+    y = _fir.fir_mp_bank_q_pallas(x2, H_q, gamma_q=gamma_q, iters=iters,
+                                  qmin=qmin, qmax=qmax,
+                                  interpret=_interpret())      # (F, B, N)
+    y = jnp.moveaxis(y, 0, 1)                                  # (B, F, N)
+    return y.reshape(*lead, H_q.shape[0], xq.shape[-1])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gamma_q", "iters", "qmin", "qmax"))
+def fir_mp_bank_q_accumulate(xq: jax.Array, H_q: jax.Array, *, gamma_q: int,
+                             iters: int, qmin: int, qmax: int):
+    """Fused integer bank FIR + HWR + accumulate: xq (..., N) -> (..., F)
+    integer sums at the stage grid (the caller applies ``acc_shift``).
+    One HBM read of the signal codes serves the whole octave's filter set
+    AND the paper's per-band accumulator readout."""
+    lead = xq.shape[:-1]
+    x2 = xq.reshape(-1, xq.shape[-1])
+    s = _fir.fir_mp_bank_q_pallas(x2, H_q, gamma_q=gamma_q, iters=iters,
+                                  qmin=qmin, qmax=qmax, accumulate=True,
+                                  interpret=_interpret())      # (B, F)
+    return s.reshape(*lead, H_q.shape[0])
+
+
+def fir_mp_stream_q(prog, chunk_q: jax.Array, n: jax.Array, delays: tuple,
+                    consumed: tuple, acc: jax.Array, amax: jax.Array, *,
+                    block_s: int | None = None):
+    """Stateful INTEGER multirate session step through the Pallas kernels:
+    the VMEM-resident twin of ``fixed.session_step_q``'s octave cascade.
+
+    ``prog`` is the compiled ``fixed.FixedPointProgram`` (static ROMs/shift
+    tables — which is why this wrapper is not itself jitted: jit a closure
+    over a concrete program, exactly like ``session_step_q``). ``chunk_q``
+    (S, L) is ADC codes with invalid tails already zeroed; ``n`` (S,)
+    effective valid counts; ``delays``/``consumed``/``acc``/``amax`` the
+    integer session registers. Requires mode "mp" and L >= 1 (the caller
+    handles the L == 0 pure-readout step).
+
+    One pallas_call per octave, same state machine as the float
+    ``fir_mp_stream``; every in-kernel op is shift/add/compare, and the
+    result registers are bit-for-bit ``session_step_q``'s (and therefore
+    bit-for-bit one-shot ``infer_q`` under any chunking — the fixed-grid
+    exactness argument in docs/numerics.md). Returns
+    ``(delays', consumed', acc', amax')``.
+    """
+    bank = prog.bank
+    if bank.mode != "mp":
+        raise ValueError(
+            f"fir_mp_stream_q runs the MP streaming kernel; it has no "
+            f"{bank.mode!r}-mode variant (use fixed.session_step_q)")
+    S, L = chunk_q.shape
+    if block_s is None:
+        block_s = best_block_s("fir_mp_stream_q", S)
+    x_o = chunk_q
+    n_o = jnp.asarray(n, jnp.int32)
+    l_o = L
+    new_delays, new_consumed, acc_cols = [], [], []
+    amax_out = amax
+    interpret = _interpret()
+    col = 0
+    for o, st in enumerate(bank.octaves):
+        F = st.bp_q.shape[0]
+        emit = st.lp_q is not None
+        # parity phase by bit-AND, not remainder: the census stays
+        # divider-free (mirrors session_step_q)
+        start_o = jnp.bitwise_and(consumed[o], 1).astype(jnp.int32)
+        acc_o = jax.lax.slice_in_dim(acc, col, col + F, axis=1)
+        amax_in = amax if o == 0 else jnp.zeros((S,), chunk_q.dtype)
+        next_spec = bank.octaves[o + 1].in_spec if emit else None
+        acc_new, delay_new, amax_new, y_next = _fir.fir_mp_stream_octave_q(
+            x_o, n_o, start_o, delays[o], acc_o, amax_in, stage=st,
+            next_spec=next_spec, emit_next=emit, update_amax=(o == 0),
+            block_s=block_s, interpret=interpret)
+        if o == 0:
+            amax_out = amax_new
+        new_delays.append(delay_new)
+        new_consumed.append(consumed[o] + n_o)
+        acc_cols.append(acc_new)
+        col += F
+        if emit:
+            l_next = (l_o + 1) // 2
+            x_o = y_next[:, :l_next]
+            # kept-count update: arithmetic shift, not an integer divide
+            n_o = jnp.right_shift(jnp.maximum(n_o - start_o + 1, 0), 1)
             l_o = l_next
     return (tuple(new_delays), tuple(new_consumed),
             jnp.concatenate(acc_cols, axis=1), amax_out)

@@ -1,0 +1,53 @@
+"""Best-known streaming-kernel block shapes (the autotune table).
+
+``benchmarks/kernel_sweep.py`` sweeps slot_block (``block_s``) x chunk
+length x session capacity for both stream kernels (float ``fir_mp_stream``
+and integer ``fir_mp_stream_q``) and — with ``--update-table`` — persists
+the winning ``block_s`` per (kernel, capacity) into the committed
+``stream_shapes.json`` next to this module. ``ops.fir_mp_stream`` /
+``ops.fir_mp_stream_q`` consult :func:`best_block_s` when the caller does
+not pass ``block_s`` explicitly, so a re-run of the sweep on real TPU
+hardware retunes the default shapes with a one-line commit and zero call
+sites change.
+
+Shape choice never changes VALUES: ``block_s`` only tiles the slot axis
+(every slot's math is row-independent), so any entry in this table
+preserves the bit-parity contracts. The committed numbers are the
+CPU/interpret-mode winners tracked by the benchmark trajectory; they are
+placeholders for the real-TPU pass.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+__all__ = ["best_block_s", "table", "TABLE_PATH", "DEFAULT_BLOCK_S"]
+
+TABLE_PATH = os.path.join(os.path.dirname(__file__), "stream_shapes.json")
+DEFAULT_BLOCK_S = 8
+
+
+@functools.lru_cache(maxsize=1)
+def table() -> dict:
+    """The committed table: {kernel: {capacity(str): block_s}}. Missing or
+    unreadable file -> empty table (defaults apply)."""
+    try:
+        with open(TABLE_PATH) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def best_block_s(kernel: str, slots: int) -> int:
+    """Best-known ``block_s`` for ``kernel`` at session capacity ``slots``:
+    the entry for the largest tuned capacity <= ``slots`` (falling back to
+    the smallest tuned capacity, then to ``DEFAULT_BLOCK_S``)."""
+    entries = table().get(kernel, {})
+    caps = sorted(int(c) for c in entries)
+    if not caps:
+        return DEFAULT_BLOCK_S
+    at_or_below = [c for c in caps if c <= slots]
+    pick = at_or_below[-1] if at_or_below else caps[0]
+    return int(entries[str(pick)])

@@ -155,7 +155,9 @@ def main(argv=None):
                     help="esc10-mp: 'fixed' serves the bit-true int32 "
                          "hardware twin — integer session registers, "
                          "streamed decisions bit-for-bit equal to one-shot "
-                         "inference (requires --stream-impl xla)")
+                         "inference, through either --stream-impl "
+                         "('pallas' runs the VMEM-resident int kernel "
+                         "fir_mp_stream_q, bit-identical to 'xla')")
     ap.add_argument("--fixed-amax", type=float, default=None,
                     help="esc10-mp: ADC full-scale for --numerics fixed "
                          "(default: the config's static 1.0; the synthetic "

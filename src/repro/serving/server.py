@@ -62,10 +62,10 @@ class StreamServer:
                     ``numerics`` picks the engine: "float" (f32 registers)
                     or "fixed" — the bit-true int32 hardware twin, whose
                     streamed decisions are bit-for-bit equal to one-shot
-                    ``pipeline.apply(x)`` under any chunking
-                    (``stats()["numerics"]`` reports the live mode;
-                    fixed + "pallas" is rejected here at construction —
-                    no int32 kernel yet).
+                    ``pipeline.apply(x)`` under any chunking and under
+                    EITHER stream_impl (the int Pallas kernel matches the
+                    int XLA step register-for-register;
+                    ``stats()["numerics"]`` reports the live mode).
     capacity:       number of slots S (streams resident at once).
     max_chunk:      largest per-call chunk; longer packets are split.
     min_chunk:      smallest pad bucket (tiny packets share one variant).
@@ -96,14 +96,6 @@ class StreamServer:
             raise ValueError(
                 "stream_impl='pallas' requires an MP-mode pipeline "
                 f"(got mode={pipeline.config.mode!r})")
-        if pipeline.config.numerics == "fixed" \
-                and pipeline.config.stream_impl == "pallas":
-            from repro.core.quant import unsupported_fixed
-            raise unsupported_fixed(
-                "StreamServer with stream_impl='pallas'",
-                hint="the stateful fir_mp_stream kernel has no int32 "
-                     "variant; serve fixed numerics with "
-                     "stream_impl='xla'")
         self.pipeline = pipeline
         self.capacity = capacity
         self.max_chunk = max_chunk

@@ -65,9 +65,11 @@ def compute_outputs(case: dict) -> dict:
     """The recorded surface: one-shot p/phi, streamed p (both impls), the
     final streamed accumulator registers, and the fixed-point hardware
     twin's INTEGER codes — one-shot (p/phi/accumulators) AND streamed
-    through the int32 session step (``*_stream_fixed_q``). The float
-    entries gate with a small atol; every ``*_fixed_q`` int entry must
-    match EXACTLY — integer arithmetic either reproduces or it drifted."""
+    through the int32 session step, via BOTH the XLA cascade
+    (``*_stream_fixed_q``) and the int Pallas kernel
+    (``*_stream_fixed_pallas_q``). The float entries gate with a small
+    atol; every ``*_fixed*_q`` int entry must match EXACTLY — integer
+    arithmetic either reproduces or it drifted."""
     import jax.numpy as jnp
 
     from repro.core import fixed
@@ -101,6 +103,23 @@ def compute_outputs(case: dict) -> dict:
             out["p_stream_fixed_q"] = np.asarray(
                 np.round(np.asarray(p_s) / prog.out_spec.scale), np.int32)
             out["acc_stream_fixed_q"] = np.asarray(state.acc, np.int32)
+        else:
+            # int32 session streaming through the int PALLAS kernel
+            # (fir_mp_stream_q): same calibrated program, same chunking —
+            # the recorded codes must be IDENTICAL to the *_stream_fixed_q
+            # rows above (and the one-shot rows): three paths, one answer
+            pipe_fx = build_pipeline(
+                dict(case, cfg=dict(case["cfg"], numerics="fixed")), impl)
+            pipe_fx.calibrate_fixed(np.asarray(x))
+            scale = pipe_fx.fixed_program().out_spec.scale
+            state = pipe_fx.init_session(x.shape[0])
+            p_s = None
+            for i in range(0, x.shape[1], case["chunk"]):
+                p_s, state = pipe_fx.apply(x[:, i:i + case["chunk"]], state)
+            out["p_stream_fixed_pallas_q"] = np.asarray(
+                np.round(np.asarray(p_s) / scale), np.int32)
+            out["acc_stream_fixed_pallas_q"] = np.asarray(state.acc,
+                                                          np.int32)
         state = pipe.init_session(x.shape[0],
                                   amax=jnp.max(jnp.abs(x), axis=-1))
         p_s = None

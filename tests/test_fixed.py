@@ -329,14 +329,14 @@ def test_stream_server_serves_fixed_pipeline():
 
 
 def test_unsupported_fixed_helper_message_shape():
-    """All remaining fixed rejections build here: follow-ups are
-    NotImplementedError naming the ROADMAP item; wrong-entry-point
-    redirects are ValueError without one."""
+    """All remaining fixed rejections build here: follow-ups must NAME
+    their ROADMAP item explicitly (NotImplementedError); the default is a
+    wrong-entry-point redirect (ValueError, no ROADMAP claim)."""
     from repro.core.quant import unsupported_fixed
-    err = unsupported_fixed("somewhere")
+    err = unsupported_fixed("somewhere", followup="Some open item")
     assert isinstance(err, NotImplementedError)
-    assert "ROADMAP.md" in str(err) and "Fixed-point Pallas" in str(err)
-    err = unsupported_fixed("an entry point", followup=None, hint="go there")
+    assert "ROADMAP.md" in str(err) and "Some open item" in str(err)
+    err = unsupported_fixed("an entry point", hint="go there")
     assert isinstance(err, ValueError)
     assert "ROADMAP" not in str(err) and "go there" in str(err)
 
@@ -358,3 +358,95 @@ def test_octave_gain_calibration_monotone_grids():
     exps = [st.in_spec.exp for st in prog.bank.octaves]
     assert exps[0] == prog.signal.exp
     assert all(e <= prog.signal.exp for e in exps)
+
+
+# ---------------------------------------------------------------------------
+# the integer Pallas kernels: fir_mp_bank_q / fir_mp_stream_q (PR 6) —
+# carrier-generic, bit-for-bit twins of the fxp_* XLA kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("carrier", ["int", "float"])
+def test_bank_q_pallas_bitwise_matches_xla_both_carriers(carrier):
+    """One-shot inference through the integer Pallas bank kernels equals
+    the XLA integer path exactly, on the int32 carrier AND the f32-carried
+    codes (the fake-quant twin) — the kernels are carrier-generic like the
+    fxp_* ops they fuse."""
+    x = _audio((3, 320), seed=4)
+    pipe = _pipeline(numerics="fixed", fixed_amax=float(np.abs(x).max()))
+    prog = pipe.fixed_program()
+    xq = fixed.quantize_signal(prog, jnp.asarray(x), carrier)
+    ref = fixed.infer_q(prog, xq)
+    out = fixed.infer_q(prog, xq, use_pallas=True)
+    for a, b, name in zip(out, ref, ["p_q", "phi_q", "s_q"]):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{carrier} carrier: {name} diverged (pallas vs xla)")
+
+
+@pytest.mark.pallas
+def test_stream_q_masked_slots_inert_in_kernel():
+    """Slots with n == 0 come back with bit-identical registers from the
+    int streaming kernel itself (delay slides by 0, accumulator
+    contributions are exactly +0, amax is max against zeroed codes) — the
+    serving layer's padding rows are inert INSIDE the kernel, not by
+    post-masking."""
+    from repro.kernels import fir_mp_stream_q
+
+    pipe = _pipeline(numerics="fixed", fixed_amax=3.0)
+    prog = pipe.fixed_program()
+    S, L = 4, 160
+    state = pipe.init_session(S)
+    xq = fixed.quantize_signal(prog, jnp.asarray(_audio((S, L), seed=5)))
+    n = jnp.asarray([L, 0, 77, 0], jnp.int32)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (S, L), 1)
+    xq = jnp.where(pos < n[:, None], xq, 0)
+    step = jax.jit(lambda q, nn, d, c, a, am:
+                   fir_mp_stream_q(prog, q, nn, d, c, a, am))
+    delays, consumed, acc, amax = step(xq, n, state.delays, state.consumed,
+                                       state.acc, state.amax)
+    idle = np.asarray([1, 3])
+    for o, (old, new) in enumerate(zip(state.delays, delays)):
+        np.testing.assert_array_equal(np.asarray(old)[idle],
+                                      np.asarray(new)[idle],
+                                      err_msg=f"octave {o} delay moved")
+    for o, (old, new) in enumerate(zip(state.consumed, consumed)):
+        np.testing.assert_array_equal(np.asarray(old)[idle],
+                                      np.asarray(new)[idle],
+                                      err_msg=f"octave {o} consumed moved")
+    np.testing.assert_array_equal(np.asarray(state.acc)[idle],
+                                  np.asarray(acc)[idle])
+    np.testing.assert_array_equal(np.asarray(state.amax)[idle],
+                                  np.asarray(amax)[idle])
+    # the fed slots DID move
+    assert not np.array_equal(np.asarray(state.acc)[0], np.asarray(acc)[0])
+
+
+@pytest.mark.pallas
+def test_fixed_pallas_chunk_lengths_zero_and_one():
+    """Single-sample chunks stream bit-identically through the int Pallas
+    and int XLA steps, and a (S, 0) chunk is a pure readout for both: same
+    decision as the last step, no register moves."""
+    px = _pipeline(numerics="fixed", fixed_amax=3.0)
+    pk = _pipeline(numerics="fixed", fixed_amax=3.0, stream_impl="pallas")
+    appx = jax.jit(lambda st, ch, v: px.apply(ch, st, valid=v))
+    appk = jax.jit(lambda st, ch, v: pk.apply(ch, st, valid=v))
+    x = _audio((2, 5), seed=6)
+    sx, sk = px.init_session(2), pk.init_session(2)
+    p_x = p_k = None
+    for i in range(x.shape[1]):
+        ch = jnp.asarray(x[:, i:i + 1])
+        v = jnp.ones((2,), jnp.int32)
+        p_x, sx = appx(sx, ch, v)
+        p_k, sk = appk(sk, ch, v)
+        np.testing.assert_array_equal(np.asarray(p_x), np.asarray(p_k),
+                                      err_msg=f"length-1 chunk {i}")
+    for app, state, p_last in ((appx, sx, p_x), (appk, sk, p_k)):
+        p0, state2 = app(state, jnp.zeros((2, 0)),
+                         jnp.zeros((2,), jnp.int32))
+        np.testing.assert_array_equal(np.asarray(p0), np.asarray(p_last))
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(state2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(sx), jax.tree.leaves(sk)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -20,8 +20,13 @@ streaming kernel"):
   with ``numerics="fixed"`` the int32 session step must land on EXACTLY
   the one-shot integer program's codes — registers and decisions gate with
   ``==`` from the first chunk (static ADC grid, associative integer adds;
-  docs/numerics.md), and the remaining fixed rejection (int Pallas) names
-  its ROADMAP follow-up.
+  docs/numerics.md).
+* **Int Pallas == int XLA == one-shot, bit-for-bit** (PR 6): with
+  ``numerics="fixed"`` + ``stream_impl="pallas"`` the VMEM-resident
+  integer kernel (``fir_mp_stream_q``) must track the int XLA session step
+  register-for-register under random chunkings and slot lifecycles, and
+  land on the one-shot program exactly — the same ``==`` gate, through the
+  jitted step and the StreamServer.
 
 Randomization comes through the hypothesis-or-fallback sampler in
 ``conftest.py``: each example draws one seed; numpy generates audio, chunk
@@ -442,15 +447,83 @@ def test_fixed_zero_length_chunk_is_pure_readout():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_fixed_rejects_pallas_stream_impl_at_kernel_selection():
-    """The int Pallas streaming kernel is a tracked follow-up: selecting it
-    with fixed numerics must fail loudly AND name the ROADMAP item."""
-    pipe, _ = _fixed_pipe()
-    cfg = pipe.config._replace(stream_impl="pallas")
-    bad = InFilterPipeline(cfg, pipe.bp_taps, pipe.lp_taps,
-                           pipe.mu, pipe.sigma, pipe.clf)
-    with pytest.raises(NotImplementedError, match="ROADMAP"):
-        bad.apply(jnp.zeros((2, 64)), bad.init_session(2))
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10 ** 9))
+def test_fixed_pallas_random_chunking_bitwise_matches_xla_and_one_shot(seed):
+    """The int Pallas streaming kernel under random chunk partitions: every
+    SessionState register tracks the int XLA step EXACTLY chunk-by-chunk,
+    and the final registers/decisions equal the one-shot integer program —
+    all gates are ==, in jit, in interpret mode on CPU."""
+    from repro.core import fixed
+
+    rng = np.random.default_rng(seed)
+    px, appx = _fixed_pipe()
+    pk, appk = _fixed_pipe(stream_impl="pallas")
+    prog = px.fixed_program()
+    S = 2
+    lens, n = _partition(rng)
+    x = jnp.asarray(rng.standard_normal((S, n)).astype(np.float32))
+    p_q, _, s_q = fixed.infer_q(prog, fixed.quantize_signal(prog, x))
+    p_one = prog.out_spec.dequantize(p_q)
+
+    sx, sk = px.init_session(S), pk.init_session(S)
+    p_x = p_k = None
+    off = 0
+    for ln in lens:
+        ch = x[:, off:off + ln]
+        off += ln
+        v = jnp.full((S,), ln, jnp.int32)
+        p_x, sx = appx(sx, ch, v)
+        p_k, sk = appk(sk, ch, v)
+        np.testing.assert_array_equal(
+            np.asarray(p_x), np.asarray(p_k),
+            err_msg=f"seed={seed}: int xla/pallas decisions diverged "
+                    f"at {off}")
+    _assert_states_bitwise(sx, sk, f"seed={seed} (fixed)")
+    np.testing.assert_array_equal(np.asarray(sk.acc), np.asarray(s_q),
+                                  err_msg=f"seed={seed}: acc vs one-shot")
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_one),
+                                  err_msg=f"seed={seed}: decision vs "
+                                          "one-shot")
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10 ** 9))
+def test_fixed_pallas_slot_lifecycles_bitwise(seed):
+    """Slot surgery through the int Pallas kernel: random open/feed/close
+    schedules with garbage in non-fed rows — registers track the int XLA
+    step exactly and completed slots equal their one-shot run."""
+    rng = np.random.default_rng(seed)
+    px, appx = _fixed_pipe()
+    pk, appk = _fixed_pipe(stream_impl="pallas")
+    S = 3
+    total = [int(rng.integers(40, 200)) for _ in range(S)]
+    audio = [rng.standard_normal(t).astype(np.float32) for t in total]
+    fed = [0] * S
+    sx, sk = px.init_session(S), pk.init_session(S)
+    last_p = [None] * S
+    for _ in range(15):
+        slot = int(rng.integers(S))
+        take = min(int(rng.choice(_LEN_MENU)), total[slot] - fed[slot])
+        L = min((l for l in _LEN_MENU if l >= max(take, 1)),
+                default=_LEN_MENU[-1])
+        chunk = (rng.standard_normal((S, L)) * 50.0).astype(np.float32)
+        chunk[slot, :take] = audio[slot][fed[slot]:fed[slot] + take]
+        valid = np.zeros((S,), np.int32)
+        valid[slot] = take
+        fed[slot] += take
+        p_x, sx = appx(sx, jnp.asarray(chunk), jnp.asarray(valid))
+        p_k, sk = appk(sk, jnp.asarray(chunk), jnp.asarray(valid))
+        np.testing.assert_array_equal(np.asarray(p_x), np.asarray(p_k),
+                                      err_msg=f"seed={seed}")
+        last_p[slot] = np.asarray(p_k[slot])
+    _assert_states_bitwise(sx, sk, f"seed={seed} (fixed lifecycles)")
+    for s in range(S):
+        if fed[s] != total[s]:
+            continue
+        ref = np.asarray(pk.apply(jnp.asarray(audio[s])[None]))[0]
+        np.testing.assert_array_equal(last_p[s], ref,
+                                      err_msg=f"seed={seed} slot={s}")
 
 
 def test_fixed_stream_server_end_to_end(tmp_path):
@@ -482,15 +555,36 @@ def test_fixed_stream_server_end_to_end(tmp_path):
         assert final[sid] == (int(p.argmax()), float(p.max())), sid
 
 
-def test_fixed_server_rejects_pallas_at_construction():
+def test_fixed_server_pallas_end_to_end_bitwise(tmp_path):
+    """StreamServer serves numerics='fixed' + stream_impl='pallas'
+    end-to-end (open/feed/split/evict/reopen): every result — label,
+    confidence, samples_seen — and the final int32 registers equal the
+    fixed XLA server's exactly."""
     from repro.serving import StreamServer
 
-    pipe, _ = _fixed_pipe()
-    cfg = pipe.config._replace(stream_impl="pallas")
-    bad = InFilterPipeline(cfg, pipe.bp_taps, pipe.lp_taps,
-                           pipe.mu, pipe.sigma, pipe.clf)
-    with pytest.raises(NotImplementedError, match="ROADMAP"):
-        StreamServer(bad, capacity=2)
+    rng = np.random.default_rng(9)
+    xa = rng.standard_normal(700).astype(np.float32)
+    xb = rng.standard_normal(420).astype(np.float32)
+    results, accs = [], []
+    for impl in ("xla", "pallas"):
+        pipe, _ = _fixed_pipe() if impl == "xla" \
+            else _fixed_pipe(stream_impl=impl)
+        srv = StreamServer(pipe, capacity=2, max_chunk=256,
+                           checkpoint_dir=str(tmp_path / impl))
+        assert srv.stats()["numerics"] == "fixed"
+        srv.open("a")
+        srv.open("b")
+        out = []
+        out += srv.feed([("a", xa[:300]), ("b", xb[:33])])
+        out += srv.feed([("b", xb[33:420]), ("a", xa[300:301])])
+        srv.evict("a")                  # parks int32 registers on disk
+        srv.open("a")                   # restores them dtype-checked
+        out += srv.feed([("a", xa[301:700])])
+        results.append([(r.session_id, r.label, r.confidence,
+                         r.samples_seen) for r in out])
+        accs.append(np.asarray(srv.state.acc))
+    assert results[0] == results[1]
+    np.testing.assert_array_equal(accs[0], accs[1])
 
 
 def test_stream_server_pallas_bitwise_matches_xla_server(tmp_path):
