@@ -22,6 +22,15 @@ Pallas streaming kernel (``kernels.fir_mp_stream_q``): the census
 recurses into ``pallas_call`` kernel jaxprs scaled by the grid product,
 so the gate covers the VMEM-resident datapath as lowered.
 
+The walk itself lives in ``repro.analysis`` (``census`` and
+``assert_multiplierless`` here are the package's, re-exported for
+compatibility): the same traversal backs the op-legality verifier and the
+worst-case interval pass, so the benchmark numbers and the
+``scripts/analyze.py`` gate can never disagree about what a program
+contains. This module also surfaces the analysis summary (bitwidth
+headroom per target, the session-accumulator safety envelope) as bench
+rows so headroom is tracked across PRs alongside the op counts.
+
 Run with ``--smoke`` (used by scripts/bench_smoke.sh) for a reduced config
 that still exercises the assertions.
 """
@@ -29,14 +38,13 @@ that still exercises the assertions.
 from __future__ import annotations
 
 import argparse
-import math
 from collections import Counter
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row
+from repro.analysis import assert_multiplierless, census  # noqa: F401
 from repro.core.filterbank import FilterBank, FilterBankConfig
 from repro.core import fixed
 from repro.core import kernel_machine as km
@@ -46,129 +54,6 @@ FS = 16000.0
 N = 16000  # 1 s
 
 
-def _literal_pow2(eqn) -> bool:
-    from jax._src.core import Literal
-    for v in eqn.invars:
-        if isinstance(v, Literal):
-            try:
-                val = float(np.ravel(v.val)[0])
-            except Exception:
-                return False
-            if val != 0 and abs(math.log2(abs(val)) % 1.0) < 1e-9:
-                return True
-    return False
-
-
-def _out_elems(eqn) -> int:
-    tot = 0
-    for v in eqn.outvars:
-        if hasattr(v.aval, "shape"):
-            n = 1
-            for d in v.aval.shape:
-                n *= d
-            tot += n
-    return tot
-
-
-def _in_elems(eqn) -> int:
-    v = eqn.invars[0]
-    n = 1
-    for d in getattr(v.aval, "shape", ()):
-        n *= d
-    return n
-
-
-MUL_OPS = {"mul"}
-ADD_OPS = {"add", "sub", "neg"}
-CMP_OPS = {"max", "min", "gt", "lt", "ge", "le", "select_n", "eq", "abs",
-           "sign", "clamp"}
-SHIFT_OPS = {"shift_left", "shift_right_arithmetic", "shift_right_logical"}
-# reductions lower to one op per consumed element (an adder/comparator tree)
-REDUCE_ADD_OPS = {"reduce_sum"}
-REDUCE_CMP_OPS = {"reduce_max", "reduce_min"}
-
-
-def census(fn, *args) -> Counter:
-    jaxpr = jax.make_jaxpr(fn)(*args)
-    counts: Counter = Counter()
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            name = eqn.primitive.name
-            n = _out_elems(eqn)
-            if name in ("pjit", "closed_call", "custom_vjp_call",
-                        "custom_jvp_call", "remat", "checkpoint"):
-                for sub in eqn.params.values():
-                    if hasattr(sub, "jaxpr"):
-                        walk(sub.jaxpr if hasattr(sub.jaxpr, "eqns")
-                             else sub)
-                continue
-            if name == "pallas_call":
-                # the kernel jaxpr runs once per grid step: walk it and
-                # scale by the grid product (counts inside are per-block)
-                inner = eqn.params.get("jaxpr")
-                gm = eqn.params.get("grid_mapping")
-                steps = 1
-                for g in getattr(gm, "grid", ()) or ():
-                    if isinstance(g, int):
-                        steps *= g
-                if inner is not None:
-                    before = counts.copy()
-                    walk(inner.jaxpr if hasattr(inner, "jaxpr") else inner)
-                    for k in counts:
-                        counts[k] = before.get(k, 0) + \
-                            (counts[k] - before.get(k, 0)) * steps
-                continue
-            if name in ("scan", "while"):
-                length = eqn.params.get("length", 1) or 1
-                inner = eqn.params.get("jaxpr")
-                if inner is not None:
-                    before = counts.copy()
-                    walk(inner.jaxpr if hasattr(inner, "jaxpr") else inner)
-                    for k in counts:
-                        counts[k] = before.get(k, 0) + \
-                            (counts[k] - before.get(k, 0)) * length
-                continue
-            if name == "conv_general_dilated":
-                # MACs: out elems x kernel taps (per output channel)
-                rhs = eqn.invars[1].aval.shape
-                k_elems = 1
-                for d in rhs:
-                    k_elems *= d
-                counts["multiply"] += n * max(k_elems // max(rhs[0], 1), 1)
-                counts["add"] += n * max(k_elems // max(rhs[0], 1), 1)
-            elif name == "dot_general":
-                # MACs: out elems x contraction size
-                lhs = eqn.invars[0].aval.shape
-                ((lc, _), _) = eqn.params["dimension_numbers"]
-                contract = 1
-                for d in lc:
-                    contract *= lhs[d]
-                counts["multiply"] += n * contract
-                counts["add"] += n * contract
-            elif name in MUL_OPS:
-                if _literal_pow2(eqn):
-                    counts["shift"] += n
-                else:
-                    counts["multiply"] += n
-            elif name in ADD_OPS:
-                counts["add"] += n
-            elif name in CMP_OPS:
-                counts["compare"] += n
-            elif name in SHIFT_OPS:
-                counts["shift"] += n
-            elif name in REDUCE_ADD_OPS:
-                counts["add"] += max(_in_elems(eqn) - n, 0)
-            elif name in REDUCE_CMP_OPS:
-                counts["compare"] += max(_in_elems(eqn) - n, 0)
-            elif name in ("exp", "log", "tanh", "logistic", "rsqrt", "sqrt",
-                          "div", "integer_pow", "pow"):
-                counts["transcendental_or_div"] += n
-
-    walk(jaxpr.jaxpr)
-    return counts
-
-
 def lut_estimate(c: Counter) -> float:
     """8-bit LUT-equivalents using the paper's conversion factors."""
     return (c["multiply"] * 72          # 8x8 Baugh-Wooley (paper: 72 LUTs)
@@ -176,17 +61,6 @@ def lut_estimate(c: Counter) -> float:
             + c["compare"] * 8
             + c["shift"] * 0            # wiring on FPGA
             + c["transcendental_or_div"] * 200)
-
-
-def assert_multiplierless(c: Counter, tag: str) -> None:
-    """The hard gate: the integer hardware twin's jaxpr must contain ZERO
-    multiplies (pow2-literal scalings count as shifts) and ZERO divides —
-    the paper's primitive set is add/subtract/shift/compare only."""
-    bad = {k: c[k] for k in ("multiply", "transcendental_or_div") if c[k]}
-    if bad:
-        raise AssertionError(
-            f"{tag}: the integer jaxpr is NOT multiplierless: {bad} "
-            "(a float multiply or divide leaked into the fixed-point path)")
 
 
 def _fixed_pipeline(cfg, seed: int = 0) -> InFilterPipeline:
@@ -207,6 +81,35 @@ def emit_rows(tag: str, c: Counter, n_samples: int) -> None:
     row(f"hw.{tag}.lut_weighted_ops_per_sample", None,
         f"{lut_estimate(c) / n_samples:.0f} (ops-weighted; the FPGA time-"
         f"multiplexes 3 MP modules so unit count is far lower)")
+
+
+def emit_analysis_rows(smoke: bool) -> None:
+    """Static-analysis summary rows: per-target bitwidth headroom and the
+    session accumulator envelope (see docs/analysis.md). Tracked across
+    PRs so a register-growth regression shows up in the bench diff."""
+    from repro.analysis import report as rp
+    from repro.analysis.targets import build_targets
+
+    targets, meta = build_targets(smoke=smoke)
+    for t in targets:
+        s = rp.analyze_target(t, top_registers=0)
+        leg = s["legality"]
+        row(f"analysis.{t.name}.legal_ops_per_sample", None,
+            f"{sum(leg['legal_ops'].values()) / t.n_samples:.1f} "
+            f"(legality {'ok' if leg['ok'] else 'FAIL'})")
+        if "intervals" in s:
+            iv = s["intervals"]
+            row(f"analysis.{t.name}.min_headroom_bits", None,
+                f"{iv['min_headroom_bits']} over {iv['num_registers']} "
+                f"registers (max required {iv['max_required_bits']} bits)")
+            row(f"analysis.{t.name}.int32_safe", None,
+                "PROVEN for any ADC input" if iv["ok"]
+                else f"FAIL: {len(iv['violations'])} possible overflow(s)")
+    row("analysis.session.max_safe_session_samples", None,
+        f"{meta['max_safe_session_samples']} input samples before any "
+        f"int32 accumulator can overflow (acc <= "
+        f"{meta['acc_envelope'][1]} within the "
+        f"{meta['envelope_samples']}-sample envelope)")
 
 
 def main(argv=()):
@@ -301,6 +204,8 @@ def main(argv=()):
     row(f"hw.{tag}.multiplierless_assert", None,
         f"PASS (0 mul/div in the Pallas-lowered per-chunk int32 jaxpr, "
         f"chunk={chunk_len})")
+
+    emit_analysis_rows(args.smoke)
 
     row("hw.reference", None,
         "paper Table I: 0 DSP, 1503 LUT, 2376 FF, 17mW@50MHz; "

@@ -1,0 +1,59 @@
+#!/usr/bin/env python
+"""Static verification gate: run the analysis passes over the deployed
+integer programs and emit the machine-readable report.
+
+Runs op-legality, worst-case interval analysis and the determinism lint
+(``src/repro/analysis/``) over the standard targets — the compiled
+``esc10_mp`` fixed one-shot program, the per-chunk ``session_step_q``
+step, both int Pallas kernels, and the float reference path (lint only) —
+and writes ``ANALYSIS.json`` (deterministic: no timestamps, sorted keys;
+the committed artifact diffs meaningfully across PRs).
+
+Exit status is the gate: nonzero when any gating target has an illegal
+primitive, a possible integer overflow, or a float op on the fixed path.
+
+    PYTHONPATH=src python scripts/analyze.py            # full config gate
+    PYTHONPATH=src python scripts/analyze.py --smoke    # reduced config
+    PYTHONPATH=src python scripts/analyze.py --out /tmp/r.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (3 octaves, 0.4 s) — same passes")
+    ap.add_argument("--out", default=None,
+                    help="report path (default: ANALYSIS.json at the repo "
+                         "root for the full config, stdout-only for smoke)")
+    ap.add_argument("--top-registers", type=int, default=20,
+                    help="tightest registers to include per target")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import report as rp
+    from repro.analysis.targets import build_targets
+
+    targets, meta = build_targets(smoke=args.smoke)
+    report = rp.build_report(targets, meta,
+                             top_registers=args.top_registers)
+
+    out = args.out
+    if out is None and not args.smoke:
+        out = os.path.join(REPO, "ANALYSIS.json")
+    if out:
+        rp.write_report(out, report)
+        print(f"wrote {out}")
+    print(rp.summarize(report))
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

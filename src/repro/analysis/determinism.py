@@ -1,0 +1,127 @@
+"""Determinism lint: bit-parity hazards in traced programs.
+
+The fixed-point pipeline's whole value proposition is bit-exactness with
+the hardware twin — every run, every backend, every chunking produces the
+SAME int32 words. Two things break that:
+
+* **Float ops reachable in a ``numerics="fixed"`` program.** Float
+  arithmetic is where cross-backend divergence lives (FMA contraction,
+  flush-to-zero, libm variation). In a fixed program any non-structural
+  float op is a leak from the float reference path and is flagged as a
+  gating finding.
+* **Non-fixed-tree float reductions.** Float addition is not associative:
+  ``reduce_sum``/``dot_general``/``conv_general_dilated`` over floats let
+  the compiler pick the reduction tree, so re-tiling or re-vectorizing
+  changes low bits. On bit-parity-critical paths reductions must either be
+  integer (exactly associative: ``fxp_hwr_accumulate``'s masked int sum)
+  or a fixed tree (``mp.tree_sum``). Float-target findings are
+  informational — the float path is a reference, not a contract.
+
+Comparisons/selects on floats are deterministic (no rounding) and
+``reduce_max``/``reduce_min`` are exactly associative, so neither is
+flagged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.analysis import traverse
+
+# ops that move/relabel values without arithmetic — never a parity hazard
+_STRUCTURAL = {
+    "broadcast_in_dim", "reshape", "squeeze", "expand_dims", "transpose",
+    "slice", "dynamic_slice", "dynamic_update_slice", "concatenate",
+    "gather", "scatter", "rev", "pad", "convert_element_type",
+    "device_put", "copy", "stop_gradient", "iota", "program_id",
+    "num_programs", "get", "swap", "select_n", "eq", "ne", "lt", "le",
+    "gt", "ge", "and", "or", "xor", "not", "reduce_and", "reduce_or",
+    "sign", "is_finite",
+}
+
+# float reductions whose tree shape the compiler may choose
+_FREE_TREE_REDUCTIONS = {"reduce_sum", "dot_general", "conv_general_dilated",
+                         "cumsum"}
+
+# exactly associative at any tree shape, float or int
+_EXACT_REDUCTIONS = {"reduce_max", "reduce_min", "argmax", "argmin",
+                     "cummax", "cummin"}
+
+
+def _has_float_io(eqn) -> bool:
+    for v in list(eqn.invars) + list(eqn.outvars):
+        dtype = getattr(getattr(v, "aval", None), "dtype", None)
+        if dtype is not None and np.dtype(dtype).kind == "f":
+            return True
+    return False
+
+
+@dataclasses.dataclass(frozen=True)
+class DeterminismFinding:
+    """One bit-parity hazard."""
+    kind: str           # "float_in_fixed" | "free_tree_reduction"
+    primitive: str
+    path: str
+    source: str
+    count: int          # executions per program call (scaled)
+    gating: bool        # True when it violates the fixed-mode contract
+
+    @property
+    def name(self) -> str:
+        return f"{self.path}/{self.primitive}@{self.source}"
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["name"] = self.name
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class DeterminismResult:
+    ok: bool                     # no gating findings
+    findings: tuple
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "num_findings": len(self.findings),
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+
+def lint_determinism(jaxpr, *, numerics: str = "fixed",
+                     max_findings: int = 64) -> DeterminismResult:
+    """Lint a traced program (``ClosedJaxpr`` or plain ``Jaxpr``) for
+    bit-parity hazards.
+
+    ``numerics="fixed"`` applies the hardware-twin contract: ANY
+    non-structural float op is a gating finding. ``numerics="float"``
+    only reports free-tree float reductions, as informational findings.
+    """
+    findings: list = []
+
+    def visit(eqn, scale, path):
+        if len(findings) >= max_findings:
+            return
+        name = eqn.primitive.name
+        if name in _STRUCTURAL or name in _EXACT_REDUCTIONS:
+            return
+        if not _has_float_io(eqn):
+            return  # integer ops are exact at any evaluation order
+        if name in _FREE_TREE_REDUCTIONS:
+            findings.append(DeterminismFinding(
+                kind="free_tree_reduction", primitive=name, path=path,
+                source=traverse.eqn_source(eqn), count=scale,
+                gating=(numerics == "fixed")))
+        elif numerics == "fixed":
+            findings.append(DeterminismFinding(
+                kind="float_in_fixed", primitive=name, path=path,
+                source=traverse.eqn_source(eqn), count=scale,
+                gating=True))
+
+    traverse.walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr,
+                  visit, cond_branches=True, while_bodies=True)
+    return DeterminismResult(
+        ok=not any(f.gating for f in findings), findings=tuple(findings))

@@ -1,0 +1,286 @@
+"""Op-legality pass (the generalized multiplierless verifier) and the
+compatibility census.
+
+Legality is the paper's primitive-set contract as a whitelist: the integer
+datapath may contain adds/subtracts, shifts, compares/selects, bitwise
+logic, data movement — and NOTHING else. A multiply is legal only when it
+is a shift in disguise: a binary ``mul`` whose multiplier operand is a
+literal with every element a nonzero power of two (the pre-refactor
+``_literal_pow2`` accepted any pow2 literal invar and only inspected its
+first element — the fixed classifier here is what ``hardware_cost.py``
+now uses too). Violations come back as named equations with source
+locations, and unlike the census the verifier recurses into ``cond``
+branches and ``while`` bodies: the gate sees strictly more code than the
+counter.
+
+The census (:func:`census_jaxpr`) is the same traversal run in counting
+mode, preserving the pre-refactor semantics EXACTLY (cond/while bodies
+skipped, reductions count consumed-minus-produced elements, MAC ops count
+out-elems x contraction) so committed benchmark numbers do not move.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import Counter
+from typing import Optional
+
+import numpy as np
+
+from repro.analysis import traverse
+
+CensusCounter = Counter
+
+MUL_OPS = {"mul"}
+ADD_OPS = {"add", "sub", "neg"}
+CMP_OPS = {"max", "min", "gt", "lt", "ge", "le", "select_n", "eq", "abs",
+           "sign", "clamp"}
+SHIFT_OPS = {"shift_left", "shift_right_arithmetic", "shift_right_logical"}
+# reductions lower to one op per consumed element (an adder/comparator tree)
+REDUCE_ADD_OPS = {"reduce_sum"}
+REDUCE_CMP_OPS = {"reduce_max", "reduce_min"}
+
+# ops the FPGA datapath also realizes without a multiplier but that the
+# census puts in no cost bucket (bitwise logic, index compares)
+BITWISE_OPS = {"and", "or", "xor", "not", "ne"}
+
+# value movement / layout: wiring, not arithmetic
+STRUCTURAL_OPS = {
+    "broadcast_in_dim", "reshape", "squeeze", "expand_dims", "transpose",
+    "slice", "dynamic_slice", "dynamic_update_slice", "concatenate",
+    "gather", "rev", "pad", "convert_element_type", "device_put", "copy",
+    "stop_gradient", "iota", "program_id", "num_programs", "get", "swap",
+    "reduce_and", "reduce_or", "argmax", "argmin",
+}
+
+LEGAL_OPS = (ADD_OPS | CMP_OPS | SHIFT_OPS | REDUCE_ADD_OPS
+             | REDUCE_CMP_OPS | BITWISE_OPS | STRUCTURAL_OPS)
+
+
+def _is_literal(v) -> bool:
+    from jax._src.core import Literal
+    return isinstance(v, Literal)
+
+
+def _all_pow2(val) -> bool:
+    """True when every element of ``val`` is a nonzero power of two (of
+    either sign) — the multiplier values a shifter can realize."""
+    try:
+        flat = np.ravel(np.asarray(val))
+    except Exception:  # noqa: BLE001 - non-array literal: not a shift
+        return False
+    if flat.size == 0:
+        return False
+    for x in flat:
+        x = float(abs(x))
+        if x == 0 or abs(math.log2(x) % 1.0) >= 1e-9:
+            return False
+    return True
+
+
+def literal_pow2_multiplicand(eqn) -> bool:
+    """True when ``eqn`` is a binary ``mul`` that hardware realizes as a
+    shift: EXACTLY one operand is a literal, and every element of that
+    literal is a nonzero power of two.
+
+    This is the fixed form of the old ``hardware_cost._literal_pow2``,
+    which (a) returned True if ANY literal invar was pow2 — even an
+    operand that wasn't the multiplier — and (b) inspected only the
+    literal's first element, so a ``[4.0, 3.0]`` tap vector would have
+    been misclassified as a pure shift.
+    """
+    if eqn.primitive.name not in MUL_OPS or len(eqn.invars) != 2:
+        return False
+    lits = [v for v in eqn.invars if _is_literal(v)]
+    if len(lits) != 1:
+        return False
+    return _all_pow2(lits[0].val)
+
+
+# ---------------------------------------------------------------------------
+# counting mode: the benchmark census (pre-refactor semantics, pinned)
+# ---------------------------------------------------------------------------
+
+
+def _out_elems(eqn) -> int:
+    tot = 0
+    for v in eqn.outvars:
+        if hasattr(v.aval, "shape"):
+            n = 1
+            for d in v.aval.shape:
+                n *= d
+            tot += n
+    return tot
+
+
+def _in_elems(eqn) -> int:
+    v = eqn.invars[0]
+    n = 1
+    for d in getattr(v.aval, "shape", ()):
+        n *= d
+    return n
+
+
+def census_jaxpr(jaxpr) -> Counter:
+    """Count hardware ops in a traced jaxpr (multiply/add/compare/shift/
+    transcendental_or_div buckets), scaled by loop lengths and pallas grid
+    products. ``jaxpr`` is a ``ClosedJaxpr`` or plain ``Jaxpr``."""
+    counts: Counter = Counter()
+
+    def visit(eqn, scale, path):
+        name = eqn.primitive.name
+        n = _out_elems(eqn)
+        if name == "conv_general_dilated":
+            # MACs: out elems x kernel taps (per output channel)
+            rhs = eqn.invars[1].aval.shape
+            k_elems = 1
+            for d in rhs:
+                k_elems *= d
+            taps = max(k_elems // max(rhs[0], 1), 1)
+            counts["multiply"] += n * taps * scale
+            counts["add"] += n * taps * scale
+        elif name == "dot_general":
+            # MACs: out elems x contraction size
+            lhs = eqn.invars[0].aval.shape
+            ((lc, _), _) = eqn.params["dimension_numbers"]
+            contract = 1
+            for d in lc:
+                contract *= lhs[d]
+            counts["multiply"] += n * contract * scale
+            counts["add"] += n * contract * scale
+        elif name in MUL_OPS:
+            if literal_pow2_multiplicand(eqn):
+                counts["shift"] += n * scale
+            else:
+                counts["multiply"] += n * scale
+        elif name in ADD_OPS:
+            counts["add"] += n * scale
+        elif name in CMP_OPS:
+            counts["compare"] += n * scale
+        elif name in SHIFT_OPS:
+            counts["shift"] += n * scale
+        elif name in REDUCE_ADD_OPS:
+            counts["add"] += max(_in_elems(eqn) - n, 0) * scale
+        elif name in REDUCE_CMP_OPS:
+            counts["compare"] += max(_in_elems(eqn) - n, 0) * scale
+        elif name in ("exp", "log", "tanh", "logistic", "rsqrt", "sqrt",
+                      "div", "integer_pow", "pow"):
+            counts["transcendental_or_div"] += n * scale
+
+    traverse.walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr,
+                  visit, cond_branches=False, while_bodies=False,
+                  vjp_jaxpr_bodies=False)
+    return counts
+
+
+def census(fn, *args) -> Counter:
+    """Trace ``fn(*args)`` and census its jaxpr (the drop-in replacement
+    for the old ``benchmarks.hardware_cost.census``)."""
+    import jax
+    return census_jaxpr(jax.make_jaxpr(fn)(*args))
+
+
+def assert_multiplierless(c: Counter, tag: str) -> None:
+    """The hard gate: the integer hardware twin's jaxpr must contain ZERO
+    multiplies (pow2-literal scalings count as shifts) and ZERO divides —
+    the paper's primitive set is add/subtract/shift/compare only."""
+    bad = {k: c[k] for k in ("multiply", "transcendental_or_div") if c[k]}
+    if bad:
+        raise AssertionError(
+            f"{tag}: the integer jaxpr is NOT multiplierless: {bad} "
+            "(a float multiply or divide leaked into the fixed-point path)")
+
+
+# ---------------------------------------------------------------------------
+# verification mode: the whitelist gate with named violations
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LegalityViolation:
+    """One op outside the multiplierless primitive set."""
+    primitive: str
+    path: str
+    source: str
+    count: int          # executions per program call (scaled)
+    reason: str
+
+    @property
+    def name(self) -> str:
+        return f"{self.path}/{self.primitive}@{self.source}"
+
+
+@dataclasses.dataclass(frozen=True)
+class LegalityResult:
+    """Verifier output: ``ok`` plus the scaled op census the whitelist
+    admitted (``legal_ops``) and every violation, named."""
+    ok: bool
+    violations: tuple
+    legal_ops: Counter
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "legal_ops": dict(sorted(self.legal_ops.items())),
+            "violations": [dataclasses.asdict(v) for v in self.violations],
+        }
+
+
+def check_legality(jaxpr, *, max_violations: int = 64) -> LegalityResult:
+    """Run the op-legality pass over a traced program (``ClosedJaxpr`` or
+    plain ``Jaxpr``), recursing into cond branches and while bodies."""
+    violations: list = []
+    legal: Counter = Counter()
+
+    def visit(eqn, scale, path):
+        name = eqn.primitive.name
+        if name in MUL_OPS:
+            if literal_pow2_multiplicand(eqn):
+                legal["shift"] += _out_elems(eqn) * scale
+            elif len(violations) < max_violations:
+                violations.append(LegalityViolation(
+                    primitive=name, path=path,
+                    source=traverse.eqn_source(eqn),
+                    count=_out_elems(eqn) * scale,
+                    reason="multiply whose multiplier is not a pow2 "
+                           "literal — needs a hardware multiplier"))
+            return
+        if name in LEGAL_OPS:
+            if name in ADD_OPS or name in REDUCE_ADD_OPS:
+                legal["add"] += (_out_elems(eqn) * scale
+                                 if name in ADD_OPS else
+                                 max(_in_elems(eqn) - _out_elems(eqn), 0)
+                                 * scale)
+            elif name in CMP_OPS or name in REDUCE_CMP_OPS:
+                legal["compare"] += (_out_elems(eqn) * scale
+                                     if name in CMP_OPS else
+                                     max(_in_elems(eqn) - _out_elems(eqn), 0)
+                                     * scale)
+            elif name in SHIFT_OPS:
+                legal["shift"] += _out_elems(eqn) * scale
+            return
+        if len(violations) < max_violations:
+            violations.append(LegalityViolation(
+                primitive=name, path=path, source=traverse.eqn_source(eqn),
+                count=_out_elems(eqn) * scale,
+                reason="primitive outside the add/sub/shift/compare/"
+                       "select/bitwise whitelist"))
+
+    traverse.walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr,
+                  visit, cond_branches=True, while_bodies=True)
+    return LegalityResult(ok=not violations, violations=tuple(violations),
+                          legal_ops=legal)
+
+
+def assert_legal(jaxpr, tag: str,
+                 result: Optional[LegalityResult] = None) -> LegalityResult:
+    """Run (or take) a legality result and raise with the first named
+    offending equations on failure."""
+    r = result if result is not None else check_legality(jaxpr)
+    if not r.ok:
+        names = "; ".join(v.name for v in r.violations[:5])
+        raise AssertionError(
+            f"{tag}: {len(r.violations)} op(s) outside the multiplierless "
+            f"whitelist: {names}")
+    return r
