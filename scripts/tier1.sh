@@ -67,4 +67,14 @@ python -m pytest -x -q "${group5[@]}" "$@"
 # refreshes the committed ANALYSIS.json artifact)
 python scripts/analyze.py
 
+# artifact-drift gate: analyze.py rewrites ANALYSIS.json in place, so a
+# stale committed report would otherwise pass silently — the diff IS the
+# review signal, make it a failure, not a dirty working tree to notice
+if git -C . rev-parse --is-inside-work-tree >/dev/null 2>&1 \
+    && ! git diff --exit-code -- ANALYSIS.json; then
+  echo "tier1: ANALYSIS.json drifted from the committed copy —" \
+       "commit the refreshed artifact (diff above)" >&2
+  exit 1
+fi
+
 scripts/bench_smoke.sh

@@ -88,6 +88,19 @@ def signed_bits(iv: Interval) -> object:
     return max(n_lo, n_hi, 1)
 
 
+def carrier_bits(iv: Interval, *, unsigned: bool = False) -> object:
+    """Smallest register width of the carrier's signedness family holding
+    every value in ``iv``: two's-complement for signed carriers, plain
+    binary for unsigned ones (a negative bound fits no unsigned width)."""
+    if _isinf(iv.lo) or _isinf(iv.hi):
+        return INF
+    if unsigned:
+        if iv.lo < 0:
+            return INF
+        return max(int(iv.hi).bit_length(), 1)
+    return signed_bits(iv)
+
+
 def _json_bound(v):
     return None if _isinf(v) else int(v)
 
@@ -263,10 +276,12 @@ class RegisterRecord:
     lo: object
     hi: object
     visits: int = 1
+    unsigned: bool = False
 
     @property
     def required_bits(self) -> object:
-        return signed_bits(Interval(self.lo, self.hi))
+        return carrier_bits(Interval(self.lo, self.hi),
+                            unsigned=self.unsigned)
 
     @property
     def headroom_bits(self) -> object:
@@ -466,6 +481,7 @@ class _Analyzer:
         bits = _dtype_bits(dtype)
         if bits is None:
             return
+        unsigned = np.dtype(dtype).kind == "u"
         from repro.analysis.traverse import eqn_source
         key = (path, id(eqn))
         rec = self.records.get(key)
@@ -474,7 +490,7 @@ class _Analyzer:
                 name=self._name(eqn, path),
                 primitive=eqn.primitive.name, path=path,
                 source=eqn_source(eqn), dtype_bits=bits,
-                lo=iv.lo, hi=iv.hi)
+                lo=iv.lo, hi=iv.hi, unsigned=unsigned)
         else:
             rec.lo = min(rec.lo, iv.lo)
             rec.hi = max(rec.hi, iv.hi)
@@ -484,7 +500,8 @@ class _Analyzer:
             self.violations.append(OverflowViolation(
                 name=self._name(eqn, path),
                 primitive=eqn.primitive.name, source=eqn_source(eqn),
-                dtype_bits=bits, required_bits=signed_bits(iv),
+                dtype_bits=bits,
+                required_bits=carrier_bits(iv, unsigned=unsigned),
                 lo=iv.lo, hi=iv.hi))
 
     def _bind_outs(self, eqn, env, path, outs) -> None:
@@ -730,7 +747,11 @@ class _Analyzer:
     def _eval_scan(self, eqn, env, path):
         p = eqn.params
         closed = p["jaxpr"]
-        length = p.get("length", 1) or 1
+        # length 0 is a real case (zero-length chunk programs): the body
+        # never runs, the carry out IS the carry in, and the stacked ys are
+        # empty arrays (bound to [0, 0] below via the ys-None fallback)
+        length = p.get("length")
+        length = 1 if length is None else int(length)
         n_consts, n_carry = p["num_consts"], p["num_carry"]
         ins = [self._read(env, v) for v in eqn.invars]
         consts = ins[:n_consts]
@@ -858,6 +879,7 @@ class _Analyzer:
                 self._pid_stack.pop()
         else:
             self._pid_stack.append(None)
+            stable = False
             for _ in range(self.fixpoint_iters):
                 before = [c.hull() if isinstance(c, RefCell) else c
                           for c in cells]
@@ -867,7 +889,20 @@ class _Analyzer:
                 if all((not isinstance(b, Interval))
                        or (b.lo == a.lo and b.hi == a.hi)
                        for b, a in zip(before, after)):
+                    stable = True
                     break
+            if not stable:
+                # still-growing ref state after fixpoint_iters: widen every
+                # cell to TOP (mirroring _eval_scan's carry fallback — ref
+                # writes are strong updates, so no per-cell stability
+                # argument survives non-convergence) and run the body once
+                # more so reads of the widened state are recorded as
+                # violations instead of the loop exiting optimistically
+                for c in cells:
+                    if isinstance(c, RefCell):
+                        c.background = TOP
+                        c.rects = {}
+                self.eval_jaxpr(inner, cells, ppath)
             self._pid_stack.pop()
         self._grid_stack.pop()
         out_cells = cells[n_index + n_inputs:n_index + n_inputs + n_outputs]
@@ -891,13 +926,27 @@ class _Analyzer:
         return out
 
     def _eval_swap(self, eqn, env, path):
+        from jax._src.core import DropVar
         ref = env[eqn.invars[0]]
         val = self._read(env, eqn.invars[1])
         idx = [self._read(env, v) for v in eqn.invars[2:]]
         rect = ref.resolve_rect(eqn.params.get("tree"), idx)
         old = ref.read(rect)
         ref.write(rect, val)
-        return old if old is not None else val
+        if old is None:
+            # plain stores lower to swap with a DropVar result: writing an
+            # unwritten ref is fine, it's only a read-before-write when the
+            # old value is actually consumed
+            if all(isinstance(v, DropVar) for v in eqn.outvars):
+                return val
+            self.violations.append(OverflowViolation(
+                name=f"{self._name(eqn, path)} (read-before-write)",
+                primitive="swap",
+                source=self._name(eqn, path).rsplit("@", 1)[-1],
+                dtype_bits=_dtype_bits(ref.dtype) or 0,
+                required_bits=INF, lo=-INF, hi=INF))
+            old = _dtype_range(ref.dtype)
+        return old
 
 
 def analyze_intervals(closed_jaxpr, in_intervals, *,

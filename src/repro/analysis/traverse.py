@@ -112,7 +112,11 @@ def walk(jaxpr, visit: Callable, *, scale: int = 1, path: str = "",
                      path=f"{path}/pallas_call[grid={steps}]", **kw)
             continue
         if name == "scan":
-            length = eqn.params.get("length", 1) or 1
+            # a zero-length scan's body executes zero times: scale 0 keeps
+            # counts exact (the visit still happens, so legality stays
+            # conservative about code that is merely never reached)
+            length = eqn.params.get("length")
+            length = 1 if length is None else int(length)
             for jx in subjaxprs(eqn.params.get("jaxpr")):
                 walk(jx, visit, scale=scale * length,
                      path=f"{path}/scan[{length}]", **kw)

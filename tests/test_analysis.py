@@ -186,6 +186,129 @@ def test_zero_length_chunk_jaxpr_analyzes_clean():
     assert rp.target_ok(rp.analyze_target(t))
 
 
+def test_zero_length_scan_keeps_initial_carry():
+    """length=0 must NOT analyze one body iteration: the true carry out is
+    the initial carry (a step(init) result like [1000, 1005] would exclude
+    every real output — unsound, not just loose)."""
+    def f(c):
+        out, _ = jax.lax.scan(lambda c, _: (c + 1000, c), c, None, length=0)
+        return out
+    jx = jax.make_jaxpr(f)(jnp.zeros((), jnp.int32))
+    r = analyze_intervals(jx, [Interval(0, 5)])
+    assert r.ok
+    assert r.out_intervals[0] == Interval(0, 5)
+    # census: the body executes zero times, so it contributes zero ops
+    assert census(f, jnp.zeros((), jnp.int32))["add"] == 0
+
+
+def test_pallas_fixpoint_nonconvergence_widens_to_top():
+    """A grid past grid_unroll_limit whose ref state never stabilizes in
+    fixpoint_iters must widen to TOP and FAIL — exiting with the partial
+    state would certify e.g. [1, 64] for a 8192-step accumulator and claim
+    'PROVEN int32-safe' for an overflowing program."""
+    from jax.experimental import pallas as pl
+
+    def k(o_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _():
+            o_ref[...] = jnp.zeros_like(o_ref)
+        o_ref[...] += 1
+
+    jx = jax.make_jaxpr(
+        lambda: pl.pallas_call(
+            k, out_shape=jax.ShapeDtypeStruct((8,), jnp.int32),
+            grid=(8192,), interpret=True)())()
+    r = analyze_intervals(jx, [])
+    assert not r.ok
+    assert r.out_intervals[0].hi == float("inf")
+
+
+def test_pallas_fixpoint_convergent_large_grid_stays_tight():
+    """The widening fallback must only fire on non-convergence: a
+    per-block copy kernel over the same huge grid stabilizes immediately
+    and keeps the input bound."""
+    from jax.experimental import pallas as pl
+
+    def k(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    jx = jax.make_jaxpr(
+        lambda x: pl.pallas_call(
+            k, out_shape=jax.ShapeDtypeStruct((8192, 8), jnp.int32),
+            grid=(8192,),
+            in_specs=[pl.BlockSpec((1, 8), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((1, 8), lambda i: (i, 0)),
+            interpret=True)(x))(jnp.zeros((8192, 8), jnp.int32))
+    r = analyze_intervals(jx, [Interval(-128, 127)])
+    assert r.ok
+    assert r.out_intervals[0] == Interval(-128, 127)
+
+
+class _Var:
+    """Hashable jaxpr-var stand-in (SimpleNamespace defines __eq__ and so
+    can't key the interpreter's env dict)."""
+
+    def __init__(self, aval=None):
+        self.aval = aval
+
+
+def _swap_eqn(outvars):
+    return types.SimpleNamespace(
+        primitive=types.SimpleNamespace(name="swap"),
+        invars=[_Var(), _Var()], outvars=outvars, params={"tree": None})
+
+
+def test_swap_of_unwritten_ref_flags_read_before_write():
+    """swap whose old value is USED must report the same read-before-write
+    violation as get and return the dtype range, not the newly written
+    value (optimistic)."""
+    from jax._src import core
+    from repro.analysis.intervals import RefCell, _Analyzer, _dtype_range
+
+    a = _Analyzer()
+    cell = RefCell((8,), np.int32, None)
+    eqn = _swap_eqn([_Var(core.ShapedArray((8,), np.int32))])
+    env = {eqn.invars[0]: cell, eqn.invars[1]: Interval(5, 5)}
+    out = a._eval_swap(eqn, env, "t")
+    assert out == _dtype_range(np.int32)
+    assert len(a.violations) == 1
+    assert "(read-before-write)" in a.violations[0].name
+
+
+def test_first_store_to_unwritten_ref_is_clean():
+    """Plain stores lower to swap with a DropVar result: the first write
+    to an output/scratch ref reads nothing and must not be flagged."""
+    from jax._src import core
+    from repro.analysis.intervals import RefCell, _Analyzer
+
+    a = _Analyzer()
+    cell = RefCell((8,), np.int32, None)
+    eqn = _swap_eqn([core.DropVar(core.ShapedArray((8,), np.int32))])
+    env = {eqn.invars[0]: cell, eqn.invars[1]: Interval(5, 5)}
+    assert a._eval_swap(eqn, env, "t") == Interval(5, 5)
+    assert not a.violations
+    assert cell.hull() == Interval(5, 5)
+
+
+def test_unsigned_registers_use_unsigned_carrier_bits():
+    """uint32 holding [0, 2^32-1] needs 32 unsigned bits (headroom 0), not
+    the 33 two's-complement bits that would distort the report with
+    negative headroom for a value that fits."""
+    from repro.analysis.intervals import INF, carrier_bits, signed_bits
+
+    full = Interval(2**31, 2**32 - 1)
+    assert signed_bits(full) == 33
+    assert carrier_bits(full, unsigned=True) == 32
+    assert carrier_bits(Interval(-1, 3), unsigned=True) == INF
+
+    jx = jax.make_jaxpr(lambda x: x + jnp.uint32(0))(
+        jnp.zeros((4,), jnp.uint32))
+    r = analyze_intervals(jx, [Interval(0, 2**32 - 1)])
+    assert r.ok
+    assert r.max_required_bits == 32
+    assert r.min_headroom_bits == 0
+
+
 # ---------------------------------------------------------------------------
 # determinism lint
 # ---------------------------------------------------------------------------
