@@ -22,12 +22,15 @@ Pallas streaming kernel (``kernels.fir_mp_stream_q``): the census
 recurses into ``pallas_call`` kernel jaxprs scaled by the grid product,
 so the gate covers the VMEM-resident datapath as lowered.
 
-The walk itself lives in ``repro.analysis`` (``census`` and
-``assert_multiplierless`` here are the package's, re-exported for
-compatibility): the same traversal backs the op-legality verifier and the
-worst-case interval pass, so the benchmark numbers and the
-``scripts/analyze.py`` gate can never disagree about what a program
-contains. This module also surfaces the analysis summary (bitwidth
+Since the IR refactor the integer censuses are computed by lowering each
+program to the typed fixed-point IR (``repro.ir``) and counting with the
+IR census pass — the same lowering the interpreter, the XLA re-emitter and
+the C/ROM generator consume — with a runtime assertion that the counts are
+EXACTLY the legacy jaxpr-walk numbers (``repro.analysis.legality``, which
+still backs the float rows and the op-legality verifier). The committed
+``hw.*`` rows are therefore pinned byte-identical across the rebase, and
+the benchmark, ``scripts/analyze.py`` and the hardware artifacts under
+``artifacts/ir/`` can never disagree about what a program contains. This module also surfaces the analysis summary (bitwidth
 headroom per target, the session-accumulator safety envelope) as bench
 rows so headroom is tracked across PRs alongside the op counts.
 
@@ -45,13 +48,32 @@ import jax.numpy as jnp
 
 from benchmarks.common import row
 from repro.analysis import assert_multiplierless, census  # noqa: F401
+from repro.analysis.legality import census_jaxpr
 from repro.core.filterbank import FilterBank, FilterBankConfig
 from repro.core import fixed
 from repro.core import kernel_machine as km
 from repro.core.pipeline import InFilterPipeline
+from repro.ir import build_program, census_program
 
 FS = 16000.0
 N = 16000  # 1 s
+
+
+def census_ir(fn, *args, tag: str) -> Counter:
+    """Census an integer program THROUGH the typed IR: trace, lower with
+    ``repro.ir.build`` (which rejects anything outside the multiplierless
+    contract), and count with the IR census pass. Pinned at runtime
+    against the legacy jaxpr walk — if the lowering ever re-associates or
+    drops an op, the committed ``hw.*`` rows can't silently move; the
+    bench fails instead."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    c_ir = census_program(build_program(jaxpr, name=tag))
+    c_jx = census_jaxpr(jaxpr)
+    if dict(c_ir) != dict(c_jx):
+        raise AssertionError(
+            f"{tag}: IR census {dict(c_ir)} != jaxpr census {dict(c_jx)} "
+            "— the IR lowering moved the pinned hw.* numbers")
+    return c_ir
 
 
 def lut_estimate(c: Counter) -> float:
@@ -160,11 +182,12 @@ def main(argv=()):
         pipe = _fixed_pipeline(base._replace(mode=mode, numerics="fixed"))
         prog = pipe.fixed_program()
         xq = fixed.quantize_signal(prog, x)
-        c = census(lambda q: fixed.infer_q(prog, q), xq)
+        c = census_ir(lambda q: fixed.infer_q(prog, q), xq, tag=tag)
         assert_multiplierless(c, tag)
         emit_rows(tag, c, n)
         row(f"hw.{tag}.multiplierless_assert", None,
-            "PASS (0 multiplies, 0 divides in the integer jaxpr)")
+            "PASS (0 multiplies, 0 divides in the integer IR, counts "
+            "pinned == jaxpr census)")
 
     # --- the integer STREAMING step: what a deployed FPGA actually runs --
     # per sensor packet (delay-line splice, kept-only decimation, readout
@@ -178,13 +201,13 @@ def main(argv=()):
         state = pipe.init_session(1)
         xq = fixed.quantize_signal(prog, jnp.zeros((1, chunk_len)))
         nv = jnp.full((1,), chunk_len, jnp.int32)
-        c = census(lambda st, q, v: fixed.session_step_q(prog, st, q, v),
-                   state, xq, nv)
+        c = census_ir(lambda st, q, v: fixed.session_step_q(prog, st, q, v),
+                      state, xq, nv, tag=tag)
         assert_multiplierless(c, tag)
         emit_rows(tag, c, chunk_len)
         row(f"hw.{tag}.multiplierless_assert", None,
-            f"PASS (0 mul/div in the per-chunk int32 streaming jaxpr, "
-            f"chunk={chunk_len})")
+            f"PASS (0 mul/div in the per-chunk int32 streaming IR, "
+            f"chunk={chunk_len}, counts pinned == jaxpr census)")
 
     # --- the int PALLAS streaming step: the census recurses into the
     # pallas_call kernel jaxpr (scaled by the grid product), so the hard
@@ -197,13 +220,14 @@ def main(argv=()):
     state = pipe.init_session(1)
     xq = fixed.quantize_signal(prog, jnp.zeros((1, chunk_len)))
     nv = jnp.full((1,), chunk_len, jnp.int32)
-    c = census(lambda st, q, v: pipe._cascade_pallas_fixed(prog, st, q, v),
-               state, xq, nv)
+    c = census_ir(
+        lambda st, q, v: pipe._cascade_pallas_fixed(prog, st, q, v),
+        state, xq, nv, tag=tag)
     assert_multiplierless(c, tag)
     emit_rows(tag, c, chunk_len)
     row(f"hw.{tag}.multiplierless_assert", None,
-        f"PASS (0 mul/div in the Pallas-lowered per-chunk int32 jaxpr, "
-        f"chunk={chunk_len})")
+        f"PASS (0 mul/div in the Pallas-lowered per-chunk int32 IR, "
+        f"chunk={chunk_len}, counts pinned == jaxpr census)")
 
     emit_analysis_rows(args.smoke)
 

@@ -45,6 +45,16 @@ from repro.serving import StreamServer
 ROUNDS = 2  # chunks per stream per timed call
 
 
+def _pow2_at_least(n: int) -> int:
+    """Smallest power of two >= n: the server validates its chunk bounds
+    as pow2 (the bucket-ladder contract), so an arbitrary packet length
+    maps to the bucket it would pad into."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
 def main(argv=()):
     ap = argparse.ArgumentParser()
     ap.add_argument("--slots", type=int, default=256)
@@ -108,7 +118,7 @@ def main(argv=()):
         f"{S * ROUNDS / us_naive * 1e6:.0f} chunks/s")
 
     # -- slot-batched server: ONE donated compiled call per round -----------
-    server = StreamServer(pipe, capacity=S, max_chunk=CH)
+    server = StreamServer(pipe, capacity=S, max_chunk=_pow2_at_least(CH))
     ids = [f"s{i:04d}" for i in range(S)]
     for sid in ids:
         server.open(sid)
@@ -130,7 +140,8 @@ def main(argv=()):
     # -- stateful Pallas streaming kernel vs the XLA session step -----------
     if args.stream_impl == "both":
         pipe_k = _pipe("pallas")
-        server_k = StreamServer(pipe_k, capacity=S, max_chunk=CH)
+        server_k = StreamServer(pipe_k, capacity=S,
+                                max_chunk=_pow2_at_least(CH))
         for sid in ids:
             server_k.open(sid)
 
@@ -148,7 +159,8 @@ def main(argv=()):
         # full SessionState, not just the argmax
         fresh, regs = [], []
         for impl in ("xla", "pallas"):
-            srv = StreamServer(_pipe(impl), capacity=S, max_chunk=CH)
+            srv = StreamServer(_pipe(impl), capacity=S,
+                               max_chunk=_pow2_at_least(CH))
             for sid in ids:
                 srv.open(sid)
             res = None

@@ -82,7 +82,7 @@ def main():
     from repro.serving import StreamServer
     events = np.asarray(stream)
     server = StreamServer(pipe, capacity=min(4, events.shape[0]),
-                          max_chunk=max(chunk, 16))
+                          max_chunk=max(16, 1 << (chunk - 1).bit_length()))
     ids = [f"sensor-{e}" for e in range(server.capacity)]
     for sid in ids:
         server.open(sid)

@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Emit the committed hardware artifacts from the typed fixed-point IR.
+
+Lowers the deployed integer programs (the same targets
+``scripts/analyze.py`` gates, full config) through ``repro.ir`` and writes,
+per executable target, the synthesizable artifact set under
+``artifacts/ir/<target>/``:
+
+    program.c     -- one-file C reference of the whole datapath (int32
+                     two's-complement, shift/add/compare only; compiles
+                     with any C99 compiler, ``main`` reads/writes raw
+                     little-endian register images)
+    rom/<n>.mem   -- one $readmemh init file per constant ROM (taps,
+                     mu/sigma, shift tables, classifier weights)
+    ir.json       -- the machine-readable program: op census (pinned ==
+                     the jaxpr-walk census), instruction/ROM totals, and
+                     the full typed register table with proven worst-case
+                     intervals and minimal two's-complement widths
+
+Pallas-grid targets have no sequential SSA execution, so they get only an
+``ir.json`` (census + register table) — their bit-exactness is covered by
+the kernel parity tests, their counts by the census pin here.
+
+Everything written is DETERMINISTIC (no timestamps, sorted keys, fixed
+target order): tier-1 regenerates the tree and fails on ``git diff``,
+exactly like ANALYSIS.json — a PR that changes the deployed datapath must
+commit the new hardware artifacts, and drift without a source change is an
+error.
+
+    PYTHONPATH=src python scripts/emit_ir.py              # full config
+    PYTHONPATH=src python scripts/emit_ir.py --smoke --out-dir /tmp/ir
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+# the two sequential deployment programs get the full artifact set; the
+# grid (Pallas) twins are census/typing surfaces only
+EXECUTABLE_TARGETS = ("oneshot_q", "session_step_q")
+CENSUS_TARGETS = ("oneshot_q_pallas", "stream_pallas")
+
+
+def emit_target(t, out_dir: str) -> dict:
+    from repro.analysis.legality import census_jaxpr
+    from repro.ir import build_program, census_program
+    from repro.ir.cgen import emit_c, emit_rom_mem
+
+    prog = build_program(t.jaxpr, name=t.name, in_intervals=t.in_intervals)
+    c_ir = dict(census_program(prog))
+    c_jx = dict(census_jaxpr(t.jaxpr))
+    if c_ir != c_jx:
+        raise AssertionError(
+            f"{t.name}: IR census {c_ir} != jaxpr census {c_jx}")
+
+    tdir = os.path.join(out_dir, t.name)
+    if os.path.isdir(tdir):
+        shutil.rmtree(tdir)
+    os.makedirs(tdir)
+
+    if prog.executable:
+        with open(os.path.join(tdir, "program.c"), "w") as f:
+            f.write(emit_c(prog))
+        romdir = os.path.join(tdir, "rom")
+        os.makedirs(romdir)
+        for fname, text in sorted(emit_rom_mem(prog).items()):
+            with open(os.path.join(romdir, fname), "w") as f:
+                f.write(text)
+
+    doc = {
+        "name": t.name,
+        "executable": prog.executable,
+        "census": {k: int(v) for k, v in sorted(c_ir.items())},
+        "num_instrs": prog.num_instrs(),
+        "num_inputs": len(prog.inputs),
+        "num_outputs": len(prog.outputs),
+        "num_registers": len(prog.regs),
+        "num_roms": len(prog.roms),
+        "rom_bytes": prog.rom_bytes(),
+        "roms": [{"name": r.name, "shape": list(r.shape)}
+                 for r in prog.roms],
+        "registers": prog.register_table(),
+    }
+    with open(os.path.join(tdir, "ir.json"), "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return {"name": t.name, "executable": prog.executable,
+            "census": doc["census"], "num_instrs": doc["num_instrs"],
+            "rom_bytes": doc["rom_bytes"]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (NOT the committed artifacts; "
+                         "use --out-dir)")
+    ap.add_argument("--out-dir", default=None,
+                    help="output tree (default: artifacts/ir at the repo "
+                         "root; required with --smoke)")
+    args = ap.parse_args(argv)
+
+    out_dir = args.out_dir
+    if out_dir is None:
+        if args.smoke:
+            ap.error("--smoke regenerates different numbers; give an "
+                     "explicit --out-dir so the committed artifacts/ir "
+                     "tree is never clobbered with smoke output")
+        out_dir = os.path.join(REPO, "artifacts", "ir")
+    os.makedirs(out_dir, exist_ok=True)
+
+    from repro.analysis.targets import build_targets
+
+    targets, _meta = build_targets(smoke=args.smoke)
+    by_name = {t.name: t for t in targets}
+    summary = []
+    for name in EXECUTABLE_TARGETS + CENSUS_TARGETS:
+        s = emit_target(by_name[name], out_dir)
+        summary.append(s)
+        kind = "C+ROM+json" if s["executable"] else "census json"
+        print(f"{name}: {kind}  instrs={s['num_instrs']} "
+              f"rom_bytes={s['rom_bytes']} census={s['census']}")
+    print(f"wrote {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,8 +38,9 @@ fi
 group1=(tests/test_fixed.py tests/test_golden.py tests/test_quant.py)
 group2=(tests/test_streaming_parity.py tests/test_kernels.py
         tests/test_analysis.py)
-group3=(tests/test_pipeline.py tests/test_ssm.py)
-group4=(tests/test_serving.py tests/test_slot_surgery.py)
+group3=(tests/test_pipeline.py tests/test_ssm.py tests/test_ir.py)
+group4=(tests/test_serving.py tests/test_slot_surgery.py
+        tests/test_server_contract.py)
 group5=(tests/test_archs.py tests/test_checkpoint.py
         tests/test_distributed.py tests/test_filterbank.py
         tests/test_hlo_cost.py tests/test_kernel_machine.py
@@ -74,6 +75,19 @@ if git -C . rev-parse --is-inside-work-tree >/dev/null 2>&1 \
     && ! git diff --exit-code -- ANALYSIS.json; then
   echo "tier1: ANALYSIS.json drifted from the committed copy —" \
        "commit the refreshed artifact (diff above)" >&2
+  exit 1
+fi
+
+# hardware-artifact drift gate: regenerate the IR-derived C/ROM/register
+# artifacts (full config, deterministic) and fail if they moved — a PR
+# that changes the deployed datapath must commit the new artifacts/ir
+# tree, and artifact drift without a source change is a bug in the
+# emitters, not noise
+python scripts/emit_ir.py
+if git -C . rev-parse --is-inside-work-tree >/dev/null 2>&1 \
+    && ! git diff --exit-code -- artifacts/ir; then
+  echo "tier1: artifacts/ir drifted from the committed tree —" \
+       "commit the regenerated hardware artifacts (diff above)" >&2
   exit 1
 fi
 

@@ -331,6 +331,10 @@ class IntervalResult:
     min_headroom_bits: object
     max_required_bits: object
     unsupported: list                # primitives handled conservatively
+    # per-equation records keyed ``(path, id(eqn))`` — the lookup the IR
+    # builder (repro.ir.build) uses to type registers; only valid while
+    # the analyzed jaxpr objects are alive (same-process consumption)
+    records_by_eqn: dict = dataclasses.field(default_factory=dict)
 
     def to_dict(self, *, top_registers: int = 20) -> dict:
         return {
@@ -975,4 +979,5 @@ def analyze_intervals(closed_jaxpr, in_intervals, *,
                        for o in outs],
         min_headroom_bits=min(heads) if heads else INF,
         max_required_bits=max(reqs) if reqs else 0,
-        unsupported=a.unsupported)
+        unsupported=a.unsupported,
+        records_by_eqn=dict(a.records))

@@ -1,0 +1,31 @@
+"""Typed fixed-point op-stream IR with pluggable backends.
+
+The explicit lowering artifact between ``fixed.compile_pipeline`` and the
+paper's Spartan-7 target (ROADMAP: "unify program lowering into a small
+fixed-point IR"). ``repro.analysis`` is the front half — its traversal
+and worst-case interval facts type the registers; this package is the
+back half:
+
+* :mod:`repro.ir.isa`    — the instruction set + typed register model
+* :mod:`repro.ir.build`  — jaxpr -> IR lowering (1:1, multiplierless by
+  construction)
+* :mod:`repro.ir.interp` — pure-Python/numpy ground-truth executor
+* :mod:`repro.ir.xla`    — emitter back to the XLA int path
+* :mod:`repro.ir.cgen`   — synthesizable fixed-point C + ROM ``.mem``
+  artifact emitter (deterministic bytes, drift-gated in tier-1)
+* :mod:`repro.ir.census` — the hardware-op census as an IR pass
+
+All four consumers are bit-for-bit: interpreter, XLA emitter and compiled
+C reference reproduce ``fixed.infer_q`` exactly on the golden fixtures
+(tests/test_ir.py), and the IR census equals the jaxpr census exactly
+(pinned in benchmarks/hardware_cost.py).
+"""
+
+from repro.ir.build import BuildError, build_program
+from repro.ir.census import census_program
+from repro.ir.isa import Instr, Program, Reg, Region, Rom
+
+__all__ = [
+    "BuildError", "build_program", "census_program",
+    "Instr", "Program", "Reg", "Region", "Rom",
+]

@@ -1,0 +1,53 @@
+"""Hardware-op census as an IR pass.
+
+Counts the same multiply/add/compare/shift buckets as
+``repro.analysis.legality.census_jaxpr``, over IR instructions instead of
+jaxpr equations. Because the builder lowers 1:1 (one instruction per leaf
+equation, ``loop``/``grid`` regions scaled by trip count, pow2-literal
+muls already classified as shifts by the legality rules), the totals are
+EXACTLY the jaxpr-walk numbers — ``benchmarks/hardware_cost.py`` pins the
+two against each other at runtime, so the committed ``hw.*`` rows cannot
+move. Bucket membership is imported from ``legality`` (single source of
+truth): each instruction is classified by the jax primitive it was
+lowered from, which is precisely what the jaxpr walk classifies.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.analysis.legality import (ADD_OPS, CMP_OPS, REDUCE_ADD_OPS,
+                                     REDUCE_CMP_OPS, SHIFT_OPS)
+
+
+def census_program(prog) -> Counter:
+    """Scaled op census of an IR :class:`~repro.ir.isa.Program` —
+    the drop-in equal of ``legality.census_jaxpr`` on the jaxpr the
+    program was lowered from."""
+    counts: Counter = Counter()
+
+    def visit(instrs, scale: int) -> None:
+        for ins in instrs:
+            if ins.op in ("loop", "grid"):
+                for rg in ins.regions:
+                    visit(rg.body, scale * rg.trip_count)
+                continue
+            prim = ins.jax_prim
+            n = ins.census_out_elems
+            if prim == "mul":
+                # the builder only admits pow2-literal scalings, which the
+                # jaxpr census already counts as shifts
+                counts["shift"] += n * scale
+            elif prim in ADD_OPS:
+                counts["add"] += n * scale
+            elif prim in CMP_OPS:
+                counts["compare"] += n * scale
+            elif prim in SHIFT_OPS:
+                counts["shift"] += n * scale
+            elif prim in REDUCE_ADD_OPS:
+                counts["add"] += max(ins.census_in_elems - n, 0) * scale
+            elif prim in REDUCE_CMP_OPS:
+                counts["compare"] += max(ins.census_in_elems - n, 0) * scale
+
+    visit(prog.body, 1)
+    return counts

@@ -44,8 +44,11 @@ def _serve_acoustic(args):
                          numerics=args.numerics,
                          fixed_amax=args.fixed_amax)
     fs = pipe.config.fs
+    # chunk bounds must be powers of two (the server's bucket-ladder
+    # contract): round the packet length up to the bucket it pads into
     server = StreamServer(pipe, capacity=args.streams,
-                          max_chunk=max(args.chunk, 16))
+                          max_chunk=max(16, 1 << (args.chunk - 1)
+                                        .bit_length()))
     rng = np.random.default_rng(args.seed)
     ids = [f"mic-{i:03d}" for i in range(args.streams)]
     for sid in ids:

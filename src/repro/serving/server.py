@@ -68,7 +68,11 @@ class StreamServer:
                     ``stats()["numerics"]`` reports the live mode).
     capacity:       number of slots S (streams resident at once).
     max_chunk:      largest per-call chunk; longer packets are split.
+                    Must be a power of two (validated at construction).
     min_chunk:      smallest pad bucket (tiny packets share one variant).
+                    Must be a power of two — the bucket ladder doubles
+                    from ``min_chunk`` to ``max_chunk``, giving at most
+                    ``log2(max_chunk / min_chunk) + 1`` compiled variants.
     dtype:          register/sample dtype; incoming chunks are cast to it
                     explicitly (the session dtype never drifts mid-stream).
     evict_after:    seconds of idleness before a resident session may be
@@ -89,6 +93,17 @@ class StreamServer:
             raise ValueError("capacity must be >= 1")
         if not (0 < min_chunk <= max_chunk):
             raise ValueError("need 0 < min_chunk <= max_chunk")
+        # BOTH bounds must be powers of two: bucket_length doubles up from
+        # min_chunk, so a non-pow2 min makes every bucket non-pow2 (novel
+        # compiled variants per length) and a non-pow2 max clamps the top
+        # bucket off the pow2 grid — either way the O(log max/min) retrace
+        # bound quietly stops holding. Fail at construction, not after the
+        # compile cache has already ballooned.
+        for bname, v in (("min_chunk", min_chunk), ("max_chunk", max_chunk)):
+            if v & (v - 1):
+                raise ValueError(
+                    f"{bname} must be a power of two, got {v} (the pad-"
+                    "bucket ladder doubles from min_chunk to max_chunk)")
         # fail at construction, not on the first feed(): the Pallas
         # streaming kernel has no MAC-mode variant
         if pipeline.config.stream_impl == "pallas" \
@@ -141,6 +156,10 @@ class StreamServer:
         self._max_history = max_history
         self.bucket_counts: dict[int, int] = {}  # bucket length -> steps run
         self.steps_run = 0
+        # set when a donated step call raised mid-feed: the failed call
+        # consumed the slot-batched state's buffers, so every resident
+        # session's registers are gone — the description names the wave
+        self._poisoned: Optional[str] = None
 
     # -- introspection -------------------------------------------------------
 
@@ -149,7 +168,10 @@ class StreamServer:
         return self._state
 
     def session(self, session_id: str) -> Session:
-        return self._sessions[session_id]
+        try:
+            return self._sessions[session_id]
+        except KeyError:
+            raise KeyError(f"session {session_id!r} is not open") from None
 
     def sessions(self) -> list:
         return sorted(self._sessions.values(), key=lambda s: s.slot)
@@ -176,6 +198,7 @@ class StreamServer:
         numerics modes — an evicted fixed-mode session's integer registers
         round-trip the named-checkpoint store losslessly (dtype-checked),
         so a reopened int32 stream continues bit-for-bit."""
+        self._check_poisoned()
         if session_id in self._sessions:
             raise ValueError(f"session {session_id!r} already open")
         # validate at admission (checkpoint-name charset), BEFORE any state
@@ -210,6 +233,8 @@ class StreamServer:
         (float or integer registers alike) for a later ``open`` (same as
         eviction); otherwise any parked copy is discarded — a future
         ``open`` of this id starts fresh."""
+        if session_id not in self._sessions:
+            raise KeyError(f"session {session_id!r} is not open")
         sess = self._sessions.pop(session_id)
         if checkpoint:
             self._park(sess)
@@ -222,7 +247,12 @@ class StreamServer:
 
     def evict(self, session_id: str) -> Session:
         """Park a resident session in the checkpoint store and free its
-        slot. Requires ``checkpoint_dir``."""
+        slot. Requires ``checkpoint_dir``. An unknown id is reported as
+        such (the same ``KeyError`` shape every lookup raises) BEFORE the
+        checkpoint-manager check — "no checkpoint_dir" for a session that
+        isn't even resident was a misdiagnosis."""
+        if session_id not in self._sessions:
+            raise KeyError(f"session {session_id!r} is not open")
         if self._manager is None:
             raise RuntimeError("evict() needs checkpoint_dir")
         return self.close(session_id, checkpoint=True)
@@ -233,6 +263,15 @@ class StreamServer:
         row = pl.take_slot(self._state, sess.slot)
         self._manager.save_named(self._ckpt_name(sess.id), row,
                                  meta=sess.meta())
+
+    def _check_poisoned(self) -> None:
+        if self._poisoned is not None:
+            raise RuntimeError(
+                f"server is poisoned: {self._poisoned}. The failed step "
+                "consumed the donated slot-batched state, so every "
+                "resident session's registers are unrecoverable — build "
+                "a new StreamServer and reopen sessions from their "
+                "checkpoints")
 
     @staticmethod
     def _ckpt_name(session_id: str) -> str:
@@ -275,6 +314,7 @@ class StreamServer:
         bit-for-bit (a float server matches to f32 round-off, bit-for-bit
         under ``quant_bits`` once the running amax has seen the peak).
         """
+        self._check_poisoned()
         reqs = []
         for r in requests:
             if isinstance(r, FeedRequest):
@@ -298,7 +338,9 @@ class StreamServer:
 
         last_p: dict[int, tuple] = {}  # request index -> (label, conf)
         pending = [list(segs) for _, segs in reqs]
+        wave_no = 0
         while any(pending):
+            wave_no += 1
             wave, seen, finals = [], set(), []
             for i, (sid, _) in enumerate(reqs):
                 if pending[i] and sid not in seen:
@@ -318,8 +360,25 @@ class StreamServer:
             if self._chunk_sharding is not None:
                 chunk_dev = jax.device_put(chunk_dev, self._chunk_sharding)
                 valid_dev = jax.device_put(valid_dev, self._valid_sharding)
-            self._state, p = self._step(self.pipeline, self._state,
-                                        chunk_dev, valid_dev)
+            # the step donates self._state: if the call raises, the old
+            # buffers are already consumed and there is no state to roll
+            # back to — mid-multi-wave the earlier waves are absorbed and
+            # the rest never ran, so no resident register set is
+            # trustworthy. Poison the server (feed/open fail loudly from
+            # here on, naming this wave) rather than limping on with a
+            # half-stepped or invalidated state.
+            try:
+                self._state, p = self._step(self.pipeline, self._state,
+                                            chunk_dev, valid_dev)
+            except Exception as e:
+                self._poisoned = (
+                    f"step raised {type(e).__name__} on wave {wave_no} of "
+                    f"a feed() call (bucket {L}, sessions "
+                    f"{sorted(sid for _, sid, _ in wave)})")
+                raise RuntimeError(
+                    f"feed() failed: {self._poisoned}; the donated session "
+                    "state was consumed by the failed call — the server "
+                    "is now poisoned") from e
             self.steps_run += 1
             self.bucket_counts[L] = self.bucket_counts.get(L, 0) + 1
             # host readback (a device sync) only when some request ends on

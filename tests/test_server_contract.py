@@ -1,0 +1,184 @@
+"""StreamServer serving-contract regressions: pow2 chunk-bound
+validation, poisoned donated state after a failed step, normalized
+unknown-session errors, and the bucket-ladder retrace bound.
+
+Companion to tests/test_serving.py (lifecycle/parity); this file pins the
+CONTRACT fixes: every constructor/lookup misuse fails loudly, with the
+documented message shape, before it can cost a slot, a compile-cache
+entry, or — worst — silently continue on donated-away register state.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kernel_machine as km
+from repro.core.filterbank import FilterBank, FilterBankConfig
+from repro.core.pipeline import InFilterPipeline
+from repro.serving import StreamServer, bucket_length
+
+
+def _pipeline() -> InFilterPipeline:
+    cfg = FilterBankConfig(fs=8000.0, num_octaves=3, filters_per_octave=3,
+                           mode="mp", gamma_f=4.0)
+    fb = FilterBank(cfg)
+    P = cfg.num_filters
+    clf = km.init_params(jax.random.PRNGKey(0), P, 5)
+    mu = jax.random.normal(jax.random.PRNGKey(1), (P,)) * 0.1 + 1.0
+    sigma = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (P,))) + 0.5
+    return InFilterPipeline.from_filterbank(fb, clf, mu, sigma)
+
+
+@pytest.fixture(scope="module")
+def pipe():
+    return _pipeline()
+
+
+# ---------------------------------------------------------------------------
+# pow2 validation at construction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    dict(min_chunk=24, max_chunk=256),     # non-pow2 min
+    dict(min_chunk=16, max_chunk=3000),    # non-pow2 max
+    dict(min_chunk=48, max_chunk=96),      # both
+])
+def test_non_pow2_chunk_bounds_rejected(pipe, kw):
+    with pytest.raises(ValueError, match="power of two"):
+        StreamServer(pipe, capacity=2, **kw)
+
+
+def test_pow2_chunk_bounds_accepted(pipe):
+    srv = StreamServer(pipe, capacity=2, min_chunk=16, max_chunk=256)
+    assert (srv.min_chunk, srv.max_chunk) == (16, 256)
+    # degenerate single-bucket ladder is legal too
+    StreamServer(pipe, capacity=2, min_chunk=64, max_chunk=64)
+
+
+def test_non_pow2_rejection_beats_other_work(pipe):
+    # the constructor must fail BEFORE compiling/allocating session state
+    with pytest.raises(ValueError, match="power of two"):
+        StreamServer(pipe, capacity=2, min_chunk=100, max_chunk=100)
+
+
+# ---------------------------------------------------------------------------
+# bucket-ladder property: the O(log) retrace bound, checked exhaustively
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_length_distinct_bucket_bound():
+    """For ANY stream of lengths, pow2 bounds admit at most
+    log2(max/min) + 1 distinct buckets — the compiled-variant bound the
+    server's docstring promises."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        lo = 2 ** int(rng.integers(0, 8))
+        hi = lo * 2 ** int(rng.integers(0, 8))
+        ns = rng.integers(1, 4 * hi, size=500)
+        buckets = {bucket_length(int(n), lo, hi) for n in ns}
+        assert len(buckets) <= int(math.log2(hi // lo)) + 1
+        for b in buckets:
+            assert lo <= b <= hi and (b & (b - 1)) == 0
+
+
+def test_bucket_length_covers_and_clamps():
+    assert bucket_length(1, 16, 256) == 16
+    assert bucket_length(17, 16, 256) == 32
+    assert bucket_length(256, 16, 256) == 256
+    assert bucket_length(10_000, 16, 256) == 256   # clamped: feed() splits
+    with pytest.raises(ValueError):
+        bucket_length(0, 16, 256)
+
+
+# ---------------------------------------------------------------------------
+# poisoned donated state after a failed step
+# ---------------------------------------------------------------------------
+
+
+def test_step_failure_poisons_server(pipe):
+    srv = StreamServer(pipe, capacity=2, min_chunk=16, max_chunk=64)
+    srv.open("a")
+    srv.feed([("a", np.zeros(32, np.float32))])      # healthy first
+
+    boom = RuntimeError("device OOM")
+
+    def bad_step(p, state, chunk, valid):
+        raise boom
+
+    srv._step = bad_step
+    # chunk of 160 with max_chunk=64 -> 3 waves; the failure happens on
+    # wave 1 and must name it
+    with pytest.raises(RuntimeError, match=r"wave 1") as ei:
+        srv.feed([("a", np.zeros(160, np.float32))])
+    assert ei.value.__cause__ is boom
+
+    # every subsequent feed/open fails loudly, still naming the wave —
+    # the donated state is gone, silently continuing would serve garbage
+    with pytest.raises(RuntimeError, match="poisoned") as ei:
+        srv.feed([("a", np.zeros(32, np.float32))])
+    assert "wave 1" in str(ei.value)
+    with pytest.raises(RuntimeError, match="poisoned"):
+        srv.open("b")
+
+
+def test_step_failure_mid_multi_wave_names_later_wave(pipe):
+    srv = StreamServer(pipe, capacity=2, min_chunk=16, max_chunk=64)
+    srv.open("a")
+    real_step = srv._step
+    calls = {"n": 0}
+
+    def flaky_step(p, state, chunk, valid):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("transient")
+        return real_step(p, state, chunk, valid)
+
+    srv._step = flaky_step
+    # 3 segments -> wave 2 of THIS feed() call fails (first wave absorbed)
+    with pytest.raises(RuntimeError, match=r"wave 2"):
+        srv.feed([("a", np.zeros(192, np.float32))])
+    with pytest.raises(RuntimeError, match="poisoned"):
+        srv.feed([("a", np.zeros(16, np.float32))])
+
+
+def test_healthy_server_is_not_poisoned(pipe):
+    srv = StreamServer(pipe, capacity=2, min_chunk=16, max_chunk=64)
+    srv.open("a")
+    srv.feed([("a", np.zeros(200, np.float32))])     # multi-wave, fine
+    srv.feed([("a", np.zeros(16, np.float32))])
+    assert srv.stats()["steps_run"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# normalized unknown-session errors: one shape everywhere
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_session_error_shape_is_uniform(pipe, tmp_path):
+    srv = StreamServer(pipe, capacity=2, min_chunk=16, max_chunk=64,
+                       checkpoint_dir=str(tmp_path))
+    srv.open("real")
+    for call in (lambda: srv.session("ghost"),
+                 lambda: srv.close("ghost"),
+                 lambda: srv.evict("ghost"),
+                 lambda: srv.feed([("ghost", np.zeros(16, np.float32))])):
+        with pytest.raises(KeyError, match=r"session 'ghost' is not open"):
+            call()
+    # the known session still works after each failed lookup
+    srv.feed([("real", np.zeros(16, np.float32))])
+
+
+def test_evict_unknown_session_reports_session_not_checkpoint_dir(pipe):
+    # no checkpoint_dir AND unknown id: the session lookup must win —
+    # "needs checkpoint_dir" for a non-resident id was a misdiagnosis
+    srv = StreamServer(pipe, capacity=2, min_chunk=16, max_chunk=64)
+    with pytest.raises(KeyError, match=r"session 'ghost' is not open"):
+        srv.evict("ghost")
+    # a RESIDENT session without a manager still gets the RuntimeError
+    srv.open("real")
+    with pytest.raises(RuntimeError, match="checkpoint_dir"):
+        srv.evict("real")
