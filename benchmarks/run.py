@@ -20,7 +20,12 @@ benchmark results are a diffable file instead of scrollback. Modules:
   pipeline_e2e         unified audio->decision pipeline: one-shot vs
                        streaming vs the seed per-filter path
   serve_streams        slot-batched StreamServer vs naive per-stream
-                       step loop (+ quantized streaming parity)
+                       step loop (+ async/coalesced feed vs sync callers,
+                       per-feed latency percentiles, quantized streaming
+                       parity)
+  load_gen             fleet load generator: churning logical streams
+                       through the sharded router, async vs sync paths,
+                       streams/s + p50/p99 + bitwise-parity gate
 """
 
 from __future__ import annotations
@@ -38,6 +43,7 @@ MODULES = [
     "microbench",
     "pipeline_e2e",
     "serve_streams",
+    "load_gen",
     "kernel_sweep",
     "filterbank_response",
     "hardware_cost",

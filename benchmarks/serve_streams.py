@@ -40,7 +40,7 @@ import numpy as np
 from benchmarks.common import row, time_fn
 from repro.configs.esc10_mp import make_pipeline
 from repro.core.pipeline import InFilterPipeline
-from repro.serving import StreamServer
+from repro.serving import StreamServer, make_batched_step
 
 ROUNDS = 2  # chunks per stream per timed call
 
@@ -136,6 +136,82 @@ def main(argv=()):
         f"speedup_vs_naive={us_naive / us_srv:.2f}x")
     row(f"serve_streams.per_chunk_latency{tag}.S{S}", us_srv / ROUNDS,
         f"{S * ROUNDS / us_srv * 1e6:.0f} chunks/s")
+
+    # -- async/coalescing front end: G independent callers per round.
+    # sync pays G full feed() calls (dispatch + readback each); async
+    # coalesces the same G submits into shared waves resolved by ONE
+    # drain. Decisions must stay bit-for-bit identical — for BOTH
+    # numerics modes this is a hard gate, not a footnote. --------------------
+    import time as _time
+
+    G = 4 if args.smoke else 8
+    L_ROUNDS = 2 if args.smoke else 4
+    groups = [list(range(g, S, G)) for g in range(G)]
+    # one pipeline + ONE shared compiled step across the fresh servers
+    # below — exactly how the router shares it across shards; without
+    # this, fixed numerics (a per-server jit closure) would recompile in
+    # every pass and the latency rows would measure compile time
+    pipe_c = _pipe(primary_impl)
+    step_c = make_batched_step(pipe_c)
+
+    def _caller_pass(async_path: bool):
+        srv = StreamServer(pipe_c, capacity=S,
+                           max_chunk=_pow2_at_least(CH), step_fn=step_c)
+        for sid in ids:
+            srv.open(sid)
+        lat, dec = [], {}
+        t_all = _time.perf_counter()
+        for r in range(L_ROUNDS):
+            rr = r % ROUNDS
+            if async_path:
+                staged = []
+                for g in groups:
+                    part = [(ids[i], audio[i, rr * CH:(rr + 1) * CH])
+                            for i in g]
+                    staged.append((_time.perf_counter(),
+                                   srv.submit(part)))
+                srv.drain()
+                t_end = _time.perf_counter()
+                for t0, ticket in staged:
+                    lat.append(t_end - t0)
+                    for res in ticket.results:
+                        dec[(res.session_id, res.samples_seen)] = \
+                            (res.label, res.confidence)
+            else:
+                for g in groups:
+                    part = [(ids[i], audio[i, rr * CH:(rr + 1) * CH])
+                            for i in g]
+                    t0 = _time.perf_counter()
+                    out = srv.feed(part)
+                    lat.append(_time.perf_counter() - t0)
+                    for res in out:
+                        dec[(res.session_id, res.samples_seen)] = \
+                            (res.label, res.confidence)
+        wall = _time.perf_counter() - t_all
+        return wall, np.asarray(lat) * 1e6, dec
+
+    _caller_pass(False)  # warmup (compile off the clock)
+    wall_s, lat_s, dec_s = _caller_pass(False)
+    wall_a, lat_a, dec_a = _caller_pass(True)
+    fed = S * L_ROUNDS
+    row(f"serve_streams.feed_sync_callers{tag}.S{S}.G{G}",
+        wall_s / fed * 1e6, f"{fed / wall_s:.0f} streams/s")
+    row(f"serve_streams.feed_async_coalesced{tag}.S{S}.G{G}",
+        wall_a / fed * 1e6,
+        f"{fed / wall_a:.0f} streams/s "
+        f"speedup_vs_sync={wall_s / wall_a:.2f}x "
+        f"bitwise={dec_s == dec_a}")
+    row(f"serve_streams.feed_latency_sync{tag}.S{S}", None,
+        f"p50={np.percentile(lat_s, 50):.0f}us "
+        f"p99={np.percentile(lat_s, 99):.0f}us")
+    row(f"serve_streams.feed_latency_async{tag}.S{S}", None,
+        f"p50={np.percentile(lat_a, 50):.0f}us "
+        f"p99={np.percentile(lat_a, 99):.0f}us")
+    if dec_s != dec_a:
+        raise AssertionError(
+            "async/coalesced decisions != sync feed() decisions "
+            f"({nm} numerics, {primary_impl}) — the bitwise serving "
+            "contract is violated")
 
     # -- stateful Pallas streaming kernel vs the XLA session step -----------
     if args.stream_impl == "both":

@@ -12,6 +12,11 @@ python -m benchmarks.serve_streams --smoke --stream-impl both
 # streaming-parity rows are exact-equality gates (int Pallas == int XLA ==
 # one-shot), so int-kernel bit-rot fails the smoke, not just the tests
 python -m benchmarks.serve_streams --smoke --stream-impl both --numerics fixed
+# async-pipeline parity gate: replay churning fleet traffic through the
+# sharded router twice — G sync feed() callers vs the same G callers
+# coalesced through submit()/drain() — and HARD-assert the decisions are
+# bit-for-bit identical, for BOTH numerics modes, evict/reopen included
+python -m benchmarks.load_gen --smoke
 python -m benchmarks.pipeline_e2e --smoke
 # the streaming-kernel shape sweep entry point (tiny grid; exercises the
 # autotune-table plumbing for the float AND int stream kernels)

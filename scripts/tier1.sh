@@ -40,7 +40,7 @@ group2=(tests/test_streaming_parity.py tests/test_kernels.py
         tests/test_analysis.py)
 group3=(tests/test_pipeline.py tests/test_ssm.py tests/test_ir.py)
 group4=(tests/test_serving.py tests/test_slot_surgery.py
-        tests/test_server_contract.py)
+        tests/test_server_contract.py tests/test_async_serving.py)
 group5=(tests/test_archs.py tests/test_checkpoint.py
         tests/test_distributed.py tests/test_filterbank.py
         tests/test_hlo_cost.py tests/test_kernel_machine.py

@@ -37,7 +37,7 @@ ACOUSTIC_ARCH = "esc10-mp"
 
 def _serve_acoustic(args):
     from repro.configs.esc10_mp import make_pipeline
-    from repro.serving import StreamServer
+    from repro.serving import StreamRouter, StreamServer
 
     pipe = make_pipeline(smoke=args.smoke, seed=args.seed,
                          stream_impl=args.stream_impl,
@@ -46,9 +46,13 @@ def _serve_acoustic(args):
     fs = pipe.config.fs
     # chunk bounds must be powers of two (the server's bucket-ladder
     # contract): round the packet length up to the bucket it pads into
-    server = StreamServer(pipe, capacity=args.streams,
-                          max_chunk=max(16, 1 << (args.chunk - 1)
-                                        .bit_length()))
+    max_chunk = max(16, 1 << (args.chunk - 1).bit_length())
+    if args.shards > 1:
+        server = StreamRouter(pipe, num_shards=args.shards,
+                              capacity=args.streams, max_chunk=max_chunk)
+    else:
+        server = StreamServer(pipe, capacity=args.streams,
+                              max_chunk=max_chunk)
     rng = np.random.default_rng(args.seed)
     ids = [f"mic-{i:03d}" for i in range(args.streams)]
     for sid in ids:
@@ -57,18 +61,29 @@ def _serve_acoustic(args):
     audio = rng.standard_normal(
         (args.streams, args.rounds * args.chunk)).astype(np.float32)
 
+    callers = max(1, min(4, args.streams))
     t0 = time.time()
     results = []
     for r in range(args.rounds):
         sl = slice(r * args.chunk, (r + 1) * args.chunk)
-        results = server.feed(
-            [(sid, audio[i, sl]) for i, sid in enumerate(ids)])
-    jax.block_until_ready(server.state.acc)
+        reqs = [(sid, audio[i, sl]) for i, sid in enumerate(ids)]
+        if args.use_async:
+            # G independent callers coalesce into shared waves; one
+            # drain resolves the round (decisions bitwise == sync feed)
+            tickets = [server.submit(reqs[g::callers])
+                       for g in range(callers)]
+            server.drain()
+            results = [res for t in tickets for res in t.results]
+        else:
+            results = server.feed(reqs)
+    state = server.shards[0].state if args.shards > 1 else server.state
+    jax.block_until_ready(state.acc)
     wall = time.time() - t0
     fed = args.streams * args.rounds
     print(f"arch={ACOUSTIC_ARCH} streams={args.streams} "
           f"chunk={args.chunk} ({args.chunk / fs * 1e3:.0f} ms) "
-          f"rounds={args.rounds} "
+          f"rounds={args.rounds} shards={args.shards} "
+          f"async={args.use_async} "
           f"numerics={pipe.config.numerics}")  # float engine vs the fixed-
     # point hardware twin (stats() repeats it so operators can tell a
     # deployment preview from the float path mid-flight)
@@ -148,6 +163,15 @@ def main(argv=None):
                     help="esc10-mp: sensor packet length in samples")
     ap.add_argument("--rounds", type=int, default=25,
                     help="esc10-mp: packets fed per stream")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="esc10-mp: feed through the coalescing "
+                         "submit()/drain() pipeline (4 virtual callers "
+                         "per round) instead of synchronous feed() — "
+                         "decisions are bit-for-bit identical")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="esc10-mp: >1 serves through a StreamRouter "
+                         "with this many StreamServer shards (stream id "
+                         "-> crc32 shard; shared compiled step)")
     ap.add_argument("--stream-impl", choices=["xla", "pallas"],
                     default="xla",
                     help="esc10-mp: session-step hot path — 'pallas' runs "

@@ -3,12 +3,19 @@
 ``StreamServer`` multiplexes many logical sensor streams (acoupi-style
 long-lived recording sessions) onto the fixed slot capacity of one
 slot-batched :class:`~repro.core.pipeline.SessionState`, so feeding S
-streams costs ONE compiled donated-state step per chunk bucket.
+streams costs ONE compiled donated-state step per chunk bucket. The feed
+hot path is asynchronous and pipelined — ``submit()``/``feed_async()``
+queue requests for coalesced dispatch, ``drain()`` is the sync point —
+and ``StreamRouter`` scales residency across N shards behind one
+admission API (stream id -> shard -> slot).
 """
 
 from repro.serving.session import (Decision, FeedRequest, FeedResult,
-                                   Session)
-from repro.serving.server import StreamServer, bucket_length
+                                   FeedTicket, Session)
+from repro.serving.server import (StreamServer, bucket_length,
+                                  make_batched_step)
+from repro.serving.router import RouterTicket, StreamRouter, shard_of
 
-__all__ = ["StreamServer", "Session", "Decision", "FeedRequest",
-           "FeedResult", "bucket_length"]
+__all__ = ["StreamServer", "StreamRouter", "Session", "Decision",
+           "FeedRequest", "FeedResult", "FeedTicket", "RouterTicket",
+           "bucket_length", "make_batched_step", "shard_of"]

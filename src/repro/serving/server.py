@@ -13,15 +13,29 @@ of two (clamped to ``[min_chunk, max_chunk]``; longer packets split), so at
 most O(log max_chunk) step variants ever compile, no matter what lengths
 sensors send.
 
+Async feed pipeline: ``feed()`` is a synchronous wrapper over a pipelined
+hot path — ``submit()`` validates and enqueues requests (optionally
+dispatching on a coalescing watermark/deadline), dispatch stages each wave
+into one of two pre-allocated host buffers per bucket (slot-targeted
+clears, reuse gated on the wave that last read the buffer) and launches
+the donated step WITHOUT reading decisions back, and ``drain()`` is the
+only host-device sync point: it blocks once, vectorizes the decision
+readback, and resolves every outstanding ``FeedTicket``. Many callers'
+small submits coalesce into one compiled call per wave instead of one
+full-capacity step each. Decisions are bit-for-bit what the synchronous
+path returns — ``feed()`` IS ``submit()`` + ``drain()``.
+
 Scale-out: pass ``mesh=`` to shard the slot axis over the mesh's data axes
 (see ``repro.distributed.sharding.session_specs``); capacity then scales
-linearly with device count while the host-side API is unchanged.
+linearly with device count while the host-side API is unchanged. For
+host-side sharding — N servers behind one admission API — see
+``repro.serving.router.StreamRouter``.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Iterable, Optional, Union
+from typing import Iterable, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -29,9 +43,10 @@ import numpy as np
 
 from repro.core import pipeline as pl
 from repro.core.pipeline import InFilterPipeline, SessionState
-from repro.serving.session import Decision, FeedRequest, FeedResult, Session
+from repro.serving.session import (Decision, FeedRequest, FeedResult,
+                                   FeedTicket, Session)
 
-__all__ = ["StreamServer", "bucket_length"]
+__all__ = ["StreamServer", "bucket_length", "make_batched_step"]
 
 
 def bucket_length(n: int, min_chunk: int, max_chunk: int) -> int:
@@ -48,6 +63,67 @@ def _batched_step(pipe: InFilterPipeline, state: SessionState,
                   chunk: jax.Array, valid: jax.Array):
     state, p, _ = pipe._session_step(state, chunk, valid)
     return state, p
+
+
+def make_batched_step(pipeline: InFilterPipeline):
+    """Compile the donated-state session step for ``pipeline``.
+
+    Returns a callable ``(pipe, state, chunk, valid) -> (state, p)`` with a
+    uniform signature across numerics modes. A ``StreamServer`` builds one
+    per instance by default; pass the SAME callable to several servers
+    (``step_fn=``) to share one compile cache across shards — the
+    ``StreamRouter`` does exactly that, so N shards cost one compile per
+    chunk bucket, not N.
+    """
+    if pipeline.config.numerics == "fixed":
+        # the integer program lowers HOST-side (concrete ROMs/shift
+        # tables), so the pipeline cannot ride along as a traced pytree
+        # argument the way the float step's weights do. Precompile once
+        # and jit a closure over the concrete pipeline: the step's only
+        # traced inputs are the donated integer registers + the chunk.
+        pipeline.fixed_program()
+        fixed_step = jax.jit(
+            lambda state, chunk, valid: _batched_step(
+                pipeline, state, chunk, valid),
+            donate_argnums=(0,))
+        return lambda pipe, state, chunk, valid: \
+            fixed_step(state, chunk, valid)
+    return jax.jit(_batched_step, donate_argnums=(1,))
+
+
+class _StageBuffer:
+    """One host-side staging buffer of a per-bucket double-buffer pair.
+
+    ``inflight`` holds the decision array of the last wave staged from this
+    buffer: blocking on it before reuse proves the donated step that read
+    the buffer has fully executed, so rewriting the rows is safe even if
+    the host->device transfer was zero-copy. Two buffers per bucket give
+    the classic depth-2 pipeline: stage wave k+1 while the device still
+    chews on wave k.
+    """
+
+    __slots__ = ("batch", "valid", "dirty", "inflight")
+
+    def __init__(self, capacity: int, length: int, dtype):
+        self.batch = np.zeros((capacity, length), dtype)
+        self.valid = np.zeros((capacity,), np.int32)
+        self.dirty: list = []          # slots written by the last wave
+        self.inflight = None           # that wave's decision array
+
+
+class _Pending:
+    """One submitted request riding the coalescing queue."""
+
+    __slots__ = ("ticket", "pos", "sid", "segs", "total", "label", "conf")
+
+    def __init__(self, ticket, pos, sid, segs, total):
+        self.ticket = ticket
+        self.pos = pos                 # index within the ticket
+        self.sid = sid
+        self.segs = segs               # max_chunk-bounded segments
+        self.total = total             # original chunk length in samples
+        self.label = None
+        self.conf = None
 
 
 class StreamServer:
@@ -82,13 +158,29 @@ class StreamServer:
     mesh:           optional ``jax.sharding.Mesh`` — shard the slot axis
                     over the mesh's data axes.
     clock:          injectable monotonic clock (tests).
+    coalesce_watermark: auto-dispatch threshold for the async queue: once
+                    this many requests are pending, ``submit()`` launches
+                    the waves (staging + donated step, NO readback — the
+                    host never blocks). ``None`` (default) dispatches only
+                    at ``drain()``/deadline.
+    coalesce_deadline: max seconds a queued request may wait before the
+                    next ``submit()``/``poll()`` dispatches the queue.
+                    Checked cooperatively on API calls — there is no
+                    background thread.
+    step_fn:        a compiled step from :func:`make_batched_step` built
+                    for this same pipeline — pass one callable to several
+                    servers to share its compile cache (the router's N
+                    shards compile each chunk bucket once, not N times).
     """
 
     def __init__(self, pipeline: InFilterPipeline, capacity: int = 64, *,
                  max_chunk: int = 4096, min_chunk: int = 16,
                  dtype=jnp.float32, evict_after: Optional[float] = None,
                  checkpoint_dir: Optional[str] = None, mesh=None,
-                 max_history: int = 64, clock=None):
+                 max_history: int = 64, clock=None,
+                 coalesce_watermark: Optional[int] = None,
+                 coalesce_deadline: Optional[float] = None,
+                 step_fn=None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if not (0 < min_chunk <= max_chunk):
@@ -131,21 +223,8 @@ class StreamServer:
                 mesh, sh.sanitize((dp, None), (capacity, max_chunk), mesh))
             self._valid_sharding = jax.sharding.NamedSharding(
                 mesh, sh.sanitize((dp,), (capacity,), mesh))
-        if pipeline.config.numerics == "fixed":
-            # the integer program lowers HOST-side (concrete ROMs/shift
-            # tables), so the pipeline cannot ride along as a traced pytree
-            # argument the way the float step's weights do. Precompile once
-            # and jit a closure over the concrete pipeline: the step's only
-            # traced inputs are the donated integer registers + the chunk.
-            pipeline.fixed_program()
-            fixed_step = jax.jit(
-                lambda state, chunk, valid: _batched_step(
-                    pipeline, state, chunk, valid),
-                donate_argnums=(0,))
-            self._step = lambda pipe, state, chunk, valid: \
-                fixed_step(state, chunk, valid)
-        else:
-            self._step = jax.jit(_batched_step, donate_argnums=(1,))
+        self._step = step_fn if step_fn is not None \
+            else make_batched_step(pipeline)
         self._free = list(range(capacity - 1, -1, -1))  # pop() -> slot 0 first
         self._sessions: dict[str, Session] = {}
         self._manager = None
@@ -160,6 +239,17 @@ class StreamServer:
         # consumed the slot-batched state's buffers, so every resident
         # session's registers are gone — the description names the wave
         self._poisoned: Optional[str] = None
+        # -- async feed pipeline state --
+        self.coalesce_watermark = coalesce_watermark
+        self.coalesce_deadline = coalesce_deadline
+        self._staging: dict[int, list] = {}   # bucket L -> [_StageBuffer]*2
+        self._stage_flip: dict[int, int] = {}
+        self._queue: List[_Pending] = []      # submitted, not yet dispatched
+        self._queue_since: Optional[float] = None
+        self._dispatched: List[_Pending] = []  # dispatched, not yet resolved
+        # per dispatched wave with at least one finishing request:
+        # (decision device array, [(pending, slot), ...])
+        self._inflight: list = []
 
     # -- introspection -------------------------------------------------------
 
@@ -176,7 +266,14 @@ class StreamServer:
     def sessions(self) -> list:
         return sorted(self._sessions.values(), key=lambda s: s.slot)
 
+    def is_open(self, session_id: str) -> bool:
+        return session_id in self._sessions
+
+    def __contains__(self, session_id: str) -> bool:
+        return session_id in self._sessions
+
     def stats(self) -> dict:
+        total = sum(self.bucket_counts.values())
         return {
             "capacity": self.capacity,
             "resident": len(self._sessions),
@@ -187,6 +284,22 @@ class StreamServer:
             # preview from the float path at a glance
             "numerics": self.pipeline.config.numerics,
             "buckets": dict(sorted(self.bucket_counts.items())),
+            # which pad buckets actually absorb the traffic — a ladder rung
+            # with a high hit rate and a lot of padding is a resize lever
+            "bucket_steps_total": total,
+            "bucket_hit_rate": {L: round(c / total, 4) for L, c in
+                                sorted(self.bucket_counts.items())}
+            if total else {},
+            # a poisoned server must be visible from monitoring, not only
+            # from the next call's RuntimeError: None = healthy, else the
+            # diagnosis string naming the failed wave
+            "poisoned": self._poisoned,
+            # async feed pipeline depth
+            "queued_requests": len(self._queue),
+            "unresolved_requests": len(self._dispatched),
+            "inflight_waves": len(self._inflight),
+            "coalesce_watermark": self.coalesce_watermark,
+            "coalesce_deadline": self.coalesce_deadline,
         }
 
     # -- admission -----------------------------------------------------------
@@ -199,6 +312,10 @@ class StreamServer:
         round-trip the named-checkpoint store losslessly (dtype-checked),
         so a reopened int32 stream continues bit-for-bit."""
         self._check_poisoned()
+        # flush the async queue first: admission may evict the LRU session,
+        # and the victim choice / parked registers must reflect every feed
+        # submitted so far (exactly as if they had been synchronous)
+        self._flush_pending()
         if session_id in self._sessions:
             raise ValueError(f"session {session_id!r} already open")
         # validate at admission (checkpoint-name charset), BEFORE any state
@@ -233,6 +350,10 @@ class StreamServer:
         (float or integer registers alike) for a later ``open`` (same as
         eviction); otherwise any parked copy is discarded — a future
         ``open`` of this id starts fresh."""
+        # absorb + resolve any queued feeds for this session before its
+        # registers are parked/discarded — closing must not drop submitted
+        # chunks (the sync path can't, so the async path may not either)
+        self._flush_pending()
         if session_id not in self._sessions:
             raise KeyError(f"session {session_id!r} is not open")
         sess = self._sessions.pop(session_id)
@@ -313,9 +434,39 @@ class StreamServer:
         decisions equal one-shot inference on the concatenated audio
         bit-for-bit (a float server matches to f32 round-off, bit-for-bit
         under ``quant_bits`` once the running amax has seen the peak).
+
+        This is the synchronous wrapper over the async pipeline: exactly
+        ``submit(requests)`` + ``drain()`` — same staging buffers, same
+        waves, same readback — so its decisions are bit-for-bit identical
+        to the ``submit``/``poll``/``drain`` path by construction. Any
+        requests already queued by earlier ``submit()`` calls are flushed
+        (in their submit order) by the same drain.
+        """
+        ticket = self.submit(requests)
+        self.drain()
+        return ticket.results
+
+    def feed_async(self,
+                   requests: Iterable[Union[FeedRequest, tuple]]
+                   ) -> FeedTicket:
+        """Alias of :meth:`submit` — the asynchronous ``feed()``."""
+        return self.submit(requests)
+
+    def submit(self,
+               requests: Iterable[Union[FeedRequest, tuple]]) -> FeedTicket:
+        """Enqueue one chunk per request; return a ``FeedTicket`` that
+        resolves at the next drain point.
+
+        Validation is atomic: every request is checked (open session, 1-D
+        non-empty chunk) BEFORE any is enqueued, so a bad batch never
+        half-submits. Requests accumulate across callers — per session
+        FIFO, across sessions coalesced — and dispatch (staging + donated
+        step launch, no readback) happens when ``coalesce_watermark``
+        requests are pending, when a queued request is older than
+        ``coalesce_deadline``, or at the latest inside ``drain()``.
         """
         self._check_poisoned()
-        reqs = []
+        entries = []
         for r in requests:
             if isinstance(r, FeedRequest):
                 sid, chunk = r.session_id, r.chunk
@@ -332,31 +483,127 @@ class StreamServer:
                 raise ValueError(f"empty chunk for session {sid!r}")
             segs = [chunk[i:i + self.max_chunk]
                     for i in range(0, chunk.shape[0], self.max_chunk)]
-            reqs.append((sid, segs))
-        if not reqs:
-            return []
+            entries.append((sid, segs, chunk.shape[0]))
+        ticket = FeedTicket(n_requests=len(entries))
+        if not entries:
+            ticket.results = []
+            return ticket
+        for pos, (sid, segs, total) in enumerate(entries):
+            self._queue.append(_Pending(ticket, pos, sid, segs, total))
+        if self._queue_since is None:
+            self._queue_since = self._clock()
+        if self.coalesce_watermark is not None \
+                and len(self._queue) >= self.coalesce_watermark:
+            self._dispatch()
+        elif self._deadline_expired():
+            self._dispatch()
+        return ticket
 
-        last_p: dict[int, tuple] = {}  # request index -> (label, conf)
-        pending = [list(segs) for _, segs in reqs]
+    def poll(self, ticket: FeedTicket) -> Optional[list]:
+        """Non-blocking progress check: the ticket's results if they are
+        ready, else ``None``.
+
+        "Ready" means every wave carrying one of the ticket's final
+        segments has finished on device — ``poll`` never waits for the
+        device, but it does advance the pipeline cooperatively: it
+        dispatches the queue when the coalescing deadline has expired, and
+        it resolves finished waves (a cheap readback of already-computed
+        decisions). Use ``drain()`` to block until resolution instead.
+        """
+        if ticket.done:
+            return ticket.results
+        self._check_poisoned()
+        if self._deadline_expired():
+            self._dispatch()
+        if self._inflight and all(
+                p.is_ready() for p, _ in self._inflight):
+            self._resolve()
+        return ticket.results if ticket.done else None
+
+    def drain(self) -> list:
+        """The pipeline's sync point: dispatch everything still queued,
+        block until the device has produced every outstanding decision,
+        and resolve all open tickets. Returns the ``FeedResult``s resolved
+        by THIS drain, in submit order. A drained server has no queued
+        requests, no unresolved tickets, and no in-flight waves."""
+        self._check_poisoned()
+        self._dispatch()
+        return self._resolve()
+
+    def _deadline_expired(self) -> bool:
+        return (self.coalesce_deadline is not None
+                and self._queue_since is not None
+                and self._clock() - self._queue_since
+                >= self.coalesce_deadline)
+
+    def _flush_pending(self) -> None:
+        """Absorb + resolve everything outstanding before a lifecycle
+        mutation (open/close/evict). No-op on a poisoned server — the
+        queue is as dead as the registers, and the lifecycle call's own
+        poison check owns the error."""
+        if self._poisoned is not None:
+            return
+        if self._queue or self._dispatched or self._inflight:
+            self._dispatch()
+            self._resolve()
+
+    def _stage_buffer(self, L: int) -> _StageBuffer:
+        """Flip to the next staging buffer for bucket ``L``, waiting (only
+        if the device is >= 2 waves behind) for the wave that last read it,
+        then clearing exactly the slots that wave wrote."""
+        ring = self._staging.get(L)
+        if ring is None:
+            ring = self._staging[L] = [
+                _StageBuffer(self.capacity, L, self.dtype) for _ in range(2)]
+            self._stage_flip[L] = 0
+        k = self._stage_flip[L]
+        self._stage_flip[L] = k ^ 1
+        buf = ring[k]
+        if buf.inflight is not None:
+            # the donated step that read this buffer two waves ago: its
+            # output being ready proves the input buffer is consumed, so
+            # rewriting rows below cannot race the device (and is safe
+            # even if the host->device transfer aliased host memory)
+            jax.block_until_ready(buf.inflight)
+            buf.inflight = None
+        if buf.dirty:
+            rows = buf.dirty
+            buf.batch[rows] = 0
+            buf.valid[rows] = 0
+            buf.dirty = []
+        return buf
+
+    def _dispatch(self) -> None:
+        """Run the queued requests' waves: stage each wave into a
+        double-buffered host batch and launch the donated step, WITHOUT
+        reading decisions back. Wave composition is identical to the
+        pre-async serial loop: one segment per session per wave, sessions
+        coalesced, bucket = pow2 pad of the wave's longest segment."""
+        if not self._queue:
+            return
+        reqs, self._queue = self._queue, []
+        self._queue_since = None
+        pending = [list(r.segs) for r in reqs]
         wave_no = 0
         while any(pending):
             wave_no += 1
             wave, seen, finals = [], set(), []
-            for i, (sid, _) in enumerate(reqs):
-                if pending[i] and sid not in seen:
-                    wave.append((i, sid, pending[i].pop(0)))
-                    seen.add(sid)
+            for i, r in enumerate(reqs):
+                if pending[i] and r.sid not in seen:
+                    wave.append((r, pending[i].pop(0)))
+                    seen.add(r.sid)
                     if not pending[i]:
-                        finals.append((i, sid))
-            L = bucket_length(max(seg.shape[0] for _, _, seg in wave),
+                        finals.append(r)
+            L = bucket_length(max(seg.shape[0] for _, seg in wave),
                               self.min_chunk, self.max_chunk)
-            batch = np.zeros((self.capacity, L), dtype=self.dtype)
-            valid = np.zeros((self.capacity,), dtype=np.int32)
-            for _, sid, seg in wave:
-                slot = self._sessions[sid].slot
-                batch[slot, :seg.shape[0]] = seg
-                valid[slot] = seg.shape[0]
-            chunk_dev, valid_dev = jnp.asarray(batch), jnp.asarray(valid)
+            buf = self._stage_buffer(L)
+            for r, seg in wave:
+                slot = self._sessions[r.sid].slot
+                buf.batch[slot, :seg.shape[0]] = seg
+                buf.valid[slot] = seg.shape[0]
+                buf.dirty.append(slot)
+            chunk_dev = jnp.asarray(buf.batch)
+            valid_dev = jnp.asarray(buf.valid)
             if self._chunk_sharding is not None:
                 chunk_dev = jax.device_put(chunk_dev, self._chunk_sharding)
                 valid_dev = jax.device_put(valid_dev, self._valid_sharding)
@@ -374,33 +621,62 @@ class StreamServer:
                 self._poisoned = (
                     f"step raised {type(e).__name__} on wave {wave_no} of "
                     f"a feed() call (bucket {L}, sessions "
-                    f"{sorted(sid for _, sid, _ in wave)})")
+                    f"{sorted(r.sid for r, _ in wave)})")
                 raise RuntimeError(
                     f"feed() failed: {self._poisoned}; the donated session "
                     "state was consumed by the failed call — the server "
                     "is now poisoned") from e
             self.steps_run += 1
             self.bucket_counts[L] = self.bucket_counts.get(L, 0) + 1
-            # host readback (a device sync) only when some request ends on
-            # this wave — intermediate split-segment waves stay async so
-            # the donated step chain pipelines
+            # NO host readback here: the decision array rides along
+            # asynchronously and gates this buffer's reuse; requests
+            # finishing on this wave are read back (vectorized) at the
+            # next drain point. Slots are captured now — resolution may
+            # happen after this session moved (it cannot close first:
+            # close() flushes).
+            buf.inflight = p
             if finals:
-                p_host = np.asarray(p)
-                for i, sid in finals:
-                    slot = self._sessions[sid].slot
-                    label = int(np.argmax(p_host[slot]))
-                    last_p[i] = (sid, label, float(p_host[slot, label]))
+                self._inflight.append(
+                    (p, [(r, self._sessions[r.sid].slot) for r in finals]))
+        self._dispatched.extend(reqs)
 
+    def _resolve(self) -> list:
+        """Materialize every dispatched request's decision (ONE blocking
+        readback per final-bearing wave, argmax vectorized over its
+        finishing slots) and resolve tickets in submit order. Bit-for-bit
+        the serial path's readback: same per-slot argmax on the same
+        decision rows, same samples_seen bookkeeping order."""
+        if not self._dispatched:
+            return []
+        for p_dev, finals in self._inflight:
+            p_host = np.asarray(p_dev)          # blocks if not yet ready
+            slots = np.asarray([s for _, s in finals])
+            rows = p_host[slots]
+            labels = np.argmax(rows, axis=1)
+            for (r, _), label, row in zip(finals, labels, rows):
+                r.label = int(label)
+                r.conf = float(row[label])
+        self._inflight.clear()
         now = self._clock()
         results = []
-        for i, (sid, label, conf) in sorted(last_p.items()):
-            sess = self._sessions[sid]
+        tickets = []
+        for r in self._dispatched:
+            sess = self._sessions[r.sid]
             # samples_seen advances by the WHOLE request, recorded once on
             # its final segment's decision
-            total = sess.samples_seen + sum(s.shape[0] for s in reqs[i][1])
-            d = Decision(samples_seen=total, label=label, confidence=conf)
+            total = sess.samples_seen + r.total
+            d = Decision(samples_seen=total, label=r.label,
+                         confidence=r.conf)
             sess.record(d, now)
-            results.append(FeedResult(session_id=sid, label=label,
-                                      confidence=conf,
-                                      samples_seen=total))
+            fr = FeedResult(session_id=r.sid, label=r.label, confidence=r.conf,
+                            samples_seen=total)
+            results.append(fr)
+            if r.ticket.results is None:
+                r.ticket.results = [None] * r.ticket.n_requests
+                tickets.append(r.ticket)
+            r.ticket.results[r.pos] = fr
+        self._dispatched.clear()
+        # a ticket is dispatched atomically (dispatch flushes the whole
+        # queue), so every ticket touched here resolved completely
+        assert all(None not in t.results for t in tickets)
         return results

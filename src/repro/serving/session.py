@@ -13,7 +13,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, List, Optional
 
-__all__ = ["Decision", "Session", "FeedRequest", "FeedResult"]
+__all__ = ["Decision", "Session", "FeedRequest", "FeedResult",
+           "FeedTicket"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,3 +76,23 @@ class FeedResult:
     label: int
     confidence: float
     samples_seen: int
+
+
+@dataclasses.dataclass
+class FeedTicket:
+    """Handle for one ``submit()``/``feed_async()`` batch.
+
+    The ticket resolves — ``results`` flips from ``None`` to one
+    :class:`FeedResult` per request, in request order — when the server
+    drains (``drain()``, a ``poll()`` that finds the device done, or any
+    lifecycle call that forces a flush). "Result ready" means the decision
+    was computed from ALL of the request's chunks: splits and coalesced
+    co-tenants included, bit-for-bit what a synchronous ``feed()`` of the
+    same requests would have returned.
+    """
+    n_requests: int
+    results: Optional[List[FeedResult]] = None
+
+    @property
+    def done(self) -> bool:
+        return self.results is not None

@@ -277,6 +277,31 @@ def test_bucket_length():
         bucket_length(0, 16, 4096)
 
 
+def test_staging_buffer_reuse_no_cross_wave_leak(pipe):
+    """The per-bucket staging buffers are REUSED across waves (slot-
+    targeted clears, not fresh np.zeros): rows staged for one wave must
+    never leak into a later wave that doesn't re-stage them."""
+    rng = np.random.default_rng(4)
+    xa = rng.standard_normal(64).astype(np.float32)
+    xb = rng.standard_normal(64).astype(np.float32)
+    xc = rng.standard_normal(40).astype(np.float32)
+    srv = StreamServer(pipe, capacity=3, max_chunk=64)
+    ref = StreamServer(pipe, capacity=3, max_chunk=64)
+    for s in (srv, ref):
+        for sid in ("a", "b", "c"):
+            s.open(sid)
+    srv.feed([("a", xa), ("b", xb)])     # stages rows 0,1 of bucket 64
+    # same bucket, different slot: stale a/b rows must be cleared, and
+    # c's decision must equal a server where a/b never fed at all
+    r1 = srv.feed([("c", xc)])[0]
+    r2 = ref.feed([("c", xc)])[0]
+    assert (r1.label, r1.confidence, r1.samples_seen) == \
+        (r2.label, r2.confidence, r2.samples_seen)
+    # and the buffers really were reused: one staging array per flip, per
+    # bucket (double-buffered ring), not one per wave
+    assert len(srv._staging[64]) == 2
+
+
 def test_server_feed_order_and_unknown_session(pipe):
     srv = StreamServer(pipe, capacity=2)
     srv.open("a")

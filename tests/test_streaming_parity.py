@@ -587,6 +587,55 @@ def test_fixed_server_pallas_end_to_end_bitwise(tmp_path):
     np.testing.assert_array_equal(accs[0], accs[1])
 
 
+def test_fixed_server_async_submit_drain_bitwise(tmp_path):
+    """The async feed pipeline (PR 9) through the fixed-numerics server,
+    BOTH stream impls: submits coalesced across evict/reopen churn and
+    resolved by one drain() must equal the synchronous feed() path
+    bit-for-bit — results AND the int32 registers."""
+    from repro.serving import StreamServer, make_batched_step
+
+    rng = np.random.default_rng(11)
+    xa = rng.standard_normal(500).astype(np.float32)
+    xb = rng.standard_normal(300).astype(np.float32)
+    for impl in ("xla", "pallas"):
+        pipe, _ = _fixed_pipe() if impl == "xla" \
+            else _fixed_pipe(stream_impl=impl)
+        step = make_batched_step(pipe)
+        outs, accs = [], []
+        for use_async in (False, True):
+            srv = StreamServer(pipe, capacity=2, max_chunk=256,
+                               checkpoint_dir=str(
+                                   tmp_path / f"{impl}-{use_async}"),
+                               step_fn=step)
+            srv.open("a")
+            srv.open("b")
+            out = []
+            if use_async:
+                t1 = srv.submit([("a", xa[:300]), ("b", xb[:33])])
+                t2 = srv.submit([("b", xb[33:200])])
+                srv.drain()
+                srv.evict("a")          # parks registers incl. queued work
+                srv.open("a")
+                t3 = srv.submit([("a", xa[300:500]),
+                                 ("b", xb[200:300])])
+                srv.drain()
+                for t in (t1, t2, t3):
+                    assert t.done
+                    out += t.results
+            else:
+                out += srv.feed([("a", xa[:300]), ("b", xb[:33])])
+                out += srv.feed([("b", xb[33:200])])
+                srv.evict("a")
+                srv.open("a")
+                out += srv.feed([("a", xa[300:500]), ("b", xb[200:300])])
+            outs.append([(r.session_id, r.label, r.confidence,
+                          r.samples_seen) for r in out])
+            accs.append(np.asarray(srv.state.acc))
+        assert outs[0] == outs[1], impl
+        np.testing.assert_array_equal(accs[0], accs[1],
+                                      err_msg=f"{impl}: async registers")
+
+
 def test_stream_server_pallas_bitwise_matches_xla_server(tmp_path):
     """End-to-end through StreamServer: open/feed/split/evict/reopen with
     the kernel hot path tracks the XLA server bit-for-bit."""
