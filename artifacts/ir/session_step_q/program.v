@@ -1,0 +1,24357 @@
+// @meta name session_step_q
+// @meta states 1472
+// @meta instrs 1045
+// @io input 0 mem r0 dtype i32 width 8 shape 1x15
+// @io input 1 mem r1 dtype i32 width 8 shape 1x15
+// @io input 2 mem r2 dtype i32 width 8 shape 1x15
+// @io input 3 mem r3 dtype i32 width 8 shape 1x15
+// @io input 4 mem r4 dtype i32 width 8 shape 1x15
+// @io input 5 mem r5 dtype i32 width 8 shape 1x15
+// @io input 6 mem r6 dtype i32 width 32 shape 1
+// @io input 7 mem r7 dtype i32 width 32 shape 1
+// @io input 8 mem r8 dtype i32 width 32 shape 1
+// @io input 9 mem r9 dtype i32 width 32 shape 1
+// @io input 10 mem r10 dtype i32 width 32 shape 1
+// @io input 11 mem r11 dtype i32 width 32 shape 1
+// @io input 12 mem r12 dtype i32 width 24 shape 1x30
+// @io input 13 mem r13 dtype i32 width 9 shape 1
+// @io input 14 mem r14 dtype i32 width 32 shape 1
+// @io input 15 mem r15 dtype i1 width 1 shape 1
+// @io input 16 mem r16 dtype i32 width 8 shape 1x160
+// @io input 17 mem r17 dtype i32 width 9 shape 1
+// @io output 0 mem r131 dtype i32 width 8 shape 1x15
+// @io output 1 mem r329 dtype i32 width 8 shape 1x15
+// @io output 2 mem r526 dtype i32 width 8 shape 1x15
+// @io output 3 mem r723 dtype i32 width 8 shape 1x15
+// @io output 4 mem r920 dtype i32 width 8 shape 1x15
+// @io output 5 mem r1117 dtype i32 width 8 shape 1x15
+// @io output 6 mem r132 dtype i32 width 32 shape 1
+// @io output 7 mem r330 dtype i32 width 32 shape 1
+// @io output 8 mem r527 dtype i32 width 32 shape 1
+// @io output 9 mem r724 dtype i32 width 32 shape 1
+// @io output 10 mem r921 dtype i32 width 32 shape 1
+// @io output 11 mem r1118 dtype i32 width 32 shape 1
+// @io output 12 mem r1120 dtype i32 width 24 shape 1x30
+// @io output 13 mem r28 dtype i32 width 9 shape 1
+// @io output 14 mem r1121 dtype i32 width 32 shape 1
+// @io output 15 mem r15 dtype i1 width 1 shape 1
+// @io output 16 mem r1269 dtype i32 width 11 shape 1x10
+// @io output 17 mem r1159 dtype i32 width 8 shape 1x30
+// @rom rom0_c file rom/rom0_c.mem words 80
+// @rom rom1_c file rom/rom1_c.mem words 6
+// @rom rom2_c file rom/rom2_c.mem words 30
+// @rom rom3_c file rom/rom3_c.mem words 30
+// @rom rom4_c file rom/rom4_c.mem words 30
+// @rom rom5_c file rom/rom5_c.mem words 300
+// @rom rom6_c file rom/rom6_c.mem words 300
+// @rom rom7_c file rom/rom7_c.mem words 10
+// @rom rom8_lit file rom/rom8_lit.mem words 1
+// @rom rom9_lit file rom/rom9_lit.mem words 1
+// @rom rom10_lit file rom/rom10_lit.mem words 1
+// @rom rom11_lit file rom/rom11_lit.mem words 1
+// @rom rom12_lit file rom/rom12_lit.mem words 1
+// @rom rom13_lit file rom/rom13_lit.mem words 1
+// @rom rom14_lit file rom/rom14_lit.mem words 1
+// @rom rom15_lit file rom/rom15_lit.mem words 1
+// @rom rom16_lit file rom/rom16_lit.mem words 1
+// @rom rom17_lit file rom/rom17_lit.mem words 1
+// @rom rom18_lit file rom/rom18_lit.mem words 1
+// @rom rom19_lit file rom/rom19_lit.mem words 1
+// @rom rom20_lit file rom/rom20_lit.mem words 1
+// @rom rom21_lit file rom/rom21_lit.mem words 1
+// @rom rom22_lit file rom/rom22_lit.mem words 1
+// @rom rom23_lit file rom/rom23_lit.mem words 1
+// @rom rom24_lit file rom/rom24_lit.mem words 1
+// @rom rom25_lit file rom/rom25_lit.mem words 1
+// @rom rom26_lit file rom/rom26_lit.mem words 1
+// @rom rom27_lit file rom/rom27_lit.mem words 1
+// @rom rom28_lit file rom/rom28_lit.mem words 1
+// @rom rom29_lit file rom/rom29_lit.mem words 1
+// @rom rom30_lit file rom/rom30_lit.mem words 1
+// @rom rom31_lit file rom/rom31_lit.mem words 1
+// @trace state 1 instr 0 op abs dests r26
+// @trace state 3 instr 1 op reduce_max dests r27
+// @trace state 4 instr 2 op max dests r28
+// @trace state 6 instr 3 op concat dests r29
+// @trace state 7 instr 4 op shl dests r31
+// @trace state 8 instr 5 op mov dests r32
+// @trace state 9 instr 6 op rev dests r33
+// @trace state 10 instr 7 op reshape dests r34
+// @trace state 11 instr 8 op iota dests r35
+// @trace state 12 instr 9 op broadcast dests r36
+// @trace state 13 instr 10 op iota dests r37
+// @trace state 14 instr 11 op broadcast dests r38
+// @trace state 15 instr 12 op add dests r39
+// @trace state 16 instr 13 op lt dests r41
+// @trace state 17 instr 14 op add dests r43
+// @trace state 18 instr 15 op select_n dests r44
+// @trace state 19 instr 16 op broadcast dests r45
+// @trace state 20 instr 17 op gather dests r46
+// @trace state 21 instr 18 op broadcast dests r47
+// @trace state 22 instr 19 op add dests r48
+// @trace state 23 instr 20 op convert dests r51
+// @trace state 24 instr 21 op max dests r52
+// @trace state 25 instr 22 op convert dests r53
+// @trace state 26 instr 23 op min dests r54
+// @trace state 27 instr 24 op sub dests r55
+// @trace state 28 instr 25 op convert dests r56
+// @trace state 29 instr 26 op max dests r57
+// @trace state 30 instr 27 op convert dests r58
+// @trace state 31 instr 28 op min dests r59
+// @trace state 32 instr 29 op abs dests r60
+// @trace state 34 instr 30 op reduce_max dests r61
+// @trace state 35 instr 31 op sub dests r63
+// @trace state 43 instr 33 op add dests r69
+// @trace state 44 instr 34 op add dests r70
+// @trace state 45 instr 35 op shra dests r71
+// @trace state 46 instr 36 op broadcast dests r72
+// @trace state 47 instr 37 op sub dests r73
+// @trace state 48 instr 38 op max dests r74
+// @trace state 50 instr 39 op reduce_sum dests r75
+// @trace state 51 instr 40 op neg dests r76
+// @trace state 52 instr 41 op broadcast dests r77
+// @trace state 53 instr 42 op sub dests r78
+// @trace state 54 instr 43 op max dests r79
+// @trace state 56 instr 44 op reduce_sum dests r80
+// @trace state 57 instr 45 op add dests r81
+// @trace state 58 instr 46 op gt dests r82
+// @trace state 59 instr 47 op select_n dests r83
+// @trace state 60 instr 48 op select_n dests r84
+// @trace state 67 instr 32 op loop dests r85 r86 r87
+// @trace state 68 instr 49 op abs dests r88
+// @trace state 70 instr 50 op reduce_max dests r89
+// @trace state 71 instr 51 op sub dests r90
+// @trace state 79 instr 53 op add dests r96
+// @trace state 80 instr 54 op add dests r97
+// @trace state 81 instr 55 op shra dests r98
+// @trace state 82 instr 56 op broadcast dests r99
+// @trace state 83 instr 57 op sub dests r100
+// @trace state 84 instr 58 op max dests r101
+// @trace state 86 instr 59 op reduce_sum dests r102
+// @trace state 87 instr 60 op neg dests r103
+// @trace state 88 instr 61 op broadcast dests r104
+// @trace state 89 instr 62 op sub dests r105
+// @trace state 90 instr 63 op max dests r106
+// @trace state 92 instr 64 op reduce_sum dests r107
+// @trace state 93 instr 65 op add dests r108
+// @trace state 94 instr 66 op gt dests r109
+// @trace state 95 instr 67 op select_n dests r110
+// @trace state 96 instr 68 op select_n dests r111
+// @trace state 103 instr 52 op loop dests r112 r113 r114
+// @trace state 104 instr 69 op sub dests r115
+// @trace state 105 instr 70 op transpose dests r116
+// @trace state 106 instr 71 op broadcast dests r117
+// @trace state 107 instr 72 op max dests r118
+// @trace state 108 instr 73 op iota dests r119
+// @trace state 109 instr 74 op broadcast dests r120
+// @trace state 110 instr 75 op lt dests r121
+// @trace state 111 instr 76 op convert dests r122
+// @trace state 112 instr 77 op broadcast dests r123
+// @trace state 113 instr 78 op select_n dests r124
+// @trace state 115 instr 79 op reduce_sum dests r125
+// @trace state 116 instr 80 op shl dests r126
+// @trace state 117 instr 81 op lt dests r127
+// @trace state 118 instr 82 op add dests r128
+// @trace state 119 instr 83 op select_n dests r129
+// @trace state 120 instr 84 op broadcast dests r130
+// @trace state 121 instr 85 op gather dests r131
+// @trace state 122 instr 86 op add dests r132
+// @trace state 123 instr 87 op and dests r133
+// @trace state 124 instr 88 op slice dests r134
+// @trace state 125 instr 89 op shl dests r135
+// @trace state 126 instr 90 op convert dests r136
+// @trace state 128 instr 91 op pad dests r137
+// @trace state 129 instr 92 op iota dests r138
+// @trace state 130 instr 93 op shl dests r139
+// @trace state 131 instr 94 op broadcast dests r140
+// @trace state 132 instr 95 op iota dests r141
+// @trace state 133 instr 96 op broadcast dests r142
+// @trace state 134 instr 97 op add dests r143
+// @trace state 135 instr 98 op broadcast dests r144
+// @trace state 136 instr 99 op broadcast dests r145
+// @trace state 137 instr 100 op add dests r146
+// @trace state 138 instr 101 op lt dests r147
+// @trace state 139 instr 102 op add dests r149
+// @trace state 140 instr 103 op select_n dests r150
+// @trace state 141 instr 104 op broadcast dests r151
+// @trace state 142 instr 105 op gather dests r152
+// @trace state 143 instr 106 op mov dests r153
+// @trace state 144 instr 107 op broadcast dests r154
+// @trace state 145 instr 108 op add dests r155
+// @trace state 146 instr 109 op convert dests r156
+// @trace state 147 instr 110 op max dests r157
+// @trace state 148 instr 111 op convert dests r158
+// @trace state 149 instr 112 op min dests r159
+// @trace state 150 instr 113 op broadcast dests r160
+// @trace state 151 instr 114 op sub dests r161
+// @trace state 152 instr 115 op convert dests r162
+// @trace state 153 instr 116 op max dests r163
+// @trace state 154 instr 117 op convert dests r164
+// @trace state 155 instr 118 op min dests r165
+// @trace state 156 instr 119 op abs dests r166
+// @trace state 158 instr 120 op reduce_max dests r167
+// @trace state 159 instr 121 op sub dests r168
+// @trace state 167 instr 123 op add dests r174
+// @trace state 168 instr 124 op add dests r175
+// @trace state 169 instr 125 op shra dests r176
+// @trace state 170 instr 126 op broadcast dests r177
+// @trace state 171 instr 127 op sub dests r178
+// @trace state 172 instr 128 op max dests r179
+// @trace state 174 instr 129 op reduce_sum dests r180
+// @trace state 175 instr 130 op neg dests r181
+// @trace state 176 instr 131 op broadcast dests r182
+// @trace state 177 instr 132 op sub dests r183
+// @trace state 178 instr 133 op max dests r184
+// @trace state 180 instr 134 op reduce_sum dests r185
+// @trace state 181 instr 135 op add dests r186
+// @trace state 182 instr 136 op gt dests r187
+// @trace state 183 instr 137 op select_n dests r188
+// @trace state 184 instr 138 op select_n dests r189
+// @trace state 191 instr 122 op loop dests r190 r191 r192
+// @trace state 192 instr 139 op abs dests r193
+// @trace state 194 instr 140 op reduce_max dests r194
+// @trace state 195 instr 141 op sub dests r195
+// @trace state 203 instr 143 op add dests r201
+// @trace state 204 instr 144 op add dests r202
+// @trace state 205 instr 145 op shra dests r203
+// @trace state 206 instr 146 op broadcast dests r204
+// @trace state 207 instr 147 op sub dests r205
+// @trace state 208 instr 148 op max dests r206
+// @trace state 210 instr 149 op reduce_sum dests r207
+// @trace state 211 instr 150 op neg dests r208
+// @trace state 212 instr 151 op broadcast dests r209
+// @trace state 213 instr 152 op sub dests r210
+// @trace state 214 instr 153 op max dests r211
+// @trace state 216 instr 154 op reduce_sum dests r212
+// @trace state 217 instr 155 op add dests r213
+// @trace state 218 instr 156 op gt dests r214
+// @trace state 219 instr 157 op select_n dests r215
+// @trace state 220 instr 158 op select_n dests r216
+// @trace state 227 instr 142 op loop dests r217 r218 r219
+// @trace state 228 instr 159 op sub dests r220
+// @trace state 229 instr 160 op shra dests r221
+// @trace state 230 instr 161 op convert dests r224
+// @trace state 231 instr 162 op max dests r225
+// @trace state 232 instr 163 op convert dests r226
+// @trace state 233 instr 164 op min dests r227
+// @trace state 234 instr 165 op sub dests r228
+// @trace state 235 instr 166 op add dests r229
+// @trace state 236 instr 167 op max dests r230
+// @trace state 237 instr 168 op shra dests r231
+// @trace state 239 instr 169 op concat dests r232
+// @trace state 240 instr 170 op shl dests r233
+// @trace state 241 instr 171 op mov dests r234
+// @trace state 242 instr 172 op rev dests r235
+// @trace state 243 instr 173 op reshape dests r236
+// @trace state 244 instr 174 op iota dests r237
+// @trace state 245 instr 175 op broadcast dests r238
+// @trace state 246 instr 176 op iota dests r239
+// @trace state 247 instr 177 op broadcast dests r240
+// @trace state 248 instr 178 op add dests r241
+// @trace state 249 instr 179 op lt dests r242
+// @trace state 250 instr 180 op add dests r244
+// @trace state 251 instr 181 op select_n dests r245
+// @trace state 252 instr 182 op broadcast dests r246
+// @trace state 253 instr 183 op gather dests r247
+// @trace state 254 instr 184 op broadcast dests r248
+// @trace state 255 instr 185 op add dests r249
+// @trace state 256 instr 186 op convert dests r250
+// @trace state 257 instr 187 op max dests r251
+// @trace state 258 instr 188 op convert dests r252
+// @trace state 259 instr 189 op min dests r253
+// @trace state 260 instr 190 op sub dests r254
+// @trace state 261 instr 191 op convert dests r255
+// @trace state 262 instr 192 op max dests r256
+// @trace state 263 instr 193 op convert dests r257
+// @trace state 264 instr 194 op min dests r258
+// @trace state 265 instr 195 op abs dests r259
+// @trace state 267 instr 196 op reduce_max dests r260
+// @trace state 268 instr 197 op sub dests r261
+// @trace state 276 instr 199 op add dests r267
+// @trace state 277 instr 200 op add dests r268
+// @trace state 278 instr 201 op shra dests r269
+// @trace state 279 instr 202 op broadcast dests r270
+// @trace state 280 instr 203 op sub dests r271
+// @trace state 281 instr 204 op max dests r272
+// @trace state 283 instr 205 op reduce_sum dests r273
+// @trace state 284 instr 206 op neg dests r274
+// @trace state 285 instr 207 op broadcast dests r275
+// @trace state 286 instr 208 op sub dests r276
+// @trace state 287 instr 209 op max dests r277
+// @trace state 289 instr 210 op reduce_sum dests r278
+// @trace state 290 instr 211 op add dests r279
+// @trace state 291 instr 212 op gt dests r280
+// @trace state 292 instr 213 op select_n dests r281
+// @trace state 293 instr 214 op select_n dests r282
+// @trace state 300 instr 198 op loop dests r283 r284 r285
+// @trace state 301 instr 215 op abs dests r286
+// @trace state 303 instr 216 op reduce_max dests r287
+// @trace state 304 instr 217 op sub dests r288
+// @trace state 312 instr 219 op add dests r294
+// @trace state 313 instr 220 op add dests r295
+// @trace state 314 instr 221 op shra dests r296
+// @trace state 315 instr 222 op broadcast dests r297
+// @trace state 316 instr 223 op sub dests r298
+// @trace state 317 instr 224 op max dests r299
+// @trace state 319 instr 225 op reduce_sum dests r300
+// @trace state 320 instr 226 op neg dests r301
+// @trace state 321 instr 227 op broadcast dests r302
+// @trace state 322 instr 228 op sub dests r303
+// @trace state 323 instr 229 op max dests r304
+// @trace state 325 instr 230 op reduce_sum dests r305
+// @trace state 326 instr 231 op add dests r306
+// @trace state 327 instr 232 op gt dests r307
+// @trace state 328 instr 233 op select_n dests r308
+// @trace state 329 instr 234 op select_n dests r309
+// @trace state 336 instr 218 op loop dests r310 r311 r312
+// @trace state 337 instr 235 op sub dests r313
+// @trace state 338 instr 236 op transpose dests r314
+// @trace state 339 instr 237 op broadcast dests r315
+// @trace state 340 instr 238 op max dests r316
+// @trace state 341 instr 239 op iota dests r317
+// @trace state 342 instr 240 op broadcast dests r318
+// @trace state 343 instr 241 op lt dests r319
+// @trace state 344 instr 242 op convert dests r320
+// @trace state 345 instr 243 op broadcast dests r321
+// @trace state 346 instr 244 op select_n dests r322
+// @trace state 348 instr 245 op reduce_sum dests r323
+// @trace state 349 instr 246 op shl dests r324
+// @trace state 350 instr 247 op lt dests r325
+// @trace state 351 instr 248 op add dests r326
+// @trace state 352 instr 249 op select_n dests r327
+// @trace state 353 instr 250 op broadcast dests r328
+// @trace state 354 instr 251 op gather dests r329
+// @trace state 355 instr 252 op add dests r330
+// @trace state 356 instr 253 op and dests r331
+// @trace state 357 instr 254 op slice dests r332
+// @trace state 358 instr 255 op shl dests r333
+// @trace state 359 instr 256 op convert dests r334
+// @trace state 361 instr 257 op pad dests r335
+// @trace state 362 instr 258 op iota dests r336
+// @trace state 363 instr 259 op shl dests r337
+// @trace state 364 instr 260 op broadcast dests r338
+// @trace state 365 instr 261 op iota dests r339
+// @trace state 366 instr 262 op broadcast dests r340
+// @trace state 367 instr 263 op add dests r341
+// @trace state 368 instr 264 op broadcast dests r342
+// @trace state 369 instr 265 op broadcast dests r343
+// @trace state 370 instr 266 op add dests r344
+// @trace state 371 instr 267 op lt dests r345
+// @trace state 372 instr 268 op add dests r347
+// @trace state 373 instr 269 op select_n dests r348
+// @trace state 374 instr 270 op broadcast dests r349
+// @trace state 375 instr 271 op gather dests r350
+// @trace state 376 instr 272 op mov dests r351
+// @trace state 377 instr 273 op broadcast dests r352
+// @trace state 378 instr 274 op add dests r353
+// @trace state 379 instr 275 op convert dests r354
+// @trace state 380 instr 276 op max dests r355
+// @trace state 381 instr 277 op convert dests r356
+// @trace state 382 instr 278 op min dests r357
+// @trace state 383 instr 279 op broadcast dests r358
+// @trace state 384 instr 280 op sub dests r359
+// @trace state 385 instr 281 op convert dests r360
+// @trace state 386 instr 282 op max dests r361
+// @trace state 387 instr 283 op convert dests r362
+// @trace state 388 instr 284 op min dests r363
+// @trace state 389 instr 285 op abs dests r364
+// @trace state 391 instr 286 op reduce_max dests r365
+// @trace state 392 instr 287 op sub dests r366
+// @trace state 400 instr 289 op add dests r372
+// @trace state 401 instr 290 op add dests r373
+// @trace state 402 instr 291 op shra dests r374
+// @trace state 403 instr 292 op broadcast dests r375
+// @trace state 404 instr 293 op sub dests r376
+// @trace state 405 instr 294 op max dests r377
+// @trace state 407 instr 295 op reduce_sum dests r378
+// @trace state 408 instr 296 op neg dests r379
+// @trace state 409 instr 297 op broadcast dests r380
+// @trace state 410 instr 298 op sub dests r381
+// @trace state 411 instr 299 op max dests r382
+// @trace state 413 instr 300 op reduce_sum dests r383
+// @trace state 414 instr 301 op add dests r384
+// @trace state 415 instr 302 op gt dests r385
+// @trace state 416 instr 303 op select_n dests r386
+// @trace state 417 instr 304 op select_n dests r387
+// @trace state 424 instr 288 op loop dests r388 r389 r390
+// @trace state 425 instr 305 op abs dests r391
+// @trace state 427 instr 306 op reduce_max dests r392
+// @trace state 428 instr 307 op sub dests r393
+// @trace state 436 instr 309 op add dests r399
+// @trace state 437 instr 310 op add dests r400
+// @trace state 438 instr 311 op shra dests r401
+// @trace state 439 instr 312 op broadcast dests r402
+// @trace state 440 instr 313 op sub dests r403
+// @trace state 441 instr 314 op max dests r404
+// @trace state 443 instr 315 op reduce_sum dests r405
+// @trace state 444 instr 316 op neg dests r406
+// @trace state 445 instr 317 op broadcast dests r407
+// @trace state 446 instr 318 op sub dests r408
+// @trace state 447 instr 319 op max dests r409
+// @trace state 449 instr 320 op reduce_sum dests r410
+// @trace state 450 instr 321 op add dests r411
+// @trace state 451 instr 322 op gt dests r412
+// @trace state 452 instr 323 op select_n dests r413
+// @trace state 453 instr 324 op select_n dests r414
+// @trace state 460 instr 308 op loop dests r415 r416 r417
+// @trace state 461 instr 325 op sub dests r418
+// @trace state 462 instr 326 op shra dests r419
+// @trace state 463 instr 327 op convert dests r420
+// @trace state 464 instr 328 op max dests r421
+// @trace state 465 instr 329 op convert dests r422
+// @trace state 466 instr 330 op min dests r423
+// @trace state 467 instr 331 op sub dests r424
+// @trace state 468 instr 332 op add dests r425
+// @trace state 469 instr 333 op max dests r426
+// @trace state 470 instr 334 op shra dests r427
+// @trace state 472 instr 335 op concat dests r428
+// @trace state 473 instr 336 op shl dests r429
+// @trace state 474 instr 337 op mov dests r430
+// @trace state 475 instr 338 op rev dests r431
+// @trace state 476 instr 339 op reshape dests r432
+// @trace state 477 instr 340 op iota dests r433
+// @trace state 478 instr 341 op broadcast dests r434
+// @trace state 479 instr 342 op iota dests r435
+// @trace state 480 instr 343 op broadcast dests r436
+// @trace state 481 instr 344 op add dests r437
+// @trace state 482 instr 345 op lt dests r438
+// @trace state 483 instr 346 op add dests r440
+// @trace state 484 instr 347 op select_n dests r441
+// @trace state 485 instr 348 op broadcast dests r442
+// @trace state 486 instr 349 op gather dests r443
+// @trace state 487 instr 350 op broadcast dests r444
+// @trace state 488 instr 351 op add dests r445
+// @trace state 489 instr 352 op convert dests r446
+// @trace state 490 instr 353 op max dests r447
+// @trace state 491 instr 354 op convert dests r448
+// @trace state 492 instr 355 op min dests r449
+// @trace state 493 instr 356 op sub dests r450
+// @trace state 494 instr 357 op convert dests r451
+// @trace state 495 instr 358 op max dests r452
+// @trace state 496 instr 359 op convert dests r453
+// @trace state 497 instr 360 op min dests r454
+// @trace state 498 instr 361 op abs dests r455
+// @trace state 500 instr 362 op reduce_max dests r456
+// @trace state 501 instr 363 op sub dests r457
+// @trace state 509 instr 365 op add dests r463
+// @trace state 510 instr 366 op add dests r464
+// @trace state 511 instr 367 op shra dests r465
+// @trace state 512 instr 368 op broadcast dests r466
+// @trace state 513 instr 369 op sub dests r467
+// @trace state 514 instr 370 op max dests r468
+// @trace state 516 instr 371 op reduce_sum dests r469
+// @trace state 517 instr 372 op neg dests r470
+// @trace state 518 instr 373 op broadcast dests r471
+// @trace state 519 instr 374 op sub dests r472
+// @trace state 520 instr 375 op max dests r473
+// @trace state 522 instr 376 op reduce_sum dests r474
+// @trace state 523 instr 377 op add dests r475
+// @trace state 524 instr 378 op gt dests r476
+// @trace state 525 instr 379 op select_n dests r477
+// @trace state 526 instr 380 op select_n dests r478
+// @trace state 533 instr 364 op loop dests r479 r480 r481
+// @trace state 534 instr 381 op abs dests r482
+// @trace state 536 instr 382 op reduce_max dests r483
+// @trace state 537 instr 383 op sub dests r484
+// @trace state 545 instr 385 op add dests r490
+// @trace state 546 instr 386 op add dests r491
+// @trace state 547 instr 387 op shra dests r492
+// @trace state 548 instr 388 op broadcast dests r493
+// @trace state 549 instr 389 op sub dests r494
+// @trace state 550 instr 390 op max dests r495
+// @trace state 552 instr 391 op reduce_sum dests r496
+// @trace state 553 instr 392 op neg dests r497
+// @trace state 554 instr 393 op broadcast dests r498
+// @trace state 555 instr 394 op sub dests r499
+// @trace state 556 instr 395 op max dests r500
+// @trace state 558 instr 396 op reduce_sum dests r501
+// @trace state 559 instr 397 op add dests r502
+// @trace state 560 instr 398 op gt dests r503
+// @trace state 561 instr 399 op select_n dests r504
+// @trace state 562 instr 400 op select_n dests r505
+// @trace state 569 instr 384 op loop dests r506 r507 r508
+// @trace state 570 instr 401 op sub dests r509
+// @trace state 571 instr 402 op transpose dests r510
+// @trace state 572 instr 403 op broadcast dests r511
+// @trace state 573 instr 404 op max dests r512
+// @trace state 574 instr 405 op iota dests r513
+// @trace state 575 instr 406 op broadcast dests r514
+// @trace state 576 instr 407 op lt dests r515
+// @trace state 577 instr 408 op convert dests r516
+// @trace state 578 instr 409 op broadcast dests r517
+// @trace state 579 instr 410 op select_n dests r518
+// @trace state 581 instr 411 op reduce_sum dests r519
+// @trace state 582 instr 412 op shl dests r521
+// @trace state 583 instr 413 op lt dests r522
+// @trace state 584 instr 414 op add dests r523
+// @trace state 585 instr 415 op select_n dests r524
+// @trace state 586 instr 416 op broadcast dests r525
+// @trace state 587 instr 417 op gather dests r526
+// @trace state 588 instr 418 op add dests r527
+// @trace state 589 instr 419 op and dests r528
+// @trace state 590 instr 420 op slice dests r529
+// @trace state 591 instr 421 op shl dests r530
+// @trace state 592 instr 422 op convert dests r531
+// @trace state 594 instr 423 op pad dests r532
+// @trace state 595 instr 424 op iota dests r533
+// @trace state 596 instr 425 op shl dests r534
+// @trace state 597 instr 426 op broadcast dests r535
+// @trace state 598 instr 427 op iota dests r536
+// @trace state 599 instr 428 op broadcast dests r537
+// @trace state 600 instr 429 op add dests r538
+// @trace state 601 instr 430 op broadcast dests r539
+// @trace state 602 instr 431 op broadcast dests r540
+// @trace state 603 instr 432 op add dests r541
+// @trace state 604 instr 433 op lt dests r542
+// @trace state 605 instr 434 op add dests r544
+// @trace state 606 instr 435 op select_n dests r545
+// @trace state 607 instr 436 op broadcast dests r546
+// @trace state 608 instr 437 op gather dests r547
+// @trace state 609 instr 438 op mov dests r548
+// @trace state 610 instr 439 op broadcast dests r549
+// @trace state 611 instr 440 op add dests r550
+// @trace state 612 instr 441 op convert dests r551
+// @trace state 613 instr 442 op max dests r552
+// @trace state 614 instr 443 op convert dests r553
+// @trace state 615 instr 444 op min dests r554
+// @trace state 616 instr 445 op broadcast dests r555
+// @trace state 617 instr 446 op sub dests r556
+// @trace state 618 instr 447 op convert dests r557
+// @trace state 619 instr 448 op max dests r558
+// @trace state 620 instr 449 op convert dests r559
+// @trace state 621 instr 450 op min dests r560
+// @trace state 622 instr 451 op abs dests r561
+// @trace state 624 instr 452 op reduce_max dests r562
+// @trace state 625 instr 453 op sub dests r563
+// @trace state 633 instr 455 op add dests r569
+// @trace state 634 instr 456 op add dests r570
+// @trace state 635 instr 457 op shra dests r571
+// @trace state 636 instr 458 op broadcast dests r572
+// @trace state 637 instr 459 op sub dests r573
+// @trace state 638 instr 460 op max dests r574
+// @trace state 640 instr 461 op reduce_sum dests r575
+// @trace state 641 instr 462 op neg dests r576
+// @trace state 642 instr 463 op broadcast dests r577
+// @trace state 643 instr 464 op sub dests r578
+// @trace state 644 instr 465 op max dests r579
+// @trace state 646 instr 466 op reduce_sum dests r580
+// @trace state 647 instr 467 op add dests r581
+// @trace state 648 instr 468 op gt dests r582
+// @trace state 649 instr 469 op select_n dests r583
+// @trace state 650 instr 470 op select_n dests r584
+// @trace state 657 instr 454 op loop dests r585 r586 r587
+// @trace state 658 instr 471 op abs dests r588
+// @trace state 660 instr 472 op reduce_max dests r589
+// @trace state 661 instr 473 op sub dests r590
+// @trace state 669 instr 475 op add dests r596
+// @trace state 670 instr 476 op add dests r597
+// @trace state 671 instr 477 op shra dests r598
+// @trace state 672 instr 478 op broadcast dests r599
+// @trace state 673 instr 479 op sub dests r600
+// @trace state 674 instr 480 op max dests r601
+// @trace state 676 instr 481 op reduce_sum dests r602
+// @trace state 677 instr 482 op neg dests r603
+// @trace state 678 instr 483 op broadcast dests r604
+// @trace state 679 instr 484 op sub dests r605
+// @trace state 680 instr 485 op max dests r606
+// @trace state 682 instr 486 op reduce_sum dests r607
+// @trace state 683 instr 487 op add dests r608
+// @trace state 684 instr 488 op gt dests r609
+// @trace state 685 instr 489 op select_n dests r610
+// @trace state 686 instr 490 op select_n dests r611
+// @trace state 693 instr 474 op loop dests r612 r613 r614
+// @trace state 694 instr 491 op sub dests r615
+// @trace state 695 instr 492 op shra dests r616
+// @trace state 696 instr 493 op convert dests r617
+// @trace state 697 instr 494 op max dests r618
+// @trace state 698 instr 495 op convert dests r619
+// @trace state 699 instr 496 op min dests r620
+// @trace state 700 instr 497 op sub dests r621
+// @trace state 701 instr 498 op add dests r622
+// @trace state 702 instr 499 op max dests r623
+// @trace state 703 instr 500 op shra dests r624
+// @trace state 705 instr 501 op concat dests r625
+// @trace state 706 instr 502 op shl dests r626
+// @trace state 707 instr 503 op mov dests r627
+// @trace state 708 instr 504 op rev dests r628
+// @trace state 709 instr 505 op reshape dests r629
+// @trace state 710 instr 506 op iota dests r630
+// @trace state 711 instr 507 op broadcast dests r631
+// @trace state 712 instr 508 op iota dests r632
+// @trace state 713 instr 509 op broadcast dests r633
+// @trace state 714 instr 510 op add dests r634
+// @trace state 715 instr 511 op lt dests r635
+// @trace state 716 instr 512 op add dests r637
+// @trace state 717 instr 513 op select_n dests r638
+// @trace state 718 instr 514 op broadcast dests r639
+// @trace state 719 instr 515 op gather dests r640
+// @trace state 720 instr 516 op broadcast dests r641
+// @trace state 721 instr 517 op add dests r642
+// @trace state 722 instr 518 op convert dests r643
+// @trace state 723 instr 519 op max dests r644
+// @trace state 724 instr 520 op convert dests r645
+// @trace state 725 instr 521 op min dests r646
+// @trace state 726 instr 522 op sub dests r647
+// @trace state 727 instr 523 op convert dests r648
+// @trace state 728 instr 524 op max dests r649
+// @trace state 729 instr 525 op convert dests r650
+// @trace state 730 instr 526 op min dests r651
+// @trace state 731 instr 527 op abs dests r652
+// @trace state 733 instr 528 op reduce_max dests r653
+// @trace state 734 instr 529 op sub dests r654
+// @trace state 742 instr 531 op add dests r660
+// @trace state 743 instr 532 op add dests r661
+// @trace state 744 instr 533 op shra dests r662
+// @trace state 745 instr 534 op broadcast dests r663
+// @trace state 746 instr 535 op sub dests r664
+// @trace state 747 instr 536 op max dests r665
+// @trace state 749 instr 537 op reduce_sum dests r666
+// @trace state 750 instr 538 op neg dests r667
+// @trace state 751 instr 539 op broadcast dests r668
+// @trace state 752 instr 540 op sub dests r669
+// @trace state 753 instr 541 op max dests r670
+// @trace state 755 instr 542 op reduce_sum dests r671
+// @trace state 756 instr 543 op add dests r672
+// @trace state 757 instr 544 op gt dests r673
+// @trace state 758 instr 545 op select_n dests r674
+// @trace state 759 instr 546 op select_n dests r675
+// @trace state 766 instr 530 op loop dests r676 r677 r678
+// @trace state 767 instr 547 op abs dests r679
+// @trace state 769 instr 548 op reduce_max dests r680
+// @trace state 770 instr 549 op sub dests r681
+// @trace state 778 instr 551 op add dests r687
+// @trace state 779 instr 552 op add dests r688
+// @trace state 780 instr 553 op shra dests r689
+// @trace state 781 instr 554 op broadcast dests r690
+// @trace state 782 instr 555 op sub dests r691
+// @trace state 783 instr 556 op max dests r692
+// @trace state 785 instr 557 op reduce_sum dests r693
+// @trace state 786 instr 558 op neg dests r694
+// @trace state 787 instr 559 op broadcast dests r695
+// @trace state 788 instr 560 op sub dests r696
+// @trace state 789 instr 561 op max dests r697
+// @trace state 791 instr 562 op reduce_sum dests r698
+// @trace state 792 instr 563 op add dests r699
+// @trace state 793 instr 564 op gt dests r700
+// @trace state 794 instr 565 op select_n dests r701
+// @trace state 795 instr 566 op select_n dests r702
+// @trace state 802 instr 550 op loop dests r703 r704 r705
+// @trace state 803 instr 567 op sub dests r706
+// @trace state 804 instr 568 op transpose dests r707
+// @trace state 805 instr 569 op broadcast dests r708
+// @trace state 806 instr 570 op max dests r709
+// @trace state 807 instr 571 op iota dests r710
+// @trace state 808 instr 572 op broadcast dests r711
+// @trace state 809 instr 573 op lt dests r712
+// @trace state 810 instr 574 op convert dests r713
+// @trace state 811 instr 575 op broadcast dests r714
+// @trace state 812 instr 576 op select_n dests r715
+// @trace state 814 instr 577 op reduce_sum dests r716
+// @trace state 815 instr 578 op shl dests r718
+// @trace state 816 instr 579 op lt dests r719
+// @trace state 817 instr 580 op add dests r720
+// @trace state 818 instr 581 op select_n dests r721
+// @trace state 819 instr 582 op broadcast dests r722
+// @trace state 820 instr 583 op gather dests r723
+// @trace state 821 instr 584 op add dests r724
+// @trace state 822 instr 585 op and dests r725
+// @trace state 823 instr 586 op slice dests r726
+// @trace state 824 instr 587 op shl dests r727
+// @trace state 825 instr 588 op convert dests r728
+// @trace state 827 instr 589 op pad dests r729
+// @trace state 828 instr 590 op iota dests r730
+// @trace state 829 instr 591 op shl dests r731
+// @trace state 830 instr 592 op broadcast dests r732
+// @trace state 831 instr 593 op iota dests r733
+// @trace state 832 instr 594 op broadcast dests r734
+// @trace state 833 instr 595 op add dests r735
+// @trace state 834 instr 596 op broadcast dests r736
+// @trace state 835 instr 597 op broadcast dests r737
+// @trace state 836 instr 598 op add dests r738
+// @trace state 837 instr 599 op lt dests r739
+// @trace state 838 instr 600 op add dests r741
+// @trace state 839 instr 601 op select_n dests r742
+// @trace state 840 instr 602 op broadcast dests r743
+// @trace state 841 instr 603 op gather dests r744
+// @trace state 842 instr 604 op mov dests r745
+// @trace state 843 instr 605 op broadcast dests r746
+// @trace state 844 instr 606 op add dests r747
+// @trace state 845 instr 607 op convert dests r748
+// @trace state 846 instr 608 op max dests r749
+// @trace state 847 instr 609 op convert dests r750
+// @trace state 848 instr 610 op min dests r751
+// @trace state 849 instr 611 op broadcast dests r752
+// @trace state 850 instr 612 op sub dests r753
+// @trace state 851 instr 613 op convert dests r754
+// @trace state 852 instr 614 op max dests r755
+// @trace state 853 instr 615 op convert dests r756
+// @trace state 854 instr 616 op min dests r757
+// @trace state 855 instr 617 op abs dests r758
+// @trace state 857 instr 618 op reduce_max dests r759
+// @trace state 858 instr 619 op sub dests r760
+// @trace state 866 instr 621 op add dests r766
+// @trace state 867 instr 622 op add dests r767
+// @trace state 868 instr 623 op shra dests r768
+// @trace state 869 instr 624 op broadcast dests r769
+// @trace state 870 instr 625 op sub dests r770
+// @trace state 871 instr 626 op max dests r771
+// @trace state 873 instr 627 op reduce_sum dests r772
+// @trace state 874 instr 628 op neg dests r773
+// @trace state 875 instr 629 op broadcast dests r774
+// @trace state 876 instr 630 op sub dests r775
+// @trace state 877 instr 631 op max dests r776
+// @trace state 879 instr 632 op reduce_sum dests r777
+// @trace state 880 instr 633 op add dests r778
+// @trace state 881 instr 634 op gt dests r779
+// @trace state 882 instr 635 op select_n dests r780
+// @trace state 883 instr 636 op select_n dests r781
+// @trace state 890 instr 620 op loop dests r782 r783 r784
+// @trace state 891 instr 637 op abs dests r785
+// @trace state 893 instr 638 op reduce_max dests r786
+// @trace state 894 instr 639 op sub dests r787
+// @trace state 902 instr 641 op add dests r793
+// @trace state 903 instr 642 op add dests r794
+// @trace state 904 instr 643 op shra dests r795
+// @trace state 905 instr 644 op broadcast dests r796
+// @trace state 906 instr 645 op sub dests r797
+// @trace state 907 instr 646 op max dests r798
+// @trace state 909 instr 647 op reduce_sum dests r799
+// @trace state 910 instr 648 op neg dests r800
+// @trace state 911 instr 649 op broadcast dests r801
+// @trace state 912 instr 650 op sub dests r802
+// @trace state 913 instr 651 op max dests r803
+// @trace state 915 instr 652 op reduce_sum dests r804
+// @trace state 916 instr 653 op add dests r805
+// @trace state 917 instr 654 op gt dests r806
+// @trace state 918 instr 655 op select_n dests r807
+// @trace state 919 instr 656 op select_n dests r808
+// @trace state 926 instr 640 op loop dests r809 r810 r811
+// @trace state 927 instr 657 op sub dests r812
+// @trace state 928 instr 658 op shra dests r813
+// @trace state 929 instr 659 op convert dests r814
+// @trace state 930 instr 660 op max dests r815
+// @trace state 931 instr 661 op convert dests r816
+// @trace state 932 instr 662 op min dests r817
+// @trace state 933 instr 663 op sub dests r818
+// @trace state 934 instr 664 op add dests r819
+// @trace state 935 instr 665 op max dests r820
+// @trace state 936 instr 666 op shra dests r821
+// @trace state 938 instr 667 op concat dests r822
+// @trace state 939 instr 668 op shl dests r823
+// @trace state 940 instr 669 op mov dests r824
+// @trace state 941 instr 670 op rev dests r825
+// @trace state 942 instr 671 op reshape dests r826
+// @trace state 943 instr 672 op iota dests r827
+// @trace state 944 instr 673 op broadcast dests r828
+// @trace state 945 instr 674 op iota dests r829
+// @trace state 946 instr 675 op broadcast dests r830
+// @trace state 947 instr 676 op add dests r831
+// @trace state 948 instr 677 op lt dests r832
+// @trace state 949 instr 678 op add dests r834
+// @trace state 950 instr 679 op select_n dests r835
+// @trace state 951 instr 680 op broadcast dests r836
+// @trace state 952 instr 681 op gather dests r837
+// @trace state 953 instr 682 op broadcast dests r838
+// @trace state 954 instr 683 op add dests r839
+// @trace state 955 instr 684 op convert dests r840
+// @trace state 956 instr 685 op max dests r841
+// @trace state 957 instr 686 op convert dests r842
+// @trace state 958 instr 687 op min dests r843
+// @trace state 959 instr 688 op sub dests r844
+// @trace state 960 instr 689 op convert dests r845
+// @trace state 961 instr 690 op max dests r846
+// @trace state 962 instr 691 op convert dests r847
+// @trace state 963 instr 692 op min dests r848
+// @trace state 964 instr 693 op abs dests r849
+// @trace state 966 instr 694 op reduce_max dests r850
+// @trace state 967 instr 695 op sub dests r851
+// @trace state 975 instr 697 op add dests r857
+// @trace state 976 instr 698 op add dests r858
+// @trace state 977 instr 699 op shra dests r859
+// @trace state 978 instr 700 op broadcast dests r860
+// @trace state 979 instr 701 op sub dests r861
+// @trace state 980 instr 702 op max dests r862
+// @trace state 982 instr 703 op reduce_sum dests r863
+// @trace state 983 instr 704 op neg dests r864
+// @trace state 984 instr 705 op broadcast dests r865
+// @trace state 985 instr 706 op sub dests r866
+// @trace state 986 instr 707 op max dests r867
+// @trace state 988 instr 708 op reduce_sum dests r868
+// @trace state 989 instr 709 op add dests r869
+// @trace state 990 instr 710 op gt dests r870
+// @trace state 991 instr 711 op select_n dests r871
+// @trace state 992 instr 712 op select_n dests r872
+// @trace state 999 instr 696 op loop dests r873 r874 r875
+// @trace state 1000 instr 713 op abs dests r876
+// @trace state 1002 instr 714 op reduce_max dests r877
+// @trace state 1003 instr 715 op sub dests r878
+// @trace state 1011 instr 717 op add dests r884
+// @trace state 1012 instr 718 op add dests r885
+// @trace state 1013 instr 719 op shra dests r886
+// @trace state 1014 instr 720 op broadcast dests r887
+// @trace state 1015 instr 721 op sub dests r888
+// @trace state 1016 instr 722 op max dests r889
+// @trace state 1018 instr 723 op reduce_sum dests r890
+// @trace state 1019 instr 724 op neg dests r891
+// @trace state 1020 instr 725 op broadcast dests r892
+// @trace state 1021 instr 726 op sub dests r893
+// @trace state 1022 instr 727 op max dests r894
+// @trace state 1024 instr 728 op reduce_sum dests r895
+// @trace state 1025 instr 729 op add dests r896
+// @trace state 1026 instr 730 op gt dests r897
+// @trace state 1027 instr 731 op select_n dests r898
+// @trace state 1028 instr 732 op select_n dests r899
+// @trace state 1035 instr 716 op loop dests r900 r901 r902
+// @trace state 1036 instr 733 op sub dests r903
+// @trace state 1037 instr 734 op transpose dests r904
+// @trace state 1038 instr 735 op broadcast dests r905
+// @trace state 1039 instr 736 op max dests r906
+// @trace state 1040 instr 737 op iota dests r907
+// @trace state 1041 instr 738 op broadcast dests r908
+// @trace state 1042 instr 739 op lt dests r909
+// @trace state 1043 instr 740 op convert dests r910
+// @trace state 1044 instr 741 op broadcast dests r911
+// @trace state 1045 instr 742 op select_n dests r912
+// @trace state 1047 instr 743 op reduce_sum dests r913
+// @trace state 1048 instr 744 op shl dests r915
+// @trace state 1049 instr 745 op lt dests r916
+// @trace state 1050 instr 746 op add dests r917
+// @trace state 1051 instr 747 op select_n dests r918
+// @trace state 1052 instr 748 op broadcast dests r919
+// @trace state 1053 instr 749 op gather dests r920
+// @trace state 1054 instr 750 op add dests r921
+// @trace state 1055 instr 751 op and dests r922
+// @trace state 1056 instr 752 op slice dests r923
+// @trace state 1057 instr 753 op shl dests r924
+// @trace state 1058 instr 754 op convert dests r925
+// @trace state 1060 instr 755 op pad dests r926
+// @trace state 1061 instr 756 op iota dests r927
+// @trace state 1062 instr 757 op shl dests r928
+// @trace state 1063 instr 758 op broadcast dests r929
+// @trace state 1064 instr 759 op iota dests r930
+// @trace state 1065 instr 760 op broadcast dests r931
+// @trace state 1066 instr 761 op add dests r932
+// @trace state 1067 instr 762 op broadcast dests r933
+// @trace state 1068 instr 763 op broadcast dests r934
+// @trace state 1069 instr 764 op add dests r935
+// @trace state 1070 instr 765 op lt dests r936
+// @trace state 1071 instr 766 op add dests r938
+// @trace state 1072 instr 767 op select_n dests r939
+// @trace state 1073 instr 768 op broadcast dests r940
+// @trace state 1074 instr 769 op gather dests r941
+// @trace state 1075 instr 770 op mov dests r942
+// @trace state 1076 instr 771 op broadcast dests r943
+// @trace state 1077 instr 772 op add dests r944
+// @trace state 1078 instr 773 op convert dests r945
+// @trace state 1079 instr 774 op max dests r946
+// @trace state 1080 instr 775 op convert dests r947
+// @trace state 1081 instr 776 op min dests r948
+// @trace state 1082 instr 777 op broadcast dests r949
+// @trace state 1083 instr 778 op sub dests r950
+// @trace state 1084 instr 779 op convert dests r951
+// @trace state 1085 instr 780 op max dests r952
+// @trace state 1086 instr 781 op convert dests r953
+// @trace state 1087 instr 782 op min dests r954
+// @trace state 1088 instr 783 op abs dests r955
+// @trace state 1090 instr 784 op reduce_max dests r956
+// @trace state 1091 instr 785 op sub dests r957
+// @trace state 1099 instr 787 op add dests r963
+// @trace state 1100 instr 788 op add dests r964
+// @trace state 1101 instr 789 op shra dests r965
+// @trace state 1102 instr 790 op broadcast dests r966
+// @trace state 1103 instr 791 op sub dests r967
+// @trace state 1104 instr 792 op max dests r968
+// @trace state 1106 instr 793 op reduce_sum dests r969
+// @trace state 1107 instr 794 op neg dests r970
+// @trace state 1108 instr 795 op broadcast dests r971
+// @trace state 1109 instr 796 op sub dests r972
+// @trace state 1110 instr 797 op max dests r973
+// @trace state 1112 instr 798 op reduce_sum dests r974
+// @trace state 1113 instr 799 op add dests r975
+// @trace state 1114 instr 800 op gt dests r976
+// @trace state 1115 instr 801 op select_n dests r977
+// @trace state 1116 instr 802 op select_n dests r978
+// @trace state 1123 instr 786 op loop dests r979 r980 r981
+// @trace state 1124 instr 803 op abs dests r982
+// @trace state 1126 instr 804 op reduce_max dests r983
+// @trace state 1127 instr 805 op sub dests r984
+// @trace state 1135 instr 807 op add dests r990
+// @trace state 1136 instr 808 op add dests r991
+// @trace state 1137 instr 809 op shra dests r992
+// @trace state 1138 instr 810 op broadcast dests r993
+// @trace state 1139 instr 811 op sub dests r994
+// @trace state 1140 instr 812 op max dests r995
+// @trace state 1142 instr 813 op reduce_sum dests r996
+// @trace state 1143 instr 814 op neg dests r997
+// @trace state 1144 instr 815 op broadcast dests r998
+// @trace state 1145 instr 816 op sub dests r999
+// @trace state 1146 instr 817 op max dests r1000
+// @trace state 1148 instr 818 op reduce_sum dests r1001
+// @trace state 1149 instr 819 op add dests r1002
+// @trace state 1150 instr 820 op gt dests r1003
+// @trace state 1151 instr 821 op select_n dests r1004
+// @trace state 1152 instr 822 op select_n dests r1005
+// @trace state 1159 instr 806 op loop dests r1006 r1007 r1008
+// @trace state 1160 instr 823 op sub dests r1009
+// @trace state 1161 instr 824 op shra dests r1010
+// @trace state 1162 instr 825 op convert dests r1011
+// @trace state 1163 instr 826 op max dests r1012
+// @trace state 1164 instr 827 op convert dests r1013
+// @trace state 1165 instr 828 op min dests r1014
+// @trace state 1166 instr 829 op sub dests r1015
+// @trace state 1167 instr 830 op add dests r1016
+// @trace state 1168 instr 831 op max dests r1017
+// @trace state 1169 instr 832 op shra dests r1018
+// @trace state 1171 instr 833 op concat dests r1019
+// @trace state 1172 instr 834 op shl dests r1020
+// @trace state 1173 instr 835 op mov dests r1021
+// @trace state 1174 instr 836 op rev dests r1022
+// @trace state 1175 instr 837 op reshape dests r1023
+// @trace state 1176 instr 838 op iota dests r1024
+// @trace state 1177 instr 839 op broadcast dests r1025
+// @trace state 1178 instr 840 op iota dests r1026
+// @trace state 1179 instr 841 op broadcast dests r1027
+// @trace state 1180 instr 842 op add dests r1028
+// @trace state 1181 instr 843 op lt dests r1029
+// @trace state 1182 instr 844 op add dests r1031
+// @trace state 1183 instr 845 op select_n dests r1032
+// @trace state 1184 instr 846 op broadcast dests r1033
+// @trace state 1185 instr 847 op gather dests r1034
+// @trace state 1186 instr 848 op broadcast dests r1035
+// @trace state 1187 instr 849 op add dests r1036
+// @trace state 1188 instr 850 op convert dests r1037
+// @trace state 1189 instr 851 op max dests r1038
+// @trace state 1190 instr 852 op convert dests r1039
+// @trace state 1191 instr 853 op min dests r1040
+// @trace state 1192 instr 854 op sub dests r1041
+// @trace state 1193 instr 855 op convert dests r1042
+// @trace state 1194 instr 856 op max dests r1043
+// @trace state 1195 instr 857 op convert dests r1044
+// @trace state 1196 instr 858 op min dests r1045
+// @trace state 1197 instr 859 op abs dests r1046
+// @trace state 1199 instr 860 op reduce_max dests r1047
+// @trace state 1200 instr 861 op sub dests r1048
+// @trace state 1208 instr 863 op add dests r1054
+// @trace state 1209 instr 864 op add dests r1055
+// @trace state 1210 instr 865 op shra dests r1056
+// @trace state 1211 instr 866 op broadcast dests r1057
+// @trace state 1212 instr 867 op sub dests r1058
+// @trace state 1213 instr 868 op max dests r1059
+// @trace state 1215 instr 869 op reduce_sum dests r1060
+// @trace state 1216 instr 870 op neg dests r1061
+// @trace state 1217 instr 871 op broadcast dests r1062
+// @trace state 1218 instr 872 op sub dests r1063
+// @trace state 1219 instr 873 op max dests r1064
+// @trace state 1221 instr 874 op reduce_sum dests r1065
+// @trace state 1222 instr 875 op add dests r1066
+// @trace state 1223 instr 876 op gt dests r1067
+// @trace state 1224 instr 877 op select_n dests r1068
+// @trace state 1225 instr 878 op select_n dests r1069
+// @trace state 1232 instr 862 op loop dests r1070 r1071 r1072
+// @trace state 1233 instr 879 op abs dests r1073
+// @trace state 1235 instr 880 op reduce_max dests r1074
+// @trace state 1236 instr 881 op sub dests r1075
+// @trace state 1244 instr 883 op add dests r1081
+// @trace state 1245 instr 884 op add dests r1082
+// @trace state 1246 instr 885 op shra dests r1083
+// @trace state 1247 instr 886 op broadcast dests r1084
+// @trace state 1248 instr 887 op sub dests r1085
+// @trace state 1249 instr 888 op max dests r1086
+// @trace state 1251 instr 889 op reduce_sum dests r1087
+// @trace state 1252 instr 890 op neg dests r1088
+// @trace state 1253 instr 891 op broadcast dests r1089
+// @trace state 1254 instr 892 op sub dests r1090
+// @trace state 1255 instr 893 op max dests r1091
+// @trace state 1257 instr 894 op reduce_sum dests r1092
+// @trace state 1258 instr 895 op add dests r1093
+// @trace state 1259 instr 896 op gt dests r1094
+// @trace state 1260 instr 897 op select_n dests r1095
+// @trace state 1261 instr 898 op select_n dests r1096
+// @trace state 1268 instr 882 op loop dests r1097 r1098 r1099
+// @trace state 1269 instr 899 op sub dests r1100
+// @trace state 1270 instr 900 op transpose dests r1101
+// @trace state 1271 instr 901 op broadcast dests r1102
+// @trace state 1272 instr 902 op max dests r1103
+// @trace state 1273 instr 903 op iota dests r1104
+// @trace state 1274 instr 904 op broadcast dests r1105
+// @trace state 1275 instr 905 op lt dests r1106
+// @trace state 1276 instr 906 op convert dests r1107
+// @trace state 1277 instr 907 op broadcast dests r1108
+// @trace state 1278 instr 908 op select_n dests r1109
+// @trace state 1280 instr 909 op reduce_sum dests r1110
+// @trace state 1281 instr 910 op shl dests r1112
+// @trace state 1282 instr 911 op lt dests r1113
+// @trace state 1283 instr 912 op add dests r1114
+// @trace state 1284 instr 913 op select_n dests r1115
+// @trace state 1285 instr 914 op broadcast dests r1116
+// @trace state 1286 instr 915 op gather dests r1117
+// @trace state 1287 instr 916 op add dests r1118
+// @trace state 1293 instr 917 op concat dests r1119
+// @trace state 1294 instr 918 op add dests r1120
+// @trace state 1295 instr 919 op add dests r1121
+// @trace state 1296 instr 920 op mov dests r1122
+// @trace state 1297 instr 921 op broadcast dests r1123
+// @trace state 1298 instr 922 op sub dests r1124
+// @trace state 1299 instr 923 op mov dests r1125
+// @trace state 1300 instr 924 op ge dests r1126
+// @trace state 1301 instr 925 op max dests r1127
+// @trace state 1302 instr 926 op broadcast dests r1128
+// @trace state 1303 instr 927 op shl dests r1129
+// @trace state 1304 instr 928 op neg dests r1130
+// @trace state 1305 instr 929 op max dests r1131
+// @trace state 1306 instr 930 op broadcast dests r1132
+// @trace state 1307 instr 931 op shra dests r1133
+// @trace state 1308 instr 932 op broadcast dests r1134
+// @trace state 1309 instr 933 op select_n dests r1135
+// @trace state 1310 instr 934 op mov dests r1136
+// @trace state 1311 instr 935 op ge dests r1137
+// @trace state 1312 instr 936 op max dests r1138
+// @trace state 1313 instr 937 op broadcast dests r1139
+// @trace state 1314 instr 938 op shl dests r1140
+// @trace state 1315 instr 939 op neg dests r1141
+// @trace state 1316 instr 940 op max dests r1142
+// @trace state 1317 instr 941 op broadcast dests r1143
+// @trace state 1318 instr 942 op shra dests r1144
+// @trace state 1319 instr 943 op broadcast dests r1145
+// @trace state 1320 instr 944 op select_n dests r1146
+// @trace state 1321 instr 945 op mov dests r1147
+// @trace state 1322 instr 946 op gt dests r1148
+// @trace state 1323 instr 947 op add dests r1149
+// @trace state 1324 instr 948 op lt dests r1150
+// @trace state 1325 instr 949 op sub dests r1151
+// @trace state 1326 instr 950 op broadcast dests r1152
+// @trace state 1327 instr 951 op select_n dests r1153
+// @trace state 1328 instr 952 op broadcast dests r1154
+// @trace state 1329 instr 953 op select_n dests r1155
+// @trace state 1330 instr 954 op convert dests r1156
+// @trace state 1331 instr 955 op max dests r1157
+// @trace state 1332 instr 956 op convert dests r1158
+// @trace state 1333 instr 957 op min dests r1159
+// @trace state 1334 instr 958 op shl dests r1160
+// @trace state 1335 instr 959 op broadcast dests r1161
+// @trace state 1336 instr 960 op broadcast dests r1162
+// @trace state 1337 instr 961 op neg dests r1163
+// @trace state 1338 instr 962 op mov dests r1164
+// @trace state 1339 instr 963 op mov dests r1165
+// @trace state 1340 instr 964 op broadcast dests r1166
+// @trace state 1341 instr 965 op add dests r1167
+// @trace state 1342 instr 966 op convert dests r1168
+// @trace state 1343 instr 967 op max dests r1169
+// @trace state 1344 instr 968 op convert dests r1170
+// @trace state 1345 instr 969 op min dests r1171
+// @trace state 1346 instr 970 op broadcast dests r1172
+// @trace state 1347 instr 971 op add dests r1173
+// @trace state 1348 instr 972 op convert dests r1174
+// @trace state 1349 instr 973 op max dests r1175
+// @trace state 1350 instr 974 op convert dests r1176
+// @trace state 1351 instr 975 op min dests r1177
+// @trace state 1353 instr 976 op concat dests r1178
+// @trace state 1354 instr 977 op mov dests r1179
+// @trace state 1355 instr 978 op broadcast dests r1180
+// @trace state 1357 instr 979 op concat dests r1181
+// @trace state 1358 instr 980 op transpose dests r1182
+// @trace state 1360 instr 981 op reduce_max dests r1183
+// @trace state 1361 instr 982 op sub dests r1185
+// @trace state 1369 instr 984 op add dests r1191
+// @trace state 1370 instr 985 op add dests r1192
+// @trace state 1371 instr 986 op shra dests r1193
+// @trace state 1372 instr 987 op broadcast dests r1194
+// @trace state 1373 instr 988 op sub dests r1195
+// @trace state 1374 instr 989 op max dests r1196
+// @trace state 1376 instr 990 op reduce_sum dests r1197
+// @trace state 1377 instr 991 op gt dests r1198
+// @trace state 1378 instr 992 op select_n dests r1199
+// @trace state 1379 instr 993 op select_n dests r1200
+// @trace state 1386 instr 983 op loop dests r1201 r1202 r1203
+// @trace state 1387 instr 994 op broadcast dests r1204
+// @trace state 1388 instr 995 op add dests r1205
+// @trace state 1389 instr 996 op convert dests r1206
+// @trace state 1390 instr 997 op max dests r1207
+// @trace state 1391 instr 998 op convert dests r1208
+// @trace state 1392 instr 999 op min dests r1209
+// @trace state 1393 instr 1000 op broadcast dests r1210
+// @trace state 1394 instr 1001 op add dests r1211
+// @trace state 1395 instr 1002 op convert dests r1212
+// @trace state 1396 instr 1003 op max dests r1213
+// @trace state 1397 instr 1004 op convert dests r1214
+// @trace state 1398 instr 1005 op min dests r1215
+// @trace state 1400 instr 1006 op concat dests r1216
+// @trace state 1401 instr 1007 op mov dests r1217
+// @trace state 1402 instr 1008 op broadcast dests r1218
+// @trace state 1404 instr 1009 op concat dests r1219
+// @trace state 1405 instr 1010 op transpose dests r1220
+// @trace state 1407 instr 1011 op reduce_max dests r1221
+// @trace state 1408 instr 1012 op sub dests r1222
+// @trace state 1416 instr 1014 op add dests r1228
+// @trace state 1417 instr 1015 op add dests r1229
+// @trace state 1418 instr 1016 op shra dests r1230
+// @trace state 1419 instr 1017 op broadcast dests r1231
+// @trace state 1420 instr 1018 op sub dests r1232
+// @trace state 1421 instr 1019 op max dests r1233
+// @trace state 1423 instr 1020 op reduce_sum dests r1234
+// @trace state 1424 instr 1021 op gt dests r1235
+// @trace state 1425 instr 1022 op select_n dests r1236
+// @trace state 1426 instr 1023 op select_n dests r1237
+// @trace state 1433 instr 1013 op loop dests r1238 r1239 r1240
+// @trace state 1434 instr 1024 op broadcast dests r1241
+// @trace state 1435 instr 1025 op broadcast dests r1242
+// @trace state 1437 instr 1026 op concat dests r1243
+// @trace state 1439 instr 1027 op reduce_max dests r1244
+// @trace state 1440 instr 1028 op sub dests r1246
+// @trace state 1448 instr 1030 op add dests r1252
+// @trace state 1449 instr 1031 op add dests r1253
+// @trace state 1450 instr 1032 op shra dests r1254
+// @trace state 1451 instr 1033 op broadcast dests r1255
+// @trace state 1452 instr 1034 op sub dests r1256
+// @trace state 1453 instr 1035 op max dests r1257
+// @trace state 1455 instr 1036 op reduce_sum dests r1258
+// @trace state 1456 instr 1037 op gt dests r1259
+// @trace state 1457 instr 1038 op select_n dests r1260
+// @trace state 1458 instr 1039 op select_n dests r1261
+// @trace state 1465 instr 1029 op loop dests r1262 r1263 r1264
+// @trace state 1466 instr 1040 op sub dests r1265
+// @trace state 1467 instr 1041 op max dests r1266
+// @trace state 1468 instr 1042 op sub dests r1267
+// @trace state 1469 instr 1043 op max dests r1268
+// @trace state 1470 instr 1044 op sub dests r1269
+
+module session_step_q(input wire clk, input wire rst, input wire start, output reg done);
+  reg signed [7:0] r0 [0:14];
+  reg signed [7:0] r1 [0:14];
+  reg signed [7:0] r2 [0:14];
+  reg signed [7:0] r3 [0:14];
+  reg signed [7:0] r4 [0:14];
+  reg signed [7:0] r5 [0:14];
+  reg signed [31:0] r6 [0:0];
+  reg signed [31:0] r7 [0:0];
+  reg signed [31:0] r8 [0:0];
+  reg signed [31:0] r9 [0:0];
+  reg signed [31:0] r10 [0:0];
+  reg signed [31:0] r11 [0:0];
+  reg signed [23:0] r12 [0:29];
+  reg signed [8:0] r13 [0:0];
+  reg signed [31:0] r14 [0:0];
+  reg r15 [0:0];
+  reg signed [7:0] r16 [0:159];
+  reg signed [8:0] r17 [0:0];
+  reg signed [8:0] r26 [0:159];
+  reg signed [8:0] r27 [0:0];
+  reg signed [8:0] r28 [0:0];
+  reg signed [7:0] r29 [0:174];
+  reg signed [8:0] r31 [0:174];
+  reg signed [5:0] r32 [0:79];
+  reg signed [5:0] r33 [0:79];
+  reg signed [5:0] r34 [0:79];
+  reg signed [8:0] r35 [0:159];
+  reg signed [8:0] r36 [0:159];
+  reg signed [4:0] r37 [0:15];
+  reg signed [4:0] r38 [0:15];
+  reg signed [8:0] r39 [0:2559];
+  reg r41 [0:2559];
+  reg signed [9:0] r43 [0:2559];
+  reg signed [8:0] r44 [0:2559];
+  reg signed [8:0] r45 [0:2559];
+  reg signed [8:0] r46 [0:2559];
+  reg signed [8:0] r47 [0:2559];
+  reg signed [9:0] r48 [0:12799];
+  reg signed [9:0] r51 [0:0];
+  reg signed [9:0] r52 [0:12799];
+  reg signed [9:0] r53 [0:0];
+  reg signed [9:0] r54 [0:12799];
+  reg signed [9:0] r55 [0:12799];
+  reg signed [9:0] r56 [0:0];
+  reg signed [9:0] r57 [0:12799];
+  reg signed [9:0] r58 [0:0];
+  reg signed [9:0] r59 [0:12799];
+  reg signed [9:0] r60 [0:12799];
+  reg signed [9:0] r61 [0:799];
+  reg signed [9:0] r63 [0:799];
+  reg signed [31:0] r64 [0:12799];
+  reg signed [31:0] r65 [0:0];
+  reg signed [31:0] r66 [0:0];
+  reg signed [31:0] r67 [0:799];
+  reg signed [31:0] r68 [0:799];
+  reg signed [4:0] r69 [0:0];
+  reg signed [10:0] r70 [0:799];
+  reg signed [9:0] r71 [0:799];
+  reg signed [9:0] r72 [0:799];
+  reg signed [10:0] r73 [0:12799];
+  reg signed [10:0] r74 [0:12799];
+  reg signed [14:0] r75 [0:799];
+  reg signed [9:0] r76 [0:12799];
+  reg signed [9:0] r77 [0:799];
+  reg signed [10:0] r78 [0:12799];
+  reg signed [10:0] r79 [0:12799];
+  reg signed [14:0] r80 [0:799];
+  reg signed [15:0] r81 [0:799];
+  reg r82 [0:799];
+  reg signed [9:0] r83 [0:799];
+  reg signed [9:0] r84 [0:799];
+  reg signed [9:0] r85 [0:0];
+  reg signed [9:0] r86 [0:799];
+  reg signed [9:0] r87 [0:799];
+  reg signed [9:0] r88 [0:12799];
+  reg signed [9:0] r89 [0:799];
+  reg signed [9:0] r90 [0:799];
+  reg signed [31:0] r91 [0:12799];
+  reg signed [31:0] r92 [0:0];
+  reg signed [31:0] r93 [0:0];
+  reg signed [31:0] r94 [0:799];
+  reg signed [31:0] r95 [0:799];
+  reg signed [4:0] r96 [0:0];
+  reg signed [10:0] r97 [0:799];
+  reg signed [9:0] r98 [0:799];
+  reg signed [9:0] r99 [0:799];
+  reg signed [10:0] r100 [0:12799];
+  reg signed [10:0] r101 [0:12799];
+  reg signed [14:0] r102 [0:799];
+  reg signed [9:0] r103 [0:12799];
+  reg signed [9:0] r104 [0:799];
+  reg signed [10:0] r105 [0:12799];
+  reg signed [10:0] r106 [0:12799];
+  reg signed [14:0] r107 [0:799];
+  reg signed [15:0] r108 [0:799];
+  reg r109 [0:799];
+  reg signed [9:0] r110 [0:799];
+  reg signed [9:0] r111 [0:799];
+  reg signed [9:0] r112 [0:0];
+  reg signed [9:0] r113 [0:799];
+  reg signed [9:0] r114 [0:799];
+  reg signed [10:0] r115 [0:799];
+  reg signed [10:0] r116 [0:799];
+  reg signed [8:0] r117 [0:0];
+  reg signed [10:0] r118 [0:799];
+  reg signed [8:0] r119 [0:799];
+  reg signed [8:0] r120 [0:0];
+  reg r121 [0:799];
+  reg signed [0:0] r122 [0:0];
+  reg signed [0:0] r123 [0:799];
+  reg signed [10:0] r124 [0:799];
+  reg signed [17:0] r125 [0:4];
+  reg signed [17:0] r126 [0:4];
+  reg r127 [0:0];
+  reg signed [9:0] r128 [0:0];
+  reg signed [8:0] r129 [0:0];
+  reg signed [8:0] r130 [0:0];
+  reg signed [7:0] r131 [0:14];
+  reg signed [31:0] r132 [0:0];
+  reg signed [1:0] r133 [0:0];
+  reg signed [7:0] r134 [0:164];
+  reg signed [8:0] r135 [0:164];
+  reg signed [0:0] r136 [0:0];
+  reg signed [8:0] r137 [0:165];
+  reg signed [7:0] r138 [0:79];
+  reg signed [8:0] r139 [0:79];
+  reg signed [8:0] r140 [0:79];
+  reg signed [3:0] r141 [0:5];
+  reg signed [3:0] r142 [0:5];
+  reg signed [8:0] r143 [0:479];
+  reg signed [8:0] r144 [0:479];
+  reg signed [1:0] r145 [0:0];
+  reg signed [8:0] r146 [0:479];
+  reg r147 [0:479];
+  reg signed [9:0] r149 [0:479];
+  reg signed [8:0] r150 [0:479];
+  reg signed [8:0] r151 [0:479];
+  reg signed [8:0] r152 [0:479];
+  reg signed [6:0] r153 [0:5];
+  reg signed [6:0] r154 [0:5];
+  reg signed [9:0] r155 [0:479];
+  reg signed [9:0] r156 [0:0];
+  reg signed [9:0] r157 [0:479];
+  reg signed [9:0] r158 [0:0];
+  reg signed [9:0] r159 [0:479];
+  reg signed [6:0] r160 [0:5];
+  reg signed [9:0] r161 [0:479];
+  reg signed [9:0] r162 [0:0];
+  reg signed [9:0] r163 [0:479];
+  reg signed [9:0] r164 [0:0];
+  reg signed [9:0] r165 [0:479];
+  reg signed [9:0] r166 [0:479];
+  reg signed [9:0] r167 [0:79];
+  reg signed [9:0] r168 [0:79];
+  reg signed [31:0] r169 [0:479];
+  reg signed [31:0] r170 [0:0];
+  reg signed [31:0] r171 [0:0];
+  reg signed [31:0] r172 [0:79];
+  reg signed [31:0] r173 [0:79];
+  reg signed [4:0] r174 [0:0];
+  reg signed [10:0] r175 [0:79];
+  reg signed [9:0] r176 [0:79];
+  reg signed [9:0] r177 [0:79];
+  reg signed [10:0] r178 [0:479];
+  reg signed [10:0] r179 [0:479];
+  reg signed [13:0] r180 [0:79];
+  reg signed [9:0] r181 [0:479];
+  reg signed [9:0] r182 [0:79];
+  reg signed [10:0] r183 [0:479];
+  reg signed [10:0] r184 [0:479];
+  reg signed [13:0] r185 [0:79];
+  reg signed [14:0] r186 [0:79];
+  reg r187 [0:79];
+  reg signed [9:0] r188 [0:79];
+  reg signed [9:0] r189 [0:79];
+  reg signed [9:0] r190 [0:0];
+  reg signed [9:0] r191 [0:79];
+  reg signed [9:0] r192 [0:79];
+  reg signed [9:0] r193 [0:479];
+  reg signed [9:0] r194 [0:79];
+  reg signed [9:0] r195 [0:79];
+  reg signed [31:0] r196 [0:479];
+  reg signed [31:0] r197 [0:0];
+  reg signed [31:0] r198 [0:0];
+  reg signed [31:0] r199 [0:79];
+  reg signed [31:0] r200 [0:79];
+  reg signed [4:0] r201 [0:0];
+  reg signed [10:0] r202 [0:79];
+  reg signed [9:0] r203 [0:79];
+  reg signed [9:0] r204 [0:79];
+  reg signed [10:0] r205 [0:479];
+  reg signed [10:0] r206 [0:479];
+  reg signed [13:0] r207 [0:79];
+  reg signed [9:0] r208 [0:479];
+  reg signed [9:0] r209 [0:79];
+  reg signed [10:0] r210 [0:479];
+  reg signed [10:0] r211 [0:479];
+  reg signed [13:0] r212 [0:79];
+  reg signed [14:0] r213 [0:79];
+  reg r214 [0:79];
+  reg signed [9:0] r215 [0:79];
+  reg signed [9:0] r216 [0:79];
+  reg signed [9:0] r217 [0:0];
+  reg signed [9:0] r218 [0:79];
+  reg signed [9:0] r219 [0:79];
+  reg signed [10:0] r220 [0:79];
+  reg signed [9:0] r221 [0:79];
+  reg signed [7:0] r224 [0:0];
+  reg signed [9:0] r225 [0:79];
+  reg signed [7:0] r226 [0:0];
+  reg signed [7:0] r227 [0:79];
+  reg signed [8:0] r228 [0:0];
+  reg signed [8:0] r229 [0:0];
+  reg signed [8:0] r230 [0:0];
+  reg signed [7:0] r231 [0:0];
+  reg signed [7:0] r232 [0:94];
+  reg signed [8:0] r233 [0:94];
+  reg signed [5:0] r234 [0:79];
+  reg signed [5:0] r235 [0:79];
+  reg signed [5:0] r236 [0:79];
+  reg signed [7:0] r237 [0:79];
+  reg signed [7:0] r238 [0:79];
+  reg signed [4:0] r239 [0:15];
+  reg signed [4:0] r240 [0:15];
+  reg signed [7:0] r241 [0:1279];
+  reg r242 [0:1279];
+  reg signed [8:0] r244 [0:1279];
+  reg signed [7:0] r245 [0:1279];
+  reg signed [7:0] r246 [0:1279];
+  reg signed [8:0] r247 [0:1279];
+  reg signed [8:0] r248 [0:1279];
+  reg signed [9:0] r249 [0:6399];
+  reg signed [9:0] r250 [0:0];
+  reg signed [9:0] r251 [0:6399];
+  reg signed [9:0] r252 [0:0];
+  reg signed [9:0] r253 [0:6399];
+  reg signed [9:0] r254 [0:6399];
+  reg signed [9:0] r255 [0:0];
+  reg signed [9:0] r256 [0:6399];
+  reg signed [9:0] r257 [0:0];
+  reg signed [9:0] r258 [0:6399];
+  reg signed [9:0] r259 [0:6399];
+  reg signed [9:0] r260 [0:399];
+  reg signed [9:0] r261 [0:399];
+  reg signed [31:0] r262 [0:6399];
+  reg signed [31:0] r263 [0:0];
+  reg signed [31:0] r264 [0:0];
+  reg signed [31:0] r265 [0:399];
+  reg signed [31:0] r266 [0:399];
+  reg signed [4:0] r267 [0:0];
+  reg signed [10:0] r268 [0:399];
+  reg signed [9:0] r269 [0:399];
+  reg signed [9:0] r270 [0:399];
+  reg signed [10:0] r271 [0:6399];
+  reg signed [10:0] r272 [0:6399];
+  reg signed [14:0] r273 [0:399];
+  reg signed [9:0] r274 [0:6399];
+  reg signed [9:0] r275 [0:399];
+  reg signed [10:0] r276 [0:6399];
+  reg signed [10:0] r277 [0:6399];
+  reg signed [14:0] r278 [0:399];
+  reg signed [15:0] r279 [0:399];
+  reg r280 [0:399];
+  reg signed [9:0] r281 [0:399];
+  reg signed [9:0] r282 [0:399];
+  reg signed [9:0] r283 [0:0];
+  reg signed [9:0] r284 [0:399];
+  reg signed [9:0] r285 [0:399];
+  reg signed [9:0] r286 [0:6399];
+  reg signed [9:0] r287 [0:399];
+  reg signed [9:0] r288 [0:399];
+  reg signed [31:0] r289 [0:6399];
+  reg signed [31:0] r290 [0:0];
+  reg signed [31:0] r291 [0:0];
+  reg signed [31:0] r292 [0:399];
+  reg signed [31:0] r293 [0:399];
+  reg signed [4:0] r294 [0:0];
+  reg signed [10:0] r295 [0:399];
+  reg signed [9:0] r296 [0:399];
+  reg signed [9:0] r297 [0:399];
+  reg signed [10:0] r298 [0:6399];
+  reg signed [10:0] r299 [0:6399];
+  reg signed [14:0] r300 [0:399];
+  reg signed [9:0] r301 [0:6399];
+  reg signed [9:0] r302 [0:399];
+  reg signed [10:0] r303 [0:6399];
+  reg signed [10:0] r304 [0:6399];
+  reg signed [14:0] r305 [0:399];
+  reg signed [15:0] r306 [0:399];
+  reg r307 [0:399];
+  reg signed [9:0] r308 [0:399];
+  reg signed [9:0] r309 [0:399];
+  reg signed [9:0] r310 [0:0];
+  reg signed [9:0] r311 [0:399];
+  reg signed [9:0] r312 [0:399];
+  reg signed [10:0] r313 [0:399];
+  reg signed [10:0] r314 [0:399];
+  reg signed [7:0] r315 [0:0];
+  reg signed [10:0] r316 [0:399];
+  reg signed [7:0] r317 [0:399];
+  reg signed [7:0] r318 [0:0];
+  reg r319 [0:399];
+  reg signed [0:0] r320 [0:0];
+  reg signed [0:0] r321 [0:399];
+  reg signed [10:0] r322 [0:399];
+  reg signed [16:0] r323 [0:4];
+  reg signed [17:0] r324 [0:4];
+  reg r325 [0:0];
+  reg signed [8:0] r326 [0:0];
+  reg signed [7:0] r327 [0:0];
+  reg signed [7:0] r328 [0:0];
+  reg signed [7:0] r329 [0:14];
+  reg signed [31:0] r330 [0:0];
+  reg signed [1:0] r331 [0:0];
+  reg signed [7:0] r332 [0:84];
+  reg signed [8:0] r333 [0:84];
+  reg signed [0:0] r334 [0:0];
+  reg signed [8:0] r335 [0:85];
+  reg signed [6:0] r336 [0:39];
+  reg signed [7:0] r337 [0:39];
+  reg signed [7:0] r338 [0:39];
+  reg signed [3:0] r339 [0:5];
+  reg signed [3:0] r340 [0:5];
+  reg signed [7:0] r341 [0:239];
+  reg signed [7:0] r342 [0:239];
+  reg signed [1:0] r343 [0:0];
+  reg signed [7:0] r344 [0:239];
+  reg r345 [0:239];
+  reg signed [8:0] r347 [0:239];
+  reg signed [7:0] r348 [0:239];
+  reg signed [7:0] r349 [0:239];
+  reg signed [8:0] r350 [0:239];
+  reg signed [6:0] r351 [0:5];
+  reg signed [6:0] r352 [0:5];
+  reg signed [9:0] r353 [0:239];
+  reg signed [9:0] r354 [0:0];
+  reg signed [9:0] r355 [0:239];
+  reg signed [9:0] r356 [0:0];
+  reg signed [9:0] r357 [0:239];
+  reg signed [6:0] r358 [0:5];
+  reg signed [9:0] r359 [0:239];
+  reg signed [9:0] r360 [0:0];
+  reg signed [9:0] r361 [0:239];
+  reg signed [9:0] r362 [0:0];
+  reg signed [9:0] r363 [0:239];
+  reg signed [9:0] r364 [0:239];
+  reg signed [9:0] r365 [0:39];
+  reg signed [9:0] r366 [0:39];
+  reg signed [31:0] r367 [0:239];
+  reg signed [31:0] r368 [0:0];
+  reg signed [31:0] r369 [0:0];
+  reg signed [31:0] r370 [0:39];
+  reg signed [31:0] r371 [0:39];
+  reg signed [4:0] r372 [0:0];
+  reg signed [10:0] r373 [0:39];
+  reg signed [9:0] r374 [0:39];
+  reg signed [9:0] r375 [0:39];
+  reg signed [10:0] r376 [0:239];
+  reg signed [10:0] r377 [0:239];
+  reg signed [13:0] r378 [0:39];
+  reg signed [9:0] r379 [0:239];
+  reg signed [9:0] r380 [0:39];
+  reg signed [10:0] r381 [0:239];
+  reg signed [10:0] r382 [0:239];
+  reg signed [13:0] r383 [0:39];
+  reg signed [14:0] r384 [0:39];
+  reg r385 [0:39];
+  reg signed [9:0] r386 [0:39];
+  reg signed [9:0] r387 [0:39];
+  reg signed [9:0] r388 [0:0];
+  reg signed [9:0] r389 [0:39];
+  reg signed [9:0] r390 [0:39];
+  reg signed [9:0] r391 [0:239];
+  reg signed [9:0] r392 [0:39];
+  reg signed [9:0] r393 [0:39];
+  reg signed [31:0] r394 [0:239];
+  reg signed [31:0] r395 [0:0];
+  reg signed [31:0] r396 [0:0];
+  reg signed [31:0] r397 [0:39];
+  reg signed [31:0] r398 [0:39];
+  reg signed [4:0] r399 [0:0];
+  reg signed [10:0] r400 [0:39];
+  reg signed [9:0] r401 [0:39];
+  reg signed [9:0] r402 [0:39];
+  reg signed [10:0] r403 [0:239];
+  reg signed [10:0] r404 [0:239];
+  reg signed [13:0] r405 [0:39];
+  reg signed [9:0] r406 [0:239];
+  reg signed [9:0] r407 [0:39];
+  reg signed [10:0] r408 [0:239];
+  reg signed [10:0] r409 [0:239];
+  reg signed [13:0] r410 [0:39];
+  reg signed [14:0] r411 [0:39];
+  reg r412 [0:39];
+  reg signed [9:0] r413 [0:39];
+  reg signed [9:0] r414 [0:39];
+  reg signed [9:0] r415 [0:0];
+  reg signed [9:0] r416 [0:39];
+  reg signed [9:0] r417 [0:39];
+  reg signed [10:0] r418 [0:39];
+  reg signed [9:0] r419 [0:39];
+  reg signed [7:0] r420 [0:0];
+  reg signed [9:0] r421 [0:39];
+  reg signed [7:0] r422 [0:0];
+  reg signed [7:0] r423 [0:39];
+  reg signed [7:0] r424 [0:0];
+  reg signed [7:0] r425 [0:0];
+  reg signed [7:0] r426 [0:0];
+  reg signed [6:0] r427 [0:0];
+  reg signed [7:0] r428 [0:54];
+  reg signed [8:0] r429 [0:54];
+  reg signed [5:0] r430 [0:79];
+  reg signed [5:0] r431 [0:79];
+  reg signed [5:0] r432 [0:79];
+  reg signed [6:0] r433 [0:39];
+  reg signed [6:0] r434 [0:39];
+  reg signed [4:0] r435 [0:15];
+  reg signed [4:0] r436 [0:15];
+  reg signed [6:0] r437 [0:639];
+  reg r438 [0:639];
+  reg signed [7:0] r440 [0:639];
+  reg signed [6:0] r441 [0:639];
+  reg signed [6:0] r442 [0:639];
+  reg signed [8:0] r443 [0:639];
+  reg signed [8:0] r444 [0:639];
+  reg signed [9:0] r445 [0:3199];
+  reg signed [9:0] r446 [0:0];
+  reg signed [9:0] r447 [0:3199];
+  reg signed [9:0] r448 [0:0];
+  reg signed [9:0] r449 [0:3199];
+  reg signed [9:0] r450 [0:3199];
+  reg signed [9:0] r451 [0:0];
+  reg signed [9:0] r452 [0:3199];
+  reg signed [9:0] r453 [0:0];
+  reg signed [9:0] r454 [0:3199];
+  reg signed [9:0] r455 [0:3199];
+  reg signed [9:0] r456 [0:199];
+  reg signed [9:0] r457 [0:199];
+  reg signed [31:0] r458 [0:3199];
+  reg signed [31:0] r459 [0:0];
+  reg signed [31:0] r460 [0:0];
+  reg signed [31:0] r461 [0:199];
+  reg signed [31:0] r462 [0:199];
+  reg signed [4:0] r463 [0:0];
+  reg signed [10:0] r464 [0:199];
+  reg signed [9:0] r465 [0:199];
+  reg signed [9:0] r466 [0:199];
+  reg signed [10:0] r467 [0:3199];
+  reg signed [10:0] r468 [0:3199];
+  reg signed [14:0] r469 [0:199];
+  reg signed [9:0] r470 [0:3199];
+  reg signed [9:0] r471 [0:199];
+  reg signed [10:0] r472 [0:3199];
+  reg signed [10:0] r473 [0:3199];
+  reg signed [14:0] r474 [0:199];
+  reg signed [15:0] r475 [0:199];
+  reg r476 [0:199];
+  reg signed [9:0] r477 [0:199];
+  reg signed [9:0] r478 [0:199];
+  reg signed [9:0] r479 [0:0];
+  reg signed [9:0] r480 [0:199];
+  reg signed [9:0] r481 [0:199];
+  reg signed [9:0] r482 [0:3199];
+  reg signed [9:0] r483 [0:199];
+  reg signed [9:0] r484 [0:199];
+  reg signed [31:0] r485 [0:3199];
+  reg signed [31:0] r486 [0:0];
+  reg signed [31:0] r487 [0:0];
+  reg signed [31:0] r488 [0:199];
+  reg signed [31:0] r489 [0:199];
+  reg signed [4:0] r490 [0:0];
+  reg signed [10:0] r491 [0:199];
+  reg signed [9:0] r492 [0:199];
+  reg signed [9:0] r493 [0:199];
+  reg signed [10:0] r494 [0:3199];
+  reg signed [10:0] r495 [0:3199];
+  reg signed [14:0] r496 [0:199];
+  reg signed [9:0] r497 [0:3199];
+  reg signed [9:0] r498 [0:199];
+  reg signed [10:0] r499 [0:3199];
+  reg signed [10:0] r500 [0:3199];
+  reg signed [14:0] r501 [0:199];
+  reg signed [15:0] r502 [0:199];
+  reg r503 [0:199];
+  reg signed [9:0] r504 [0:199];
+  reg signed [9:0] r505 [0:199];
+  reg signed [9:0] r506 [0:0];
+  reg signed [9:0] r507 [0:199];
+  reg signed [9:0] r508 [0:199];
+  reg signed [10:0] r509 [0:199];
+  reg signed [10:0] r510 [0:199];
+  reg signed [6:0] r511 [0:0];
+  reg signed [10:0] r512 [0:199];
+  reg signed [6:0] r513 [0:199];
+  reg signed [6:0] r514 [0:0];
+  reg r515 [0:199];
+  reg signed [0:0] r516 [0:0];
+  reg signed [0:0] r517 [0:199];
+  reg signed [10:0] r518 [0:199];
+  reg signed [15:0] r519 [0:4];
+  reg signed [17:0] r521 [0:4];
+  reg r522 [0:0];
+  reg signed [7:0] r523 [0:0];
+  reg signed [6:0] r524 [0:0];
+  reg signed [6:0] r525 [0:0];
+  reg signed [7:0] r526 [0:14];
+  reg signed [31:0] r527 [0:0];
+  reg signed [1:0] r528 [0:0];
+  reg signed [7:0] r529 [0:44];
+  reg signed [8:0] r530 [0:44];
+  reg signed [0:0] r531 [0:0];
+  reg signed [8:0] r532 [0:45];
+  reg signed [5:0] r533 [0:19];
+  reg signed [6:0] r534 [0:19];
+  reg signed [6:0] r535 [0:19];
+  reg signed [3:0] r536 [0:5];
+  reg signed [3:0] r537 [0:5];
+  reg signed [6:0] r538 [0:119];
+  reg signed [6:0] r539 [0:119];
+  reg signed [1:0] r540 [0:0];
+  reg signed [6:0] r541 [0:119];
+  reg r542 [0:119];
+  reg signed [7:0] r544 [0:119];
+  reg signed [6:0] r545 [0:119];
+  reg signed [6:0] r546 [0:119];
+  reg signed [8:0] r547 [0:119];
+  reg signed [6:0] r548 [0:5];
+  reg signed [6:0] r549 [0:5];
+  reg signed [9:0] r550 [0:119];
+  reg signed [9:0] r551 [0:0];
+  reg signed [9:0] r552 [0:119];
+  reg signed [9:0] r553 [0:0];
+  reg signed [9:0] r554 [0:119];
+  reg signed [6:0] r555 [0:5];
+  reg signed [9:0] r556 [0:119];
+  reg signed [9:0] r557 [0:0];
+  reg signed [9:0] r558 [0:119];
+  reg signed [9:0] r559 [0:0];
+  reg signed [9:0] r560 [0:119];
+  reg signed [9:0] r561 [0:119];
+  reg signed [9:0] r562 [0:19];
+  reg signed [9:0] r563 [0:19];
+  reg signed [31:0] r564 [0:119];
+  reg signed [31:0] r565 [0:0];
+  reg signed [31:0] r566 [0:0];
+  reg signed [31:0] r567 [0:19];
+  reg signed [31:0] r568 [0:19];
+  reg signed [4:0] r569 [0:0];
+  reg signed [10:0] r570 [0:19];
+  reg signed [9:0] r571 [0:19];
+  reg signed [9:0] r572 [0:19];
+  reg signed [10:0] r573 [0:119];
+  reg signed [10:0] r574 [0:119];
+  reg signed [13:0] r575 [0:19];
+  reg signed [9:0] r576 [0:119];
+  reg signed [9:0] r577 [0:19];
+  reg signed [10:0] r578 [0:119];
+  reg signed [10:0] r579 [0:119];
+  reg signed [13:0] r580 [0:19];
+  reg signed [14:0] r581 [0:19];
+  reg r582 [0:19];
+  reg signed [9:0] r583 [0:19];
+  reg signed [9:0] r584 [0:19];
+  reg signed [9:0] r585 [0:0];
+  reg signed [9:0] r586 [0:19];
+  reg signed [9:0] r587 [0:19];
+  reg signed [9:0] r588 [0:119];
+  reg signed [9:0] r589 [0:19];
+  reg signed [9:0] r590 [0:19];
+  reg signed [31:0] r591 [0:119];
+  reg signed [31:0] r592 [0:0];
+  reg signed [31:0] r593 [0:0];
+  reg signed [31:0] r594 [0:19];
+  reg signed [31:0] r595 [0:19];
+  reg signed [4:0] r596 [0:0];
+  reg signed [10:0] r597 [0:19];
+  reg signed [9:0] r598 [0:19];
+  reg signed [9:0] r599 [0:19];
+  reg signed [10:0] r600 [0:119];
+  reg signed [10:0] r601 [0:119];
+  reg signed [13:0] r602 [0:19];
+  reg signed [9:0] r603 [0:119];
+  reg signed [9:0] r604 [0:19];
+  reg signed [10:0] r605 [0:119];
+  reg signed [10:0] r606 [0:119];
+  reg signed [13:0] r607 [0:19];
+  reg signed [14:0] r608 [0:19];
+  reg r609 [0:19];
+  reg signed [9:0] r610 [0:19];
+  reg signed [9:0] r611 [0:19];
+  reg signed [9:0] r612 [0:0];
+  reg signed [9:0] r613 [0:19];
+  reg signed [9:0] r614 [0:19];
+  reg signed [10:0] r615 [0:19];
+  reg signed [9:0] r616 [0:19];
+  reg signed [7:0] r617 [0:0];
+  reg signed [9:0] r618 [0:19];
+  reg signed [7:0] r619 [0:0];
+  reg signed [7:0] r620 [0:19];
+  reg signed [6:0] r621 [0:0];
+  reg signed [6:0] r622 [0:0];
+  reg signed [6:0] r623 [0:0];
+  reg signed [5:0] r624 [0:0];
+  reg signed [7:0] r625 [0:34];
+  reg signed [8:0] r626 [0:34];
+  reg signed [5:0] r627 [0:79];
+  reg signed [5:0] r628 [0:79];
+  reg signed [5:0] r629 [0:79];
+  reg signed [5:0] r630 [0:19];
+  reg signed [5:0] r631 [0:19];
+  reg signed [4:0] r632 [0:15];
+  reg signed [4:0] r633 [0:15];
+  reg signed [6:0] r634 [0:319];
+  reg r635 [0:319];
+  reg signed [7:0] r637 [0:319];
+  reg signed [6:0] r638 [0:319];
+  reg signed [6:0] r639 [0:319];
+  reg signed [8:0] r640 [0:319];
+  reg signed [8:0] r641 [0:319];
+  reg signed [9:0] r642 [0:1599];
+  reg signed [9:0] r643 [0:0];
+  reg signed [9:0] r644 [0:1599];
+  reg signed [9:0] r645 [0:0];
+  reg signed [9:0] r646 [0:1599];
+  reg signed [9:0] r647 [0:1599];
+  reg signed [9:0] r648 [0:0];
+  reg signed [9:0] r649 [0:1599];
+  reg signed [9:0] r650 [0:0];
+  reg signed [9:0] r651 [0:1599];
+  reg signed [9:0] r652 [0:1599];
+  reg signed [9:0] r653 [0:99];
+  reg signed [9:0] r654 [0:99];
+  reg signed [31:0] r655 [0:1599];
+  reg signed [31:0] r656 [0:0];
+  reg signed [31:0] r657 [0:0];
+  reg signed [31:0] r658 [0:99];
+  reg signed [31:0] r659 [0:99];
+  reg signed [4:0] r660 [0:0];
+  reg signed [10:0] r661 [0:99];
+  reg signed [9:0] r662 [0:99];
+  reg signed [9:0] r663 [0:99];
+  reg signed [10:0] r664 [0:1599];
+  reg signed [10:0] r665 [0:1599];
+  reg signed [14:0] r666 [0:99];
+  reg signed [9:0] r667 [0:1599];
+  reg signed [9:0] r668 [0:99];
+  reg signed [10:0] r669 [0:1599];
+  reg signed [10:0] r670 [0:1599];
+  reg signed [14:0] r671 [0:99];
+  reg signed [15:0] r672 [0:99];
+  reg r673 [0:99];
+  reg signed [9:0] r674 [0:99];
+  reg signed [9:0] r675 [0:99];
+  reg signed [9:0] r676 [0:0];
+  reg signed [9:0] r677 [0:99];
+  reg signed [9:0] r678 [0:99];
+  reg signed [9:0] r679 [0:1599];
+  reg signed [9:0] r680 [0:99];
+  reg signed [9:0] r681 [0:99];
+  reg signed [31:0] r682 [0:1599];
+  reg signed [31:0] r683 [0:0];
+  reg signed [31:0] r684 [0:0];
+  reg signed [31:0] r685 [0:99];
+  reg signed [31:0] r686 [0:99];
+  reg signed [4:0] r687 [0:0];
+  reg signed [10:0] r688 [0:99];
+  reg signed [9:0] r689 [0:99];
+  reg signed [9:0] r690 [0:99];
+  reg signed [10:0] r691 [0:1599];
+  reg signed [10:0] r692 [0:1599];
+  reg signed [14:0] r693 [0:99];
+  reg signed [9:0] r694 [0:1599];
+  reg signed [9:0] r695 [0:99];
+  reg signed [10:0] r696 [0:1599];
+  reg signed [10:0] r697 [0:1599];
+  reg signed [14:0] r698 [0:99];
+  reg signed [15:0] r699 [0:99];
+  reg r700 [0:99];
+  reg signed [9:0] r701 [0:99];
+  reg signed [9:0] r702 [0:99];
+  reg signed [9:0] r703 [0:0];
+  reg signed [9:0] r704 [0:99];
+  reg signed [9:0] r705 [0:99];
+  reg signed [10:0] r706 [0:99];
+  reg signed [10:0] r707 [0:99];
+  reg signed [5:0] r708 [0:0];
+  reg signed [10:0] r709 [0:99];
+  reg signed [5:0] r710 [0:99];
+  reg signed [5:0] r711 [0:0];
+  reg r712 [0:99];
+  reg signed [0:0] r713 [0:0];
+  reg signed [0:0] r714 [0:99];
+  reg signed [10:0] r715 [0:99];
+  reg signed [14:0] r716 [0:4];
+  reg signed [17:0] r718 [0:4];
+  reg r719 [0:0];
+  reg signed [6:0] r720 [0:0];
+  reg signed [5:0] r721 [0:0];
+  reg signed [5:0] r722 [0:0];
+  reg signed [7:0] r723 [0:14];
+  reg signed [31:0] r724 [0:0];
+  reg signed [1:0] r725 [0:0];
+  reg signed [7:0] r726 [0:24];
+  reg signed [8:0] r727 [0:24];
+  reg signed [0:0] r728 [0:0];
+  reg signed [8:0] r729 [0:25];
+  reg signed [4:0] r730 [0:9];
+  reg signed [5:0] r731 [0:9];
+  reg signed [5:0] r732 [0:9];
+  reg signed [3:0] r733 [0:5];
+  reg signed [3:0] r734 [0:5];
+  reg signed [5:0] r735 [0:59];
+  reg signed [5:0] r736 [0:59];
+  reg signed [1:0] r737 [0:0];
+  reg signed [5:0] r738 [0:59];
+  reg r739 [0:59];
+  reg signed [6:0] r741 [0:59];
+  reg signed [5:0] r742 [0:59];
+  reg signed [5:0] r743 [0:59];
+  reg signed [8:0] r744 [0:59];
+  reg signed [6:0] r745 [0:5];
+  reg signed [6:0] r746 [0:5];
+  reg signed [9:0] r747 [0:59];
+  reg signed [9:0] r748 [0:0];
+  reg signed [9:0] r749 [0:59];
+  reg signed [9:0] r750 [0:0];
+  reg signed [9:0] r751 [0:59];
+  reg signed [6:0] r752 [0:5];
+  reg signed [9:0] r753 [0:59];
+  reg signed [9:0] r754 [0:0];
+  reg signed [9:0] r755 [0:59];
+  reg signed [9:0] r756 [0:0];
+  reg signed [9:0] r757 [0:59];
+  reg signed [9:0] r758 [0:59];
+  reg signed [9:0] r759 [0:9];
+  reg signed [9:0] r760 [0:9];
+  reg signed [31:0] r761 [0:59];
+  reg signed [31:0] r762 [0:0];
+  reg signed [31:0] r763 [0:0];
+  reg signed [31:0] r764 [0:9];
+  reg signed [31:0] r765 [0:9];
+  reg signed [4:0] r766 [0:0];
+  reg signed [10:0] r767 [0:9];
+  reg signed [9:0] r768 [0:9];
+  reg signed [9:0] r769 [0:9];
+  reg signed [10:0] r770 [0:59];
+  reg signed [10:0] r771 [0:59];
+  reg signed [13:0] r772 [0:9];
+  reg signed [9:0] r773 [0:59];
+  reg signed [9:0] r774 [0:9];
+  reg signed [10:0] r775 [0:59];
+  reg signed [10:0] r776 [0:59];
+  reg signed [13:0] r777 [0:9];
+  reg signed [14:0] r778 [0:9];
+  reg r779 [0:9];
+  reg signed [9:0] r780 [0:9];
+  reg signed [9:0] r781 [0:9];
+  reg signed [9:0] r782 [0:0];
+  reg signed [9:0] r783 [0:9];
+  reg signed [9:0] r784 [0:9];
+  reg signed [9:0] r785 [0:59];
+  reg signed [9:0] r786 [0:9];
+  reg signed [9:0] r787 [0:9];
+  reg signed [31:0] r788 [0:59];
+  reg signed [31:0] r789 [0:0];
+  reg signed [31:0] r790 [0:0];
+  reg signed [31:0] r791 [0:9];
+  reg signed [31:0] r792 [0:9];
+  reg signed [4:0] r793 [0:0];
+  reg signed [10:0] r794 [0:9];
+  reg signed [9:0] r795 [0:9];
+  reg signed [9:0] r796 [0:9];
+  reg signed [10:0] r797 [0:59];
+  reg signed [10:0] r798 [0:59];
+  reg signed [13:0] r799 [0:9];
+  reg signed [9:0] r800 [0:59];
+  reg signed [9:0] r801 [0:9];
+  reg signed [10:0] r802 [0:59];
+  reg signed [10:0] r803 [0:59];
+  reg signed [13:0] r804 [0:9];
+  reg signed [14:0] r805 [0:9];
+  reg r806 [0:9];
+  reg signed [9:0] r807 [0:9];
+  reg signed [9:0] r808 [0:9];
+  reg signed [9:0] r809 [0:0];
+  reg signed [9:0] r810 [0:9];
+  reg signed [9:0] r811 [0:9];
+  reg signed [10:0] r812 [0:9];
+  reg signed [9:0] r813 [0:9];
+  reg signed [7:0] r814 [0:0];
+  reg signed [9:0] r815 [0:9];
+  reg signed [7:0] r816 [0:0];
+  reg signed [7:0] r817 [0:9];
+  reg signed [5:0] r818 [0:0];
+  reg signed [5:0] r819 [0:0];
+  reg signed [5:0] r820 [0:0];
+  reg signed [4:0] r821 [0:0];
+  reg signed [7:0] r822 [0:24];
+  reg signed [8:0] r823 [0:24];
+  reg signed [5:0] r824 [0:79];
+  reg signed [5:0] r825 [0:79];
+  reg signed [5:0] r826 [0:79];
+  reg signed [4:0] r827 [0:9];
+  reg signed [4:0] r828 [0:9];
+  reg signed [4:0] r829 [0:15];
+  reg signed [4:0] r830 [0:15];
+  reg signed [5:0] r831 [0:159];
+  reg r832 [0:159];
+  reg signed [6:0] r834 [0:159];
+  reg signed [5:0] r835 [0:159];
+  reg signed [5:0] r836 [0:159];
+  reg signed [8:0] r837 [0:159];
+  reg signed [8:0] r838 [0:159];
+  reg signed [9:0] r839 [0:799];
+  reg signed [9:0] r840 [0:0];
+  reg signed [9:0] r841 [0:799];
+  reg signed [9:0] r842 [0:0];
+  reg signed [9:0] r843 [0:799];
+  reg signed [9:0] r844 [0:799];
+  reg signed [9:0] r845 [0:0];
+  reg signed [9:0] r846 [0:799];
+  reg signed [9:0] r847 [0:0];
+  reg signed [9:0] r848 [0:799];
+  reg signed [9:0] r849 [0:799];
+  reg signed [9:0] r850 [0:49];
+  reg signed [9:0] r851 [0:49];
+  reg signed [31:0] r852 [0:799];
+  reg signed [31:0] r853 [0:0];
+  reg signed [31:0] r854 [0:0];
+  reg signed [31:0] r855 [0:49];
+  reg signed [31:0] r856 [0:49];
+  reg signed [4:0] r857 [0:0];
+  reg signed [10:0] r858 [0:49];
+  reg signed [9:0] r859 [0:49];
+  reg signed [9:0] r860 [0:49];
+  reg signed [10:0] r861 [0:799];
+  reg signed [10:0] r862 [0:799];
+  reg signed [14:0] r863 [0:49];
+  reg signed [9:0] r864 [0:799];
+  reg signed [9:0] r865 [0:49];
+  reg signed [10:0] r866 [0:799];
+  reg signed [10:0] r867 [0:799];
+  reg signed [14:0] r868 [0:49];
+  reg signed [15:0] r869 [0:49];
+  reg r870 [0:49];
+  reg signed [9:0] r871 [0:49];
+  reg signed [9:0] r872 [0:49];
+  reg signed [9:0] r873 [0:0];
+  reg signed [9:0] r874 [0:49];
+  reg signed [9:0] r875 [0:49];
+  reg signed [9:0] r876 [0:799];
+  reg signed [9:0] r877 [0:49];
+  reg signed [9:0] r878 [0:49];
+  reg signed [31:0] r879 [0:799];
+  reg signed [31:0] r880 [0:0];
+  reg signed [31:0] r881 [0:0];
+  reg signed [31:0] r882 [0:49];
+  reg signed [31:0] r883 [0:49];
+  reg signed [4:0] r884 [0:0];
+  reg signed [10:0] r885 [0:49];
+  reg signed [9:0] r886 [0:49];
+  reg signed [9:0] r887 [0:49];
+  reg signed [10:0] r888 [0:799];
+  reg signed [10:0] r889 [0:799];
+  reg signed [14:0] r890 [0:49];
+  reg signed [9:0] r891 [0:799];
+  reg signed [9:0] r892 [0:49];
+  reg signed [10:0] r893 [0:799];
+  reg signed [10:0] r894 [0:799];
+  reg signed [14:0] r895 [0:49];
+  reg signed [15:0] r896 [0:49];
+  reg r897 [0:49];
+  reg signed [9:0] r898 [0:49];
+  reg signed [9:0] r899 [0:49];
+  reg signed [9:0] r900 [0:0];
+  reg signed [9:0] r901 [0:49];
+  reg signed [9:0] r902 [0:49];
+  reg signed [10:0] r903 [0:49];
+  reg signed [10:0] r904 [0:49];
+  reg signed [4:0] r905 [0:0];
+  reg signed [10:0] r906 [0:49];
+  reg signed [4:0] r907 [0:49];
+  reg signed [4:0] r908 [0:0];
+  reg r909 [0:49];
+  reg signed [0:0] r910 [0:0];
+  reg signed [0:0] r911 [0:49];
+  reg signed [10:0] r912 [0:49];
+  reg signed [13:0] r913 [0:4];
+  reg signed [17:0] r915 [0:4];
+  reg r916 [0:0];
+  reg signed [6:0] r917 [0:0];
+  reg signed [4:0] r918 [0:0];
+  reg signed [4:0] r919 [0:0];
+  reg signed [7:0] r920 [0:14];
+  reg signed [31:0] r921 [0:0];
+  reg signed [1:0] r922 [0:0];
+  reg signed [7:0] r923 [0:14];
+  reg signed [8:0] r924 [0:14];
+  reg signed [0:0] r925 [0:0];
+  reg signed [8:0] r926 [0:15];
+  reg signed [3:0] r927 [0:4];
+  reg signed [4:0] r928 [0:4];
+  reg signed [4:0] r929 [0:4];
+  reg signed [3:0] r930 [0:5];
+  reg signed [3:0] r931 [0:5];
+  reg signed [4:0] r932 [0:29];
+  reg signed [4:0] r933 [0:29];
+  reg signed [1:0] r934 [0:0];
+  reg signed [4:0] r935 [0:29];
+  reg r936 [0:29];
+  reg signed [5:0] r938 [0:29];
+  reg signed [4:0] r939 [0:29];
+  reg signed [4:0] r940 [0:29];
+  reg signed [8:0] r941 [0:29];
+  reg signed [6:0] r942 [0:5];
+  reg signed [6:0] r943 [0:5];
+  reg signed [9:0] r944 [0:29];
+  reg signed [9:0] r945 [0:0];
+  reg signed [9:0] r946 [0:29];
+  reg signed [9:0] r947 [0:0];
+  reg signed [9:0] r948 [0:29];
+  reg signed [6:0] r949 [0:5];
+  reg signed [9:0] r950 [0:29];
+  reg signed [9:0] r951 [0:0];
+  reg signed [9:0] r952 [0:29];
+  reg signed [9:0] r953 [0:0];
+  reg signed [9:0] r954 [0:29];
+  reg signed [9:0] r955 [0:29];
+  reg signed [9:0] r956 [0:4];
+  reg signed [9:0] r957 [0:4];
+  reg signed [31:0] r958 [0:29];
+  reg signed [31:0] r959 [0:0];
+  reg signed [31:0] r960 [0:0];
+  reg signed [31:0] r961 [0:4];
+  reg signed [31:0] r962 [0:4];
+  reg signed [4:0] r963 [0:0];
+  reg signed [10:0] r964 [0:4];
+  reg signed [9:0] r965 [0:4];
+  reg signed [9:0] r966 [0:4];
+  reg signed [10:0] r967 [0:29];
+  reg signed [10:0] r968 [0:29];
+  reg signed [13:0] r969 [0:4];
+  reg signed [9:0] r970 [0:29];
+  reg signed [9:0] r971 [0:4];
+  reg signed [10:0] r972 [0:29];
+  reg signed [10:0] r973 [0:29];
+  reg signed [13:0] r974 [0:4];
+  reg signed [14:0] r975 [0:4];
+  reg r976 [0:4];
+  reg signed [9:0] r977 [0:4];
+  reg signed [9:0] r978 [0:4];
+  reg signed [9:0] r979 [0:0];
+  reg signed [9:0] r980 [0:4];
+  reg signed [9:0] r981 [0:4];
+  reg signed [9:0] r982 [0:29];
+  reg signed [9:0] r983 [0:4];
+  reg signed [9:0] r984 [0:4];
+  reg signed [31:0] r985 [0:29];
+  reg signed [31:0] r986 [0:0];
+  reg signed [31:0] r987 [0:0];
+  reg signed [31:0] r988 [0:4];
+  reg signed [31:0] r989 [0:4];
+  reg signed [4:0] r990 [0:0];
+  reg signed [10:0] r991 [0:4];
+  reg signed [9:0] r992 [0:4];
+  reg signed [9:0] r993 [0:4];
+  reg signed [10:0] r994 [0:29];
+  reg signed [10:0] r995 [0:29];
+  reg signed [13:0] r996 [0:4];
+  reg signed [9:0] r997 [0:29];
+  reg signed [9:0] r998 [0:4];
+  reg signed [10:0] r999 [0:29];
+  reg signed [10:0] r1000 [0:29];
+  reg signed [13:0] r1001 [0:4];
+  reg signed [14:0] r1002 [0:4];
+  reg r1003 [0:4];
+  reg signed [9:0] r1004 [0:4];
+  reg signed [9:0] r1005 [0:4];
+  reg signed [9:0] r1006 [0:0];
+  reg signed [9:0] r1007 [0:4];
+  reg signed [9:0] r1008 [0:4];
+  reg signed [10:0] r1009 [0:4];
+  reg signed [9:0] r1010 [0:4];
+  reg signed [7:0] r1011 [0:0];
+  reg signed [9:0] r1012 [0:4];
+  reg signed [7:0] r1013 [0:0];
+  reg signed [7:0] r1014 [0:4];
+  reg signed [4:0] r1015 [0:0];
+  reg signed [4:0] r1016 [0:0];
+  reg signed [4:0] r1017 [0:0];
+  reg signed [3:0] r1018 [0:0];
+  reg signed [7:0] r1019 [0:19];
+  reg signed [8:0] r1020 [0:19];
+  reg signed [5:0] r1021 [0:79];
+  reg signed [5:0] r1022 [0:79];
+  reg signed [5:0] r1023 [0:79];
+  reg signed [3:0] r1024 [0:4];
+  reg signed [3:0] r1025 [0:4];
+  reg signed [4:0] r1026 [0:15];
+  reg signed [4:0] r1027 [0:15];
+  reg signed [5:0] r1028 [0:79];
+  reg r1029 [0:79];
+  reg signed [6:0] r1031 [0:79];
+  reg signed [5:0] r1032 [0:79];
+  reg signed [5:0] r1033 [0:79];
+  reg signed [8:0] r1034 [0:79];
+  reg signed [8:0] r1035 [0:79];
+  reg signed [9:0] r1036 [0:399];
+  reg signed [9:0] r1037 [0:0];
+  reg signed [9:0] r1038 [0:399];
+  reg signed [9:0] r1039 [0:0];
+  reg signed [9:0] r1040 [0:399];
+  reg signed [9:0] r1041 [0:399];
+  reg signed [9:0] r1042 [0:0];
+  reg signed [9:0] r1043 [0:399];
+  reg signed [9:0] r1044 [0:0];
+  reg signed [9:0] r1045 [0:399];
+  reg signed [9:0] r1046 [0:399];
+  reg signed [9:0] r1047 [0:24];
+  reg signed [9:0] r1048 [0:24];
+  reg signed [31:0] r1049 [0:399];
+  reg signed [31:0] r1050 [0:0];
+  reg signed [31:0] r1051 [0:0];
+  reg signed [31:0] r1052 [0:24];
+  reg signed [31:0] r1053 [0:24];
+  reg signed [4:0] r1054 [0:0];
+  reg signed [10:0] r1055 [0:24];
+  reg signed [9:0] r1056 [0:24];
+  reg signed [9:0] r1057 [0:24];
+  reg signed [10:0] r1058 [0:399];
+  reg signed [10:0] r1059 [0:399];
+  reg signed [14:0] r1060 [0:24];
+  reg signed [9:0] r1061 [0:399];
+  reg signed [9:0] r1062 [0:24];
+  reg signed [10:0] r1063 [0:399];
+  reg signed [10:0] r1064 [0:399];
+  reg signed [14:0] r1065 [0:24];
+  reg signed [15:0] r1066 [0:24];
+  reg r1067 [0:24];
+  reg signed [9:0] r1068 [0:24];
+  reg signed [9:0] r1069 [0:24];
+  reg signed [9:0] r1070 [0:0];
+  reg signed [9:0] r1071 [0:24];
+  reg signed [9:0] r1072 [0:24];
+  reg signed [9:0] r1073 [0:399];
+  reg signed [9:0] r1074 [0:24];
+  reg signed [9:0] r1075 [0:24];
+  reg signed [31:0] r1076 [0:399];
+  reg signed [31:0] r1077 [0:0];
+  reg signed [31:0] r1078 [0:0];
+  reg signed [31:0] r1079 [0:24];
+  reg signed [31:0] r1080 [0:24];
+  reg signed [4:0] r1081 [0:0];
+  reg signed [10:0] r1082 [0:24];
+  reg signed [9:0] r1083 [0:24];
+  reg signed [9:0] r1084 [0:24];
+  reg signed [10:0] r1085 [0:399];
+  reg signed [10:0] r1086 [0:399];
+  reg signed [14:0] r1087 [0:24];
+  reg signed [9:0] r1088 [0:399];
+  reg signed [9:0] r1089 [0:24];
+  reg signed [10:0] r1090 [0:399];
+  reg signed [10:0] r1091 [0:399];
+  reg signed [14:0] r1092 [0:24];
+  reg signed [15:0] r1093 [0:24];
+  reg r1094 [0:24];
+  reg signed [9:0] r1095 [0:24];
+  reg signed [9:0] r1096 [0:24];
+  reg signed [9:0] r1097 [0:0];
+  reg signed [9:0] r1098 [0:24];
+  reg signed [9:0] r1099 [0:24];
+  reg signed [10:0] r1100 [0:24];
+  reg signed [10:0] r1101 [0:24];
+  reg signed [3:0] r1102 [0:0];
+  reg signed [10:0] r1103 [0:24];
+  reg signed [3:0] r1104 [0:24];
+  reg signed [3:0] r1105 [0:0];
+  reg r1106 [0:24];
+  reg signed [0:0] r1107 [0:0];
+  reg signed [0:0] r1108 [0:24];
+  reg signed [10:0] r1109 [0:24];
+  reg signed [12:0] r1110 [0:4];
+  reg signed [17:0] r1112 [0:4];
+  reg r1113 [0:0];
+  reg signed [5:0] r1114 [0:0];
+  reg signed [3:0] r1115 [0:0];
+  reg signed [3:0] r1116 [0:0];
+  reg signed [7:0] r1117 [0:14];
+  reg signed [31:0] r1118 [0:0];
+  reg signed [17:0] r1119 [0:29];
+  reg signed [23:0] r1120 [0:29];
+  reg signed [31:0] r1121 [0:0];
+  reg signed [0:0] r1122 [0:29];
+  reg signed [0:0] r1123 [0:29];
+  reg signed [23:0] r1124 [0:29];
+  reg signed [2:0] r1125 [0:29];
+  reg r1126 [0:29];
+  reg signed [0:0] r1127 [0:29];
+  reg signed [0:0] r1128 [0:29];
+  reg signed [23:0] r1129 [0:29];
+  reg signed [2:0] r1130 [0:29];
+  reg signed [2:0] r1131 [0:29];
+  reg signed [2:0] r1132 [0:29];
+  reg signed [20:0] r1133 [0:29];
+  reg r1134 [0:29];
+  reg signed [20:0] r1135 [0:29];
+  reg signed [2:0] r1136 [0:29];
+  reg r1137 [0:29];
+  reg signed [0:0] r1138 [0:29];
+  reg signed [0:0] r1139 [0:29];
+  reg signed [23:0] r1140 [0:29];
+  reg signed [3:0] r1141 [0:29];
+  reg signed [3:0] r1142 [0:29];
+  reg signed [3:0] r1143 [0:29];
+  reg signed [19:0] r1144 [0:29];
+  reg r1145 [0:29];
+  reg signed [20:0] r1146 [0:29];
+  reg signed [0:0] r1147 [0:29];
+  reg r1148 [0:29];
+  reg signed [21:0] r1149 [0:29];
+  reg r1150 [0:29];
+  reg signed [20:0] r1151 [0:29];
+  reg r1152 [0:29];
+  reg signed [20:0] r1153 [0:29];
+  reg r1154 [0:29];
+  reg signed [20:0] r1155 [0:29];
+  reg signed [7:0] r1156 [0:0];
+  reg signed [20:0] r1157 [0:29];
+  reg signed [7:0] r1158 [0:0];
+  reg signed [7:0] r1159 [0:29];
+  reg signed [8:0] r1160 [0:29];
+  reg signed [8:0] r1161 [0:29];
+  reg signed [8:0] r1162 [0:29];
+  reg signed [8:0] r1163 [0:29];
+  reg signed [5:0] r1164 [0:299];
+  reg signed [5:0] r1165 [0:299];
+  reg signed [5:0] r1166 [0:299];
+  reg signed [9:0] r1167 [0:299];
+  reg signed [9:0] r1168 [0:0];
+  reg signed [9:0] r1169 [0:299];
+  reg signed [9:0] r1170 [0:0];
+  reg signed [9:0] r1171 [0:299];
+  reg signed [5:0] r1172 [0:299];
+  reg signed [8:0] r1173 [0:299];
+  reg signed [9:0] r1174 [0:0];
+  reg signed [9:0] r1175 [0:299];
+  reg signed [9:0] r1176 [0:0];
+  reg signed [9:0] r1177 [0:299];
+  reg signed [9:0] r1178 [0:599];
+  reg signed [0:0] r1179 [0:9];
+  reg signed [0:0] r1180 [0:9];
+  reg signed [9:0] r1181 [0:609];
+  reg signed [9:0] r1182 [0:609];
+  reg signed [9:0] r1183 [0:9];
+  reg signed [9:0] r1185 [0:9];
+  reg signed [31:0] r1186 [0:609];
+  reg signed [31:0] r1187 [0:0];
+  reg signed [31:0] r1188 [0:0];
+  reg signed [31:0] r1189 [0:9];
+  reg signed [31:0] r1190 [0:9];
+  reg signed [4:0] r1191 [0:0];
+  reg signed [10:0] r1192 [0:9];
+  reg signed [9:0] r1193 [0:9];
+  reg signed [9:0] r1194 [0:9];
+  reg signed [10:0] r1195 [0:609];
+  reg signed [10:0] r1196 [0:609];
+  reg signed [16:0] r1197 [0:9];
+  reg r1198 [0:9];
+  reg signed [9:0] r1199 [0:9];
+  reg signed [9:0] r1200 [0:9];
+  reg signed [9:0] r1201 [0:0];
+  reg signed [9:0] r1202 [0:9];
+  reg signed [9:0] r1203 [0:9];
+  reg signed [5:0] r1204 [0:299];
+  reg signed [9:0] r1205 [0:299];
+  reg signed [9:0] r1206 [0:0];
+  reg signed [9:0] r1207 [0:299];
+  reg signed [9:0] r1208 [0:0];
+  reg signed [9:0] r1209 [0:299];
+  reg signed [5:0] r1210 [0:299];
+  reg signed [8:0] r1211 [0:299];
+  reg signed [9:0] r1212 [0:0];
+  reg signed [9:0] r1213 [0:299];
+  reg signed [9:0] r1214 [0:0];
+  reg signed [9:0] r1215 [0:299];
+  reg signed [9:0] r1216 [0:599];
+  reg signed [0:0] r1217 [0:9];
+  reg signed [0:0] r1218 [0:9];
+  reg signed [9:0] r1219 [0:609];
+  reg signed [9:0] r1220 [0:609];
+  reg signed [9:0] r1221 [0:9];
+  reg signed [9:0] r1222 [0:9];
+  reg signed [31:0] r1223 [0:609];
+  reg signed [31:0] r1224 [0:0];
+  reg signed [31:0] r1225 [0:0];
+  reg signed [31:0] r1226 [0:9];
+  reg signed [31:0] r1227 [0:9];
+  reg signed [4:0] r1228 [0:0];
+  reg signed [10:0] r1229 [0:9];
+  reg signed [9:0] r1230 [0:9];
+  reg signed [9:0] r1231 [0:9];
+  reg signed [10:0] r1232 [0:609];
+  reg signed [10:0] r1233 [0:609];
+  reg signed [16:0] r1234 [0:9];
+  reg r1235 [0:9];
+  reg signed [9:0] r1236 [0:9];
+  reg signed [9:0] r1237 [0:9];
+  reg signed [9:0] r1238 [0:0];
+  reg signed [9:0] r1239 [0:9];
+  reg signed [9:0] r1240 [0:9];
+  reg signed [9:0] r1241 [0:9];
+  reg signed [9:0] r1242 [0:9];
+  reg signed [9:0] r1243 [0:19];
+  reg signed [9:0] r1244 [0:9];
+  reg signed [10:0] r1246 [0:9];
+  reg signed [31:0] r1247 [0:19];
+  reg signed [31:0] r1248 [0:0];
+  reg signed [31:0] r1249 [0:0];
+  reg signed [31:0] r1250 [0:9];
+  reg signed [31:0] r1251 [0:9];
+  reg signed [4:0] r1252 [0:0];
+  reg signed [11:0] r1253 [0:9];
+  reg signed [10:0] r1254 [0:9];
+  reg signed [10:0] r1255 [0:9];
+  reg signed [10:0] r1256 [0:19];
+  reg signed [10:0] r1257 [0:19];
+  reg signed [11:0] r1258 [0:9];
+  reg r1259 [0:9];
+  reg signed [10:0] r1260 [0:9];
+  reg signed [10:0] r1261 [0:9];
+  reg signed [10:0] r1262 [0:0];
+  reg signed [10:0] r1263 [0:9];
+  reg signed [10:0] r1264 [0:9];
+  reg signed [10:0] r1265 [0:9];
+  reg signed [10:0] r1266 [0:9];
+  reg signed [10:0] r1267 [0:9];
+  reg signed [10:0] r1268 [0:9];
+  reg signed [10:0] r1269 [0:9];
+  reg signed [31:0] rom0_c [0:79];
+  reg signed [31:0] rom1_c [0:5];
+  reg signed [31:0] rom2_c [0:29];
+  reg signed [31:0] rom3_c [0:29];
+  reg signed [31:0] rom4_c [0:29];
+  reg signed [31:0] rom5_c [0:299];
+  reg signed [31:0] rom6_c [0:299];
+  reg signed [31:0] rom7_c [0:9];
+  reg signed [31:0] rom8_lit [0:0];
+  reg signed [31:0] rom9_lit [0:0];
+  reg signed [31:0] rom10_lit [0:0];
+  reg signed [31:0] rom11_lit [0:0];
+  reg signed [31:0] rom12_lit [0:0];
+  reg signed [31:0] rom13_lit [0:0];
+  reg signed [31:0] rom14_lit [0:0];
+  reg signed [31:0] rom15_lit [0:0];
+  reg signed [31:0] rom16_lit [0:0];
+  reg signed [31:0] rom17_lit [0:0];
+  reg signed [31:0] rom18_lit [0:0];
+  reg signed [31:0] rom19_lit [0:0];
+  reg signed [31:0] rom20_lit [0:0];
+  reg signed [31:0] rom21_lit [0:0];
+  reg signed [31:0] rom22_lit [0:0];
+  reg signed [31:0] rom23_lit [0:0];
+  reg signed [31:0] rom24_lit [0:0];
+  reg signed [31:0] rom25_lit [0:0];
+  reg signed [31:0] rom26_lit [0:0];
+  reg signed [31:0] rom27_lit [0:0];
+  reg signed [31:0] rom28_lit [0:0];
+  reg signed [31:0] rom29_lit [0:0];
+  reg signed [31:0] rom30_lit [0:0];
+  reg signed [31:0] rom31_lit [0:0];
+  reg signed [31:0] t0;
+  reg signed [31:0] t1;
+  reg signed [31:0] t2;
+  reg signed [31:0] t3;
+  reg signed [31:0] t4;
+  reg signed [31:0] t5;
+  reg signed [31:0] t6;
+  reg signed [31:0] t7;
+  reg signed [31:0] t8;
+  reg signed [31:0] t9;
+  integer a0;
+  integer a1;
+  integer a2;
+  integer a3;
+  integer c0;
+  integer c1;
+  integer c2;
+  integer c3;
+  integer k0;
+  integer k1;
+  integer k2;
+  integer k3;
+  integer k4;
+  integer k5;
+  integer k6;
+  integer k7;
+  integer k8;
+  integer k9;
+  integer k10;
+  integer k11;
+  integer k12;
+  integer k13;
+  integer k14;
+  integer k15;
+  integer k16;
+  integer k17;
+  integer k18;
+  integer k19;
+  integer k20;
+  integer k21;
+  integer k22;
+  integer k23;
+  integer k24;
+  integer state;
+  initial $readmemh("rom/rom0_c.mem", rom0_c);
+  initial $readmemh("rom/rom1_c.mem", rom1_c);
+  initial $readmemh("rom/rom2_c.mem", rom2_c);
+  initial $readmemh("rom/rom3_c.mem", rom3_c);
+  initial $readmemh("rom/rom4_c.mem", rom4_c);
+  initial $readmemh("rom/rom5_c.mem", rom5_c);
+  initial $readmemh("rom/rom6_c.mem", rom6_c);
+  initial $readmemh("rom/rom7_c.mem", rom7_c);
+  initial $readmemh("rom/rom8_lit.mem", rom8_lit);
+  initial $readmemh("rom/rom9_lit.mem", rom9_lit);
+  initial $readmemh("rom/rom10_lit.mem", rom10_lit);
+  initial $readmemh("rom/rom11_lit.mem", rom11_lit);
+  initial $readmemh("rom/rom12_lit.mem", rom12_lit);
+  initial $readmemh("rom/rom13_lit.mem", rom13_lit);
+  initial $readmemh("rom/rom14_lit.mem", rom14_lit);
+  initial $readmemh("rom/rom15_lit.mem", rom15_lit);
+  initial $readmemh("rom/rom16_lit.mem", rom16_lit);
+  initial $readmemh("rom/rom17_lit.mem", rom17_lit);
+  initial $readmemh("rom/rom18_lit.mem", rom18_lit);
+  initial $readmemh("rom/rom19_lit.mem", rom19_lit);
+  initial $readmemh("rom/rom20_lit.mem", rom20_lit);
+  initial $readmemh("rom/rom21_lit.mem", rom21_lit);
+  initial $readmemh("rom/rom22_lit.mem", rom22_lit);
+  initial $readmemh("rom/rom23_lit.mem", rom23_lit);
+  initial $readmemh("rom/rom24_lit.mem", rom24_lit);
+  initial $readmemh("rom/rom25_lit.mem", rom25_lit);
+  initial $readmemh("rom/rom26_lit.mem", rom26_lit);
+  initial $readmemh("rom/rom27_lit.mem", rom27_lit);
+  initial $readmemh("rom/rom28_lit.mem", rom28_lit);
+  initial $readmemh("rom/rom29_lit.mem", rom29_lit);
+  initial $readmemh("rom/rom30_lit.mem", rom30_lit);
+  initial $readmemh("rom/rom31_lit.mem", rom31_lit);
+  always @(posedge clk) begin
+    if (rst) begin
+      state <= 0;
+      done <= 0;
+    end else begin
+      case (state)
+      0: begin if (start) state <= 1; end
+      1: begin  // instr 0 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 160; c1 = c1 + 1) begin
+            t0 = $signed(r16[a1]);
+            t1 = (t0 < 0) ? (0 - t0) : t0;
+            r26[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 160;
+        end
+        state <= 2;
+      end
+      2: begin  // instr 1 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          r27[a0] = t0[8:0];
+          a0 = a0 + 1;
+        end
+        state <= 3;
+      end
+      3: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 160; c1 = c1 + 1) begin
+            t0 = $signed(r27[a0]);
+            t1 = $signed(r26[a1]);
+            t2 = (t0 < t1) ? t1 : t0;
+            r27[a0] = t2[8:0];
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 1;
+        end
+        state <= 4;
+      end
+      4: begin  // instr 2 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r13[a1]);
+          t1 = $signed(r27[a2]);
+          t2 = (t0 < t1) ? t1 : t0;
+          r28[a0] = t2[8:0];
+          a0 = a0 + 1;
+        end
+        state <= 5;
+      end
+      5: begin  // instr 3 concat
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t0 = $signed(r0[a1]);
+            r29[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 160;
+        end
+        state <= 6;
+      end
+      6: begin  // concat
+        a0 = 15;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 160; c1 = c1 + 1) begin
+            t0 = $signed(r16[a1]);
+            r29[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 15;
+        end
+        state <= 7;
+      end
+      7: begin  // instr 4 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 175; c1 = c1 + 1) begin
+            t0 = $signed(r29[a1]);
+            t1 = t0 << 1;
+            r31[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 175;
+        end
+        state <= 8;
+      end
+      8: begin  // instr 5 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(rom0_c[a1]);
+            t1 = t0;
+            r32[a0] = t1[5:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 9;
+      end
+      9: begin  // instr 6 rev
+        a0 = 0;
+        a1 = 15;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r32[a1]);
+            r33[a0] = t0[5:0];
+            a0 = a0 + 1;
+            a1 = a1 - 1;
+          end
+          a1 = a1 + 32;
+        end
+        state <= 10;
+      end
+      10: begin  // instr 7 reshape
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r33[a1]);
+          r34[a0] = t0[5:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 11;
+      end
+      11: begin  // instr 8 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 160; c0 = c0 + 1) begin
+          t0 = a1;
+          r35[a0] = t0[8:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 12;
+      end
+      12: begin  // instr 9 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 160; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r35[a1]);
+            r36[a0] = t0[8:0];
+            a0 = a0 + 1;
+          end
+          a1 = a1 + 1;
+        end
+        state <= 13;
+      end
+      13: begin  // instr 10 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 16; c0 = c0 + 1) begin
+          t0 = a1;
+          r37[a0] = t0[4:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 14;
+      end
+      14: begin  // instr 11 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r37[a1]);
+            r38[a0] = t0[4:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 16;
+        end
+        state <= 15;
+      end
+      15: begin  // instr 12 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 160; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r36[a1]);
+            t1 = $signed(r38[a2]);
+            t2 = t0 + t1;
+            r39[a0] = t2[8:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 + 1;
+          a2 = a2 - 16;
+        end
+        state <= 16;
+      end
+      16: begin  // instr 13 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 160; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r39[a1]);
+            t1 = $signed(rom9_lit[a2]);
+            t2 = (t0 < t1) ? 1 : 0;
+            r41[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 17;
+      end
+      17: begin  // instr 14 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 160; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r39[a1]);
+            t1 = $signed(rom10_lit[a2]);
+            t2 = t0 + t1;
+            r43[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 18;
+      end
+      18: begin  // instr 15 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 160; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = r41[a1];
+            t1 = $signed(r39[a2]);
+            t2 = $signed(r43[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r44[a0] = t3[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+        end
+        state <= 19;
+      end
+      19: begin  // instr 16 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 160; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r44[a1]);
+              r45[a0] = t0[8:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+        end
+        state <= 20;
+      end
+      20: begin  // instr 17 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 160; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 16; c2 = c2 + 1) begin
+              t9 = 0;
+              t0 = $signed(r45[a2]);
+              t1 = (t0 < 0) ? 0 : t0;
+              t1 = (t1 > 174) ? 174 : t1;
+              t2 = t1;
+              t9 = t9 + t2;
+              t3 = $signed(r31[a1 + t9]);
+              r46[a0] = t3[8:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a1 = a1 + 175;
+          a2 = a2 - 2560;
+        end
+        state <= 21;
+      end
+      21: begin  // instr 18 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r46[a1]);
+                r47[a0] = t0[8:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 2560;
+          end
+        end
+        state <= 22;
+      end
+      22: begin  // instr 19 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r34[a1]);
+                t1 = $signed(r47[a2]);
+                t2 = t0 + t1;
+                r48[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+                a2 = a2 + 1;
+              end
+              a1 = a1 - 16;
+            end
+            a2 = a2 - 2560;
+          end
+          a1 = a1 + 16;
+        end
+        state <= 23;
+      end
+      23: begin  // instr 20 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r51[a0] = t1[9:0];
+        state <= 24;
+      end
+      24: begin  // instr 21 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r51[a1]);
+                t1 = $signed(r48[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r52[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 2560;
+          end
+          a2 = a2 + 2560;
+        end
+        state <= 25;
+      end
+      25: begin  // instr 22 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r53[a0] = t1[9:0];
+        state <= 26;
+      end
+      26: begin  // instr 23 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r53[a1]);
+                t1 = $signed(r52[a2]);
+                t2 = (t1 < t0) ? t1 : t0;
+                r54[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 2560;
+          end
+          a2 = a2 + 2560;
+        end
+        state <= 27;
+      end
+      27: begin  // instr 24 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r34[a1]);
+                t1 = $signed(r47[a2]);
+                t2 = t0 - t1;
+                r55[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+                a2 = a2 + 1;
+              end
+              a1 = a1 - 16;
+            end
+            a2 = a2 - 2560;
+          end
+          a1 = a1 + 16;
+        end
+        state <= 28;
+      end
+      28: begin  // instr 25 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r56[a0] = t1[9:0];
+        state <= 29;
+      end
+      29: begin  // instr 26 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r56[a1]);
+                t1 = $signed(r55[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r57[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 2560;
+          end
+          a2 = a2 + 2560;
+        end
+        state <= 30;
+      end
+      30: begin  // instr 27 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r58[a0] = t1[9:0];
+        state <= 31;
+      end
+      31: begin  // instr 28 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r58[a1]);
+                t1 = $signed(r57[a2]);
+                t2 = (t1 < t0) ? t1 : t0;
+                r59[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 2560;
+          end
+          a2 = a2 + 2560;
+        end
+        state <= 32;
+      end
+      32: begin  // instr 29 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r54[a1]);
+                t1 = (t0 < 0) ? (0 - t0) : t0;
+                r60[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 2560;
+          end
+          a1 = a1 + 2560;
+        end
+        state <= 33;
+      end
+      33: begin  // instr 30 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          r61[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 34;
+      end
+      34: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r61[a0]);
+                t1 = $signed(r60[a1]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r61[a0] = t2[9:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 35;
+      end
+      35: begin  // instr 31 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r61[a1]);
+              t1 = $signed(rom13_lit[a2]);
+              t2 = t0 - t1;
+              r63[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 36;
+      end
+      36: begin  // instr 32 loop
+        k0 = 0;
+        state <= 37;
+      end
+      37: begin  // loop0.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 12800; c0 = c0 + 1) begin
+          t0 = $signed(r54[a1]);
+          r64[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 38;
+      end
+      38: begin  // loop0.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r65[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 39;
+      end
+      39: begin  // loop0.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r66[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 40;
+      end
+      40: begin  // loop0.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r63[a1]);
+          r67[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 41;
+      end
+      41: begin  // loop0.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r61[a1]);
+          r68[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 42;
+      end
+      42: begin  // loop0.head
+        if (k0 == 12) state <= 65;
+        else state <= 43;
+      end
+      43: begin  // instr 33 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r66[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r69[a0] = t2[4:0];
+        state <= 44;
+      end
+      44: begin  // instr 34 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r67[a1]);
+              t1 = $signed(r68[a2]);
+              t2 = t0 + t1;
+              r70[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 160;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 160;
+        end
+        state <= 45;
+      end
+      45: begin  // instr 35 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r70[a1]);
+              t1 = t0 >>> 1;
+              r71[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 46;
+      end
+      46: begin  // instr 36 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r71[a1]);
+                r72[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 47;
+      end
+      47: begin  // instr 37 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r64[a1]);
+                t1 = $signed(r72[a2]);
+                t2 = t0 - t1;
+                r73[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 2560;
+            a2 = a2 - 160;
+          end
+          a1 = a1 + 2560;
+          a2 = a2 + 160;
+        end
+        state <= 48;
+      end
+      48: begin  // instr 38 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r73[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r74[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 2560;
+          end
+          a1 = a1 + 2560;
+        end
+        state <= 49;
+      end
+      49: begin  // instr 39 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          r75[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 50;
+      end
+      50: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r75[a0]);
+                t1 = $signed(r74[a1]);
+                t2 = t0 + t1;
+                r75[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 51;
+      end
+      51: begin  // instr 40 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r64[a1]);
+                t1 = 0 - t0;
+                r76[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 2560;
+          end
+          a1 = a1 + 2560;
+        end
+        state <= 52;
+      end
+      52: begin  // instr 41 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r71[a1]);
+                r77[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 53;
+      end
+      53: begin  // instr 42 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r76[a1]);
+                t1 = $signed(r77[a2]);
+                t2 = t0 - t1;
+                r78[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 2560;
+            a2 = a2 - 160;
+          end
+          a1 = a1 + 2560;
+          a2 = a2 + 160;
+        end
+        state <= 54;
+      end
+      54: begin  // instr 43 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r78[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r79[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 2560;
+          end
+          a1 = a1 + 2560;
+        end
+        state <= 55;
+      end
+      55: begin  // instr 44 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          r80[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 56;
+      end
+      56: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r80[a0]);
+                t1 = $signed(r79[a1]);
+                t2 = t0 + t1;
+                r80[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 57;
+      end
+      57: begin  // instr 45 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r75[a1]);
+              t1 = $signed(r80[a2]);
+              t2 = t0 + t1;
+              r81[a0] = t2[15:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 160;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 160;
+        end
+        state <= 58;
+      end
+      58: begin  // instr 46 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r81[a1]);
+              t1 = $signed(r65[a2]);
+              t2 = (t0 > t1) ? 1 : 0;
+              r82[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 59;
+      end
+      59: begin  // instr 47 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = r82[a1];
+              t1 = $signed(r67[a2]);
+              t2 = $signed(r71[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r83[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 160;
+            a3 = a3 - 160;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 160;
+          a3 = a3 + 160;
+        end
+        state <= 60;
+      end
+      60: begin  // instr 48 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = r82[a1];
+              t1 = $signed(r71[a2]);
+              t2 = $signed(r68[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r84[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 160;
+            a3 = a3 - 160;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 160;
+          a3 = a3 + 160;
+        end
+        state <= 61;
+      end
+      61: begin  // loop0.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r69[a1]);
+          r66[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 62;
+      end
+      62: begin  // loop0.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r83[a1]);
+          r67[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 63;
+      end
+      63: begin  // loop0.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r84[a1]);
+          r68[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 64;
+      end
+      64: begin  // loop0.adv
+        k0 = k0 + 1;
+        state <= 42;
+      end
+      65: begin  // loop0.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r66[a1]);
+          r85[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 66;
+      end
+      66: begin  // loop0.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r67[a1]);
+          r86[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 67;
+      end
+      67: begin  // loop0.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r68[a1]);
+          r87[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 68;
+      end
+      68: begin  // instr 49 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r59[a1]);
+                t1 = (t0 < 0) ? (0 - t0) : t0;
+                r88[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 2560;
+          end
+          a1 = a1 + 2560;
+        end
+        state <= 69;
+      end
+      69: begin  // instr 50 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          r89[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 70;
+      end
+      70: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r89[a0]);
+                t1 = $signed(r88[a1]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r89[a0] = t2[9:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 71;
+      end
+      71: begin  // instr 51 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r89[a1]);
+              t1 = $signed(rom13_lit[a2]);
+              t2 = t0 - t1;
+              r90[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 72;
+      end
+      72: begin  // instr 52 loop
+        k1 = 0;
+        state <= 73;
+      end
+      73: begin  // loop1.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 12800; c0 = c0 + 1) begin
+          t0 = $signed(r59[a1]);
+          r91[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 74;
+      end
+      74: begin  // loop1.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r92[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 75;
+      end
+      75: begin  // loop1.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r93[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 76;
+      end
+      76: begin  // loop1.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r90[a1]);
+          r94[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 77;
+      end
+      77: begin  // loop1.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r89[a1]);
+          r95[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 78;
+      end
+      78: begin  // loop1.head
+        if (k1 == 12) state <= 101;
+        else state <= 79;
+      end
+      79: begin  // instr 53 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r93[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r96[a0] = t2[4:0];
+        state <= 80;
+      end
+      80: begin  // instr 54 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r94[a1]);
+              t1 = $signed(r95[a2]);
+              t2 = t0 + t1;
+              r97[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 160;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 160;
+        end
+        state <= 81;
+      end
+      81: begin  // instr 55 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r97[a1]);
+              t1 = t0 >>> 1;
+              r98[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 82;
+      end
+      82: begin  // instr 56 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r98[a1]);
+                r99[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 83;
+      end
+      83: begin  // instr 57 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r91[a1]);
+                t1 = $signed(r99[a2]);
+                t2 = t0 - t1;
+                r100[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 2560;
+            a2 = a2 - 160;
+          end
+          a1 = a1 + 2560;
+          a2 = a2 + 160;
+        end
+        state <= 84;
+      end
+      84: begin  // instr 58 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r100[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r101[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 2560;
+          end
+          a1 = a1 + 2560;
+        end
+        state <= 85;
+      end
+      85: begin  // instr 59 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          r102[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 86;
+      end
+      86: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r102[a0]);
+                t1 = $signed(r101[a1]);
+                t2 = t0 + t1;
+                r102[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 87;
+      end
+      87: begin  // instr 60 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r91[a1]);
+                t1 = 0 - t0;
+                r103[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 2560;
+          end
+          a1 = a1 + 2560;
+        end
+        state <= 88;
+      end
+      88: begin  // instr 61 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r98[a1]);
+                r104[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 89;
+      end
+      89: begin  // instr 62 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r103[a1]);
+                t1 = $signed(r104[a2]);
+                t2 = t0 - t1;
+                r105[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 2560;
+            a2 = a2 - 160;
+          end
+          a1 = a1 + 2560;
+          a2 = a2 + 160;
+        end
+        state <= 90;
+      end
+      90: begin  // instr 63 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r105[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r106[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 2560;
+          end
+          a1 = a1 + 2560;
+        end
+        state <= 91;
+      end
+      91: begin  // instr 64 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          r107[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 92;
+      end
+      92: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r107[a0]);
+                t1 = $signed(r106[a1]);
+                t2 = t0 + t1;
+                r107[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 93;
+      end
+      93: begin  // instr 65 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r102[a1]);
+              t1 = $signed(r107[a2]);
+              t2 = t0 + t1;
+              r108[a0] = t2[15:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 160;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 160;
+        end
+        state <= 94;
+      end
+      94: begin  // instr 66 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r108[a1]);
+              t1 = $signed(r92[a2]);
+              t2 = (t0 > t1) ? 1 : 0;
+              r109[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 95;
+      end
+      95: begin  // instr 67 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = r109[a1];
+              t1 = $signed(r94[a2]);
+              t2 = $signed(r98[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r110[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 160;
+            a3 = a3 - 160;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 160;
+          a3 = a3 + 160;
+        end
+        state <= 96;
+      end
+      96: begin  // instr 68 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = r109[a1];
+              t1 = $signed(r98[a2]);
+              t2 = $signed(r95[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r111[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 160;
+            a3 = a3 - 160;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 160;
+          a3 = a3 + 160;
+        end
+        state <= 97;
+      end
+      97: begin  // loop1.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r96[a1]);
+          r93[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 98;
+      end
+      98: begin  // loop1.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r110[a1]);
+          r94[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 99;
+      end
+      99: begin  // loop1.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r111[a1]);
+          r95[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 100;
+      end
+      100: begin  // loop1.adv
+        k1 = k1 + 1;
+        state <= 78;
+      end
+      101: begin  // loop1.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r93[a1]);
+          r112[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 102;
+      end
+      102: begin  // loop1.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r94[a1]);
+          r113[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 103;
+      end
+      103: begin  // loop1.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r95[a1]);
+          r114[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 104;
+      end
+      104: begin  // instr 69 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r87[a1]);
+              t1 = $signed(r114[a2]);
+              t2 = t0 - t1;
+              r115[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 160;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 160;
+        end
+        state <= 105;
+      end
+      105: begin  // instr 70 transpose
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r115[a1]);
+              r116[a0] = t0[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 640;
+        end
+        state <= 106;
+      end
+      106: begin  // instr 71 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r17[a1]);
+            r117[a0] = t0[8:0];
+            a0 = a0 + 1;
+          end
+        end
+        state <= 107;
+      end
+      107: begin  // instr 72 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r116[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r118[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 800;
+        end
+        state <= 108;
+      end
+      108: begin  // instr 73 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = a1;
+              r119[a0] = t0[8:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 160;
+          end
+        end
+        state <= 109;
+      end
+      109: begin  // instr 74 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r117[a1]);
+              r120[a0] = t0[8:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 110;
+      end
+      110: begin  // instr 75 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r119[a1]);
+              t1 = $signed(r120[a2]);
+              t2 = (t0 < t1) ? 1 : 0;
+              r121[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 800;
+        end
+        state <= 111;
+      end
+      111: begin  // instr 76 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom9_lit[a1]);
+        t1 = t0;
+        r122[a0] = t1[0:0];
+        state <= 112;
+      end
+      112: begin  // instr 77 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r122[a1]);
+              r123[a0] = t0[0:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 113;
+      end
+      113: begin  // instr 78 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = r121[a1];
+              t1 = $signed(r123[a2]);
+              t2 = $signed(r118[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r124[a0] = t3[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+          end
+          a1 = a1 - 800;
+          a2 = a2 - 800;
+          a3 = a3 - 800;
+        end
+        state <= 114;
+      end
+      114: begin  // instr 79 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          r125[a0] = t0[17:0];
+          a0 = a0 + 1;
+        end
+        state <= 115;
+      end
+      115: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 160; c2 = c2 + 1) begin
+              t0 = $signed(r125[a0]);
+              t1 = $signed(r124[a1]);
+              t2 = t0 + t1;
+              r125[a0] = t2[17:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 116;
+      end
+      116: begin  // instr 80 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r125[a1]);
+            t1 = t0 << 0;
+            r126[a0] = t1[17:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 117;
+      end
+      117: begin  // instr 81 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r17[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? 1 : 0;
+          r127[a0] = (t2 != 0);
+          a0 = a0 + 1;
+        end
+        state <= 118;
+      end
+      118: begin  // instr 82 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r17[a1]);
+          t1 = $signed(rom10_lit[a2]);
+          t2 = t0 + t1;
+          r128[a0] = t2[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 119;
+      end
+      119: begin  // instr 83 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = r127[a1];
+          t1 = $signed(r17[a2]);
+          t2 = $signed(r128[a3]);
+          t3 = (t0 != 0) ? t2 : t1;
+          r129[a0] = t3[8:0];
+          a0 = a0 + 1;
+        end
+        state <= 120;
+      end
+      120: begin  // instr 84 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r129[a1]);
+            r130[a0] = t0[8:0];
+            a0 = a0 + 1;
+          end
+        end
+        state <= 121;
+      end
+      121: begin  // instr 85 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t9 = 0;
+            t0 = $signed(r130[a2]);
+            t1 = (t0 < 0) ? 0 : t0;
+            t1 = (t1 > 160) ? 160 : t1;
+            t2 = t1;
+            t9 = t9 + t2;
+            t3 = $signed(r29[a1 + t9]);
+            r131[a0] = t3[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 1;
+        end
+        state <= 122;
+      end
+      122: begin  // instr 86 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r6[a1]);
+          t1 = $signed(r17[a2]);
+          t2 = t0 + t1;
+          r132[a0] = t2;
+          a0 = a0 + 1;
+        end
+        state <= 123;
+      end
+      123: begin  // instr 87 and
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r6[a1]);
+          t1 = $signed(rom8_lit[a2]);
+          t2 = t0 & t1;
+          r133[a0] = t2[1:0];
+          a0 = a0 + 1;
+        end
+        state <= 124;
+      end
+      124: begin  // instr 88 slice
+        a0 = 0;
+        a1 = 10;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 165; c1 = c1 + 1) begin
+            t0 = $signed(r29[a1]);
+            r134[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 125;
+      end
+      125: begin  // instr 89 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 165; c1 = c1 + 1) begin
+            t0 = $signed(r134[a1]);
+            t1 = t0 << 1;
+            r135[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 165;
+        end
+        state <= 126;
+      end
+      126: begin  // instr 90 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom9_lit[a1]);
+        t1 = t0;
+        r136[a0] = t1[0:0];
+        state <= 127;
+      end
+      127: begin  // instr 91 pad
+        t0 = $signed(r136[0]);
+        a0 = 0;
+        for (c0 = 0; c0 < 166; c0 = c0 + 1) begin
+          r137[a0] = t0[8:0];
+          a0 = a0 + 1;
+        end
+        state <= 128;
+      end
+      128: begin  // pad.scatter
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 165; c1 = c1 + 1) begin
+            t1 = $signed(r135[a1]);
+            r137[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 1;
+        end
+        state <= 129;
+      end
+      129: begin  // instr 92 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = a1;
+          r138[a0] = t0[7:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 130;
+      end
+      130: begin  // instr 93 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r138[a1]);
+          t1 = t0 << 1;
+          r139[a0] = t1[8:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 131;
+      end
+      131: begin  // instr 94 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r139[a1]);
+            r140[a0] = t0[8:0];
+            a0 = a0 + 1;
+          end
+          a1 = a1 + 1;
+        end
+        state <= 132;
+      end
+      132: begin  // instr 95 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 6; c0 = c0 + 1) begin
+          t0 = a1;
+          r141[a0] = t0[3:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 133;
+      end
+      133: begin  // instr 96 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 6; c1 = c1 + 1) begin
+            t0 = $signed(r141[a1]);
+            r142[a0] = t0[3:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 6;
+        end
+        state <= 134;
+      end
+      134: begin  // instr 97 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 6; c1 = c1 + 1) begin
+            t0 = $signed(r140[a1]);
+            t1 = $signed(r142[a2]);
+            t2 = t0 + t1;
+            r143[a0] = t2[8:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 + 1;
+          a2 = a2 - 6;
+        end
+        state <= 135;
+      end
+      135: begin  // instr 98 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r143[a1]);
+              r144[a0] = t0[8:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 480;
+        end
+        state <= 136;
+      end
+      136: begin  // instr 99 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r133[a1]);
+              r145[a0] = t0[1:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 137;
+      end
+      137: begin  // instr 100 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r145[a1]);
+              t1 = $signed(r144[a2]);
+              t2 = t0 + t1;
+              r146[a0] = t2[8:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 480;
+        end
+        state <= 138;
+      end
+      138: begin  // instr 101 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r146[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? 1 : 0;
+              r147[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 480;
+        end
+        state <= 139;
+      end
+      139: begin  // instr 102 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r146[a1]);
+              t1 = $signed(rom14_lit[a2]);
+              t2 = t0 + t1;
+              r149[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 480;
+        end
+        state <= 140;
+      end
+      140: begin  // instr 103 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = r147[a1];
+              t1 = $signed(r146[a2]);
+              t2 = $signed(r149[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r150[a0] = t3[8:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+          end
+          a1 = a1 - 480;
+          a2 = a2 - 480;
+          a3 = a3 - 480;
+        end
+        state <= 141;
+      end
+      141: begin  // instr 104 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r150[a1]);
+                r151[a0] = t0[8:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 480;
+        end
+        state <= 142;
+      end
+      142: begin  // instr 105 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t9 = 0;
+              t0 = $signed(r151[a2]);
+              t1 = (t0 < 0) ? 0 : t0;
+              t1 = (t1 > 165) ? 165 : t1;
+              t2 = t1;
+              t9 = t9 + t2;
+              t3 = $signed(r137[a1 + t9]);
+              r152[a0] = t3[8:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a1 = a1 + 166;
+        end
+        state <= 143;
+      end
+      143: begin  // instr 106 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 6; c0 = c0 + 1) begin
+          t0 = $signed(rom1_c[a1]);
+          t1 = t0;
+          r153[a0] = t1[6:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 144;
+      end
+      144: begin  // instr 107 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r153[a1]);
+              r154[a0] = t0[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 6;
+          end
+        end
+        state <= 145;
+      end
+      145: begin  // instr 108 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r154[a1]);
+              t1 = $signed(r152[a2]);
+              t2 = t0 + t1;
+              r155[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 6;
+          end
+          a2 = a2 - 480;
+        end
+        state <= 146;
+      end
+      146: begin  // instr 109 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r156[a0] = t1[9:0];
+        state <= 147;
+      end
+      147: begin  // instr 110 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r156[a1]);
+              t1 = $signed(r155[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r157[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 480;
+        end
+        state <= 148;
+      end
+      148: begin  // instr 111 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r158[a0] = t1[9:0];
+        state <= 149;
+      end
+      149: begin  // instr 112 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r158[a1]);
+              t1 = $signed(r157[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r159[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 480;
+        end
+        state <= 150;
+      end
+      150: begin  // instr 113 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r153[a1]);
+              r160[a0] = t0[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 6;
+          end
+        end
+        state <= 151;
+      end
+      151: begin  // instr 114 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r160[a1]);
+              t1 = $signed(r152[a2]);
+              t2 = t0 - t1;
+              r161[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 6;
+          end
+          a2 = a2 - 480;
+        end
+        state <= 152;
+      end
+      152: begin  // instr 115 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r162[a0] = t1[9:0];
+        state <= 153;
+      end
+      153: begin  // instr 116 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r162[a1]);
+              t1 = $signed(r161[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r163[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 480;
+        end
+        state <= 154;
+      end
+      154: begin  // instr 117 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r164[a0] = t1[9:0];
+        state <= 155;
+      end
+      155: begin  // instr 118 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r164[a1]);
+              t1 = $signed(r163[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r165[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 480;
+        end
+        state <= 156;
+      end
+      156: begin  // instr 119 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r159[a1]);
+              t1 = (t0 < 0) ? (0 - t0) : t0;
+              r166[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 480;
+        end
+        state <= 157;
+      end
+      157: begin  // instr 120 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          r167[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 158;
+      end
+      158: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r167[a0]);
+              t1 = $signed(r166[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r167[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 159;
+      end
+      159: begin  // instr 121 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r167[a1]);
+            t1 = $signed(rom13_lit[a2]);
+            t2 = t0 - t1;
+            r168[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 80;
+        end
+        state <= 160;
+      end
+      160: begin  // instr 122 loop
+        k2 = 0;
+        state <= 161;
+      end
+      161: begin  // loop2.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 480; c0 = c0 + 1) begin
+          t0 = $signed(r159[a1]);
+          r169[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 162;
+      end
+      162: begin  // loop2.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r170[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 163;
+      end
+      163: begin  // loop2.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r171[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 164;
+      end
+      164: begin  // loop2.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r168[a1]);
+          r172[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 165;
+      end
+      165: begin  // loop2.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r167[a1]);
+          r173[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 166;
+      end
+      166: begin  // loop2.head
+        if (k2 == 12) state <= 189;
+        else state <= 167;
+      end
+      167: begin  // instr 123 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r171[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r174[a0] = t2[4:0];
+        state <= 168;
+      end
+      168: begin  // instr 124 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r172[a1]);
+            t1 = $signed(r173[a2]);
+            t2 = t0 + t1;
+            r175[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 80;
+          a2 = a2 - 80;
+        end
+        state <= 169;
+      end
+      169: begin  // instr 125 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r175[a1]);
+            t1 = t0 >>> 1;
+            r176[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 80;
+        end
+        state <= 170;
+      end
+      170: begin  // instr 126 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r176[a1]);
+              r177[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 80;
+        end
+        state <= 171;
+      end
+      171: begin  // instr 127 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r169[a1]);
+              t1 = $signed(r177[a2]);
+              t2 = t0 - t1;
+              r178[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 480;
+          a2 = a2 - 80;
+        end
+        state <= 172;
+      end
+      172: begin  // instr 128 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r178[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r179[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 480;
+        end
+        state <= 173;
+      end
+      173: begin  // instr 129 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          r180[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 174;
+      end
+      174: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r180[a0]);
+              t1 = $signed(r179[a1]);
+              t2 = t0 + t1;
+              r180[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 175;
+      end
+      175: begin  // instr 130 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r169[a1]);
+              t1 = 0 - t0;
+              r181[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 480;
+        end
+        state <= 176;
+      end
+      176: begin  // instr 131 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r176[a1]);
+              r182[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 80;
+        end
+        state <= 177;
+      end
+      177: begin  // instr 132 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r181[a1]);
+              t1 = $signed(r182[a2]);
+              t2 = t0 - t1;
+              r183[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 480;
+          a2 = a2 - 80;
+        end
+        state <= 178;
+      end
+      178: begin  // instr 133 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r183[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r184[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 480;
+        end
+        state <= 179;
+      end
+      179: begin  // instr 134 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          r185[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 180;
+      end
+      180: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r185[a0]);
+              t1 = $signed(r184[a1]);
+              t2 = t0 + t1;
+              r185[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 181;
+      end
+      181: begin  // instr 135 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r180[a1]);
+            t1 = $signed(r185[a2]);
+            t2 = t0 + t1;
+            r186[a0] = t2[14:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 80;
+          a2 = a2 - 80;
+        end
+        state <= 182;
+      end
+      182: begin  // instr 136 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r186[a1]);
+            t1 = $signed(r170[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r187[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 80;
+        end
+        state <= 183;
+      end
+      183: begin  // instr 137 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = r187[a1];
+            t1 = $signed(r172[a2]);
+            t2 = $signed(r176[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r188[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 80;
+          a2 = a2 - 80;
+          a3 = a3 - 80;
+        end
+        state <= 184;
+      end
+      184: begin  // instr 138 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = r187[a1];
+            t1 = $signed(r176[a2]);
+            t2 = $signed(r173[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r189[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 80;
+          a2 = a2 - 80;
+          a3 = a3 - 80;
+        end
+        state <= 185;
+      end
+      185: begin  // loop2.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r174[a1]);
+          r171[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 186;
+      end
+      186: begin  // loop2.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r188[a1]);
+          r172[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 187;
+      end
+      187: begin  // loop2.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r189[a1]);
+          r173[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 188;
+      end
+      188: begin  // loop2.adv
+        k2 = k2 + 1;
+        state <= 166;
+      end
+      189: begin  // loop2.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r171[a1]);
+          r190[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 190;
+      end
+      190: begin  // loop2.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r172[a1]);
+          r191[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 191;
+      end
+      191: begin  // loop2.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r173[a1]);
+          r192[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 192;
+      end
+      192: begin  // instr 139 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r165[a1]);
+              t1 = (t0 < 0) ? (0 - t0) : t0;
+              r193[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 480;
+        end
+        state <= 193;
+      end
+      193: begin  // instr 140 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          r194[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 194;
+      end
+      194: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r194[a0]);
+              t1 = $signed(r193[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r194[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 195;
+      end
+      195: begin  // instr 141 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r194[a1]);
+            t1 = $signed(rom13_lit[a2]);
+            t2 = t0 - t1;
+            r195[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 80;
+        end
+        state <= 196;
+      end
+      196: begin  // instr 142 loop
+        k3 = 0;
+        state <= 197;
+      end
+      197: begin  // loop3.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 480; c0 = c0 + 1) begin
+          t0 = $signed(r165[a1]);
+          r196[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 198;
+      end
+      198: begin  // loop3.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r197[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 199;
+      end
+      199: begin  // loop3.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r198[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 200;
+      end
+      200: begin  // loop3.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r195[a1]);
+          r199[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 201;
+      end
+      201: begin  // loop3.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r194[a1]);
+          r200[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 202;
+      end
+      202: begin  // loop3.head
+        if (k3 == 12) state <= 225;
+        else state <= 203;
+      end
+      203: begin  // instr 143 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r198[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r201[a0] = t2[4:0];
+        state <= 204;
+      end
+      204: begin  // instr 144 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r199[a1]);
+            t1 = $signed(r200[a2]);
+            t2 = t0 + t1;
+            r202[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 80;
+          a2 = a2 - 80;
+        end
+        state <= 205;
+      end
+      205: begin  // instr 145 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r202[a1]);
+            t1 = t0 >>> 1;
+            r203[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 80;
+        end
+        state <= 206;
+      end
+      206: begin  // instr 146 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r203[a1]);
+              r204[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 80;
+        end
+        state <= 207;
+      end
+      207: begin  // instr 147 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r196[a1]);
+              t1 = $signed(r204[a2]);
+              t2 = t0 - t1;
+              r205[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 480;
+          a2 = a2 - 80;
+        end
+        state <= 208;
+      end
+      208: begin  // instr 148 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r205[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r206[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 480;
+        end
+        state <= 209;
+      end
+      209: begin  // instr 149 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          r207[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 210;
+      end
+      210: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r207[a0]);
+              t1 = $signed(r206[a1]);
+              t2 = t0 + t1;
+              r207[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 211;
+      end
+      211: begin  // instr 150 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r196[a1]);
+              t1 = 0 - t0;
+              r208[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 480;
+        end
+        state <= 212;
+      end
+      212: begin  // instr 151 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r203[a1]);
+              r209[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 80;
+        end
+        state <= 213;
+      end
+      213: begin  // instr 152 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r208[a1]);
+              t1 = $signed(r209[a2]);
+              t2 = t0 - t1;
+              r210[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 480;
+          a2 = a2 - 80;
+        end
+        state <= 214;
+      end
+      214: begin  // instr 153 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r210[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r211[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 480;
+        end
+        state <= 215;
+      end
+      215: begin  // instr 154 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          r212[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 216;
+      end
+      216: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r212[a0]);
+              t1 = $signed(r211[a1]);
+              t2 = t0 + t1;
+              r212[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 217;
+      end
+      217: begin  // instr 155 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r207[a1]);
+            t1 = $signed(r212[a2]);
+            t2 = t0 + t1;
+            r213[a0] = t2[14:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 80;
+          a2 = a2 - 80;
+        end
+        state <= 218;
+      end
+      218: begin  // instr 156 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r213[a1]);
+            t1 = $signed(r197[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r214[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 80;
+        end
+        state <= 219;
+      end
+      219: begin  // instr 157 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = r214[a1];
+            t1 = $signed(r199[a2]);
+            t2 = $signed(r203[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r215[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 80;
+          a2 = a2 - 80;
+          a3 = a3 - 80;
+        end
+        state <= 220;
+      end
+      220: begin  // instr 158 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = r214[a1];
+            t1 = $signed(r203[a2]);
+            t2 = $signed(r200[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r216[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 80;
+          a2 = a2 - 80;
+          a3 = a3 - 80;
+        end
+        state <= 221;
+      end
+      221: begin  // loop3.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r201[a1]);
+          r198[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 222;
+      end
+      222: begin  // loop3.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r215[a1]);
+          r199[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 223;
+      end
+      223: begin  // loop3.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r216[a1]);
+          r200[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 224;
+      end
+      224: begin  // loop3.adv
+        k3 = k3 + 1;
+        state <= 202;
+      end
+      225: begin  // loop3.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r198[a1]);
+          r217[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 226;
+      end
+      226: begin  // loop3.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r199[a1]);
+          r218[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 227;
+      end
+      227: begin  // loop3.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r200[a1]);
+          r219[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 228;
+      end
+      228: begin  // instr 159 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r192[a1]);
+            t1 = $signed(r219[a2]);
+            t2 = t0 - t1;
+            r220[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 80;
+          a2 = a2 - 80;
+        end
+        state <= 229;
+      end
+      229: begin  // instr 160 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r220[a1]);
+            t1 = t0 >>> 1;
+            r221[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 80;
+        end
+        state <= 230;
+      end
+      230: begin  // instr 161 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom15_lit[a1]);
+        t1 = t0;
+        r224[a0] = t1[7:0];
+        state <= 231;
+      end
+      231: begin  // instr 162 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r224[a1]);
+            t1 = $signed(r221[a2]);
+            t2 = (t0 < t1) ? t1 : t0;
+            r225[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a2 = a2 - 80;
+        end
+        state <= 232;
+      end
+      232: begin  // instr 163 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom16_lit[a1]);
+        t1 = t0;
+        r226[a0] = t1[7:0];
+        state <= 233;
+      end
+      233: begin  // instr 164 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r226[a1]);
+            t1 = $signed(r225[a2]);
+            t2 = (t1 < t0) ? t1 : t0;
+            r227[a0] = t2[7:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a2 = a2 - 80;
+        end
+        state <= 234;
+      end
+      234: begin  // instr 165 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r17[a1]);
+          t1 = $signed(r133[a2]);
+          t2 = t0 - t1;
+          r228[a0] = t2[8:0];
+          a0 = a0 + 1;
+        end
+        state <= 235;
+      end
+      235: begin  // instr 166 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r228[a1]);
+          t1 = $signed(rom8_lit[a2]);
+          t2 = t0 + t1;
+          r229[a0] = t2[8:0];
+          a0 = a0 + 1;
+        end
+        state <= 236;
+      end
+      236: begin  // instr 167 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r229[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? t1 : t0;
+          r230[a0] = t2[8:0];
+          a0 = a0 + 1;
+        end
+        state <= 237;
+      end
+      237: begin  // instr 168 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r230[a1]);
+          t1 = t0 >>> 1;
+          r231[a0] = t1[7:0];
+          a0 = a0 + 1;
+        end
+        state <= 238;
+      end
+      238: begin  // instr 169 concat
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t0 = $signed(r1[a1]);
+            r232[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 80;
+        end
+        state <= 239;
+      end
+      239: begin  // concat
+        a0 = 15;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            t0 = $signed(r227[a1]);
+            r232[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 15;
+        end
+        state <= 240;
+      end
+      240: begin  // instr 170 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 95; c1 = c1 + 1) begin
+            t0 = $signed(r232[a1]);
+            t1 = t0 << 1;
+            r233[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 95;
+        end
+        state <= 241;
+      end
+      241: begin  // instr 171 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(rom0_c[a1]);
+            t1 = t0;
+            r234[a0] = t1[5:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 242;
+      end
+      242: begin  // instr 172 rev
+        a0 = 0;
+        a1 = 15;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r234[a1]);
+            r235[a0] = t0[5:0];
+            a0 = a0 + 1;
+            a1 = a1 - 1;
+          end
+          a1 = a1 + 32;
+        end
+        state <= 243;
+      end
+      243: begin  // instr 173 reshape
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r235[a1]);
+          r236[a0] = t0[5:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 244;
+      end
+      244: begin  // instr 174 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = a1;
+          r237[a0] = t0[7:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 245;
+      end
+      245: begin  // instr 175 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r237[a1]);
+            r238[a0] = t0[7:0];
+            a0 = a0 + 1;
+          end
+          a1 = a1 + 1;
+        end
+        state <= 246;
+      end
+      246: begin  // instr 176 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 16; c0 = c0 + 1) begin
+          t0 = a1;
+          r239[a0] = t0[4:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 247;
+      end
+      247: begin  // instr 177 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r239[a1]);
+            r240[a0] = t0[4:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 16;
+        end
+        state <= 248;
+      end
+      248: begin  // instr 178 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r238[a1]);
+            t1 = $signed(r240[a2]);
+            t2 = t0 + t1;
+            r241[a0] = t2[7:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 + 1;
+          a2 = a2 - 16;
+        end
+        state <= 249;
+      end
+      249: begin  // instr 179 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r241[a1]);
+            t1 = $signed(rom9_lit[a2]);
+            t2 = (t0 < t1) ? 1 : 0;
+            r242[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 250;
+      end
+      250: begin  // instr 180 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r241[a1]);
+            t1 = $signed(rom17_lit[a2]);
+            t2 = t0 + t1;
+            r244[a0] = t2[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 251;
+      end
+      251: begin  // instr 181 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = r242[a1];
+            t1 = $signed(r241[a2]);
+            t2 = $signed(r244[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r245[a0] = t3[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+        end
+        state <= 252;
+      end
+      252: begin  // instr 182 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r245[a1]);
+              r246[a0] = t0[7:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+        end
+        state <= 253;
+      end
+      253: begin  // instr 183 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 80; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 16; c2 = c2 + 1) begin
+              t9 = 0;
+              t0 = $signed(r246[a2]);
+              t1 = (t0 < 0) ? 0 : t0;
+              t1 = (t1 > 94) ? 94 : t1;
+              t2 = t1;
+              t9 = t9 + t2;
+              t3 = $signed(r233[a1 + t9]);
+              r247[a0] = t3[8:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a1 = a1 + 95;
+          a2 = a2 - 1280;
+        end
+        state <= 254;
+      end
+      254: begin  // instr 184 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r247[a1]);
+                r248[a0] = t0[8:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 1280;
+          end
+        end
+        state <= 255;
+      end
+      255: begin  // instr 185 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r236[a1]);
+                t1 = $signed(r248[a2]);
+                t2 = t0 + t1;
+                r249[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+                a2 = a2 + 1;
+              end
+              a1 = a1 - 16;
+            end
+            a2 = a2 - 1280;
+          end
+          a1 = a1 + 16;
+        end
+        state <= 256;
+      end
+      256: begin  // instr 186 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r250[a0] = t1[9:0];
+        state <= 257;
+      end
+      257: begin  // instr 187 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r250[a1]);
+                t1 = $signed(r249[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r251[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 1280;
+          end
+          a2 = a2 + 1280;
+        end
+        state <= 258;
+      end
+      258: begin  // instr 188 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r252[a0] = t1[9:0];
+        state <= 259;
+      end
+      259: begin  // instr 189 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r252[a1]);
+                t1 = $signed(r251[a2]);
+                t2 = (t1 < t0) ? t1 : t0;
+                r253[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 1280;
+          end
+          a2 = a2 + 1280;
+        end
+        state <= 260;
+      end
+      260: begin  // instr 190 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r236[a1]);
+                t1 = $signed(r248[a2]);
+                t2 = t0 - t1;
+                r254[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+                a2 = a2 + 1;
+              end
+              a1 = a1 - 16;
+            end
+            a2 = a2 - 1280;
+          end
+          a1 = a1 + 16;
+        end
+        state <= 261;
+      end
+      261: begin  // instr 191 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r255[a0] = t1[9:0];
+        state <= 262;
+      end
+      262: begin  // instr 192 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r255[a1]);
+                t1 = $signed(r254[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r256[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 1280;
+          end
+          a2 = a2 + 1280;
+        end
+        state <= 263;
+      end
+      263: begin  // instr 193 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r257[a0] = t1[9:0];
+        state <= 264;
+      end
+      264: begin  // instr 194 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r257[a1]);
+                t1 = $signed(r256[a2]);
+                t2 = (t1 < t0) ? t1 : t0;
+                r258[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 1280;
+          end
+          a2 = a2 + 1280;
+        end
+        state <= 265;
+      end
+      265: begin  // instr 195 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r253[a1]);
+                t1 = (t0 < 0) ? (0 - t0) : t0;
+                r259[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 1280;
+          end
+          a1 = a1 + 1280;
+        end
+        state <= 266;
+      end
+      266: begin  // instr 196 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          r260[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 267;
+      end
+      267: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r260[a0]);
+                t1 = $signed(r259[a1]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r260[a0] = t2[9:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 268;
+      end
+      268: begin  // instr 197 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r260[a1]);
+              t1 = $signed(rom13_lit[a2]);
+              t2 = t0 - t1;
+              r261[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 269;
+      end
+      269: begin  // instr 198 loop
+        k4 = 0;
+        state <= 270;
+      end
+      270: begin  // loop4.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 6400; c0 = c0 + 1) begin
+          t0 = $signed(r253[a1]);
+          r262[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 271;
+      end
+      271: begin  // loop4.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r263[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 272;
+      end
+      272: begin  // loop4.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r264[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 273;
+      end
+      273: begin  // loop4.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r261[a1]);
+          r265[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 274;
+      end
+      274: begin  // loop4.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r260[a1]);
+          r266[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 275;
+      end
+      275: begin  // loop4.head
+        if (k4 == 12) state <= 298;
+        else state <= 276;
+      end
+      276: begin  // instr 199 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r264[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r267[a0] = t2[4:0];
+        state <= 277;
+      end
+      277: begin  // instr 200 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r265[a1]);
+              t1 = $signed(r266[a2]);
+              t2 = t0 + t1;
+              r268[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 80;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 80;
+        end
+        state <= 278;
+      end
+      278: begin  // instr 201 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r268[a1]);
+              t1 = t0 >>> 1;
+              r269[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 279;
+      end
+      279: begin  // instr 202 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r269[a1]);
+                r270[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 280;
+      end
+      280: begin  // instr 203 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r262[a1]);
+                t1 = $signed(r270[a2]);
+                t2 = t0 - t1;
+                r271[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 1280;
+            a2 = a2 - 80;
+          end
+          a1 = a1 + 1280;
+          a2 = a2 + 80;
+        end
+        state <= 281;
+      end
+      281: begin  // instr 204 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r271[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r272[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 1280;
+          end
+          a1 = a1 + 1280;
+        end
+        state <= 282;
+      end
+      282: begin  // instr 205 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          r273[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 283;
+      end
+      283: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r273[a0]);
+                t1 = $signed(r272[a1]);
+                t2 = t0 + t1;
+                r273[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 284;
+      end
+      284: begin  // instr 206 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r262[a1]);
+                t1 = 0 - t0;
+                r274[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 1280;
+          end
+          a1 = a1 + 1280;
+        end
+        state <= 285;
+      end
+      285: begin  // instr 207 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r269[a1]);
+                r275[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 286;
+      end
+      286: begin  // instr 208 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r274[a1]);
+                t1 = $signed(r275[a2]);
+                t2 = t0 - t1;
+                r276[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 1280;
+            a2 = a2 - 80;
+          end
+          a1 = a1 + 1280;
+          a2 = a2 + 80;
+        end
+        state <= 287;
+      end
+      287: begin  // instr 209 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r276[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r277[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 1280;
+          end
+          a1 = a1 + 1280;
+        end
+        state <= 288;
+      end
+      288: begin  // instr 210 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          r278[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 289;
+      end
+      289: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r278[a0]);
+                t1 = $signed(r277[a1]);
+                t2 = t0 + t1;
+                r278[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 290;
+      end
+      290: begin  // instr 211 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r273[a1]);
+              t1 = $signed(r278[a2]);
+              t2 = t0 + t1;
+              r279[a0] = t2[15:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 80;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 80;
+        end
+        state <= 291;
+      end
+      291: begin  // instr 212 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r279[a1]);
+              t1 = $signed(r263[a2]);
+              t2 = (t0 > t1) ? 1 : 0;
+              r280[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 292;
+      end
+      292: begin  // instr 213 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = r280[a1];
+              t1 = $signed(r265[a2]);
+              t2 = $signed(r269[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r281[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 80;
+            a3 = a3 - 80;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 80;
+          a3 = a3 + 80;
+        end
+        state <= 293;
+      end
+      293: begin  // instr 214 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = r280[a1];
+              t1 = $signed(r269[a2]);
+              t2 = $signed(r266[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r282[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 80;
+            a3 = a3 - 80;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 80;
+          a3 = a3 + 80;
+        end
+        state <= 294;
+      end
+      294: begin  // loop4.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r267[a1]);
+          r264[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 295;
+      end
+      295: begin  // loop4.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r281[a1]);
+          r265[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 296;
+      end
+      296: begin  // loop4.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r282[a1]);
+          r266[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 297;
+      end
+      297: begin  // loop4.adv
+        k4 = k4 + 1;
+        state <= 275;
+      end
+      298: begin  // loop4.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r264[a1]);
+          r283[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 299;
+      end
+      299: begin  // loop4.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r265[a1]);
+          r284[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 300;
+      end
+      300: begin  // loop4.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r266[a1]);
+          r285[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 301;
+      end
+      301: begin  // instr 215 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r258[a1]);
+                t1 = (t0 < 0) ? (0 - t0) : t0;
+                r286[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 1280;
+          end
+          a1 = a1 + 1280;
+        end
+        state <= 302;
+      end
+      302: begin  // instr 216 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          r287[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 303;
+      end
+      303: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r287[a0]);
+                t1 = $signed(r286[a1]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r287[a0] = t2[9:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 304;
+      end
+      304: begin  // instr 217 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r287[a1]);
+              t1 = $signed(rom13_lit[a2]);
+              t2 = t0 - t1;
+              r288[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 305;
+      end
+      305: begin  // instr 218 loop
+        k5 = 0;
+        state <= 306;
+      end
+      306: begin  // loop5.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 6400; c0 = c0 + 1) begin
+          t0 = $signed(r258[a1]);
+          r289[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 307;
+      end
+      307: begin  // loop5.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r290[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 308;
+      end
+      308: begin  // loop5.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r291[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 309;
+      end
+      309: begin  // loop5.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r288[a1]);
+          r292[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 310;
+      end
+      310: begin  // loop5.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r287[a1]);
+          r293[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 311;
+      end
+      311: begin  // loop5.head
+        if (k5 == 12) state <= 334;
+        else state <= 312;
+      end
+      312: begin  // instr 219 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r291[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r294[a0] = t2[4:0];
+        state <= 313;
+      end
+      313: begin  // instr 220 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r292[a1]);
+              t1 = $signed(r293[a2]);
+              t2 = t0 + t1;
+              r295[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 80;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 80;
+        end
+        state <= 314;
+      end
+      314: begin  // instr 221 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r295[a1]);
+              t1 = t0 >>> 1;
+              r296[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 315;
+      end
+      315: begin  // instr 222 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r296[a1]);
+                r297[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 316;
+      end
+      316: begin  // instr 223 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r289[a1]);
+                t1 = $signed(r297[a2]);
+                t2 = t0 - t1;
+                r298[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 1280;
+            a2 = a2 - 80;
+          end
+          a1 = a1 + 1280;
+          a2 = a2 + 80;
+        end
+        state <= 317;
+      end
+      317: begin  // instr 224 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r298[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r299[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 1280;
+          end
+          a1 = a1 + 1280;
+        end
+        state <= 318;
+      end
+      318: begin  // instr 225 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          r300[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 319;
+      end
+      319: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r300[a0]);
+                t1 = $signed(r299[a1]);
+                t2 = t0 + t1;
+                r300[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 320;
+      end
+      320: begin  // instr 226 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r289[a1]);
+                t1 = 0 - t0;
+                r301[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 1280;
+          end
+          a1 = a1 + 1280;
+        end
+        state <= 321;
+      end
+      321: begin  // instr 227 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r296[a1]);
+                r302[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 322;
+      end
+      322: begin  // instr 228 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r301[a1]);
+                t1 = $signed(r302[a2]);
+                t2 = t0 - t1;
+                r303[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 1280;
+            a2 = a2 - 80;
+          end
+          a1 = a1 + 1280;
+          a2 = a2 + 80;
+        end
+        state <= 323;
+      end
+      323: begin  // instr 229 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r303[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r304[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 1280;
+          end
+          a1 = a1 + 1280;
+        end
+        state <= 324;
+      end
+      324: begin  // instr 230 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          r305[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 325;
+      end
+      325: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r305[a0]);
+                t1 = $signed(r304[a1]);
+                t2 = t0 + t1;
+                r305[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 326;
+      end
+      326: begin  // instr 231 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r300[a1]);
+              t1 = $signed(r305[a2]);
+              t2 = t0 + t1;
+              r306[a0] = t2[15:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 80;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 80;
+        end
+        state <= 327;
+      end
+      327: begin  // instr 232 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r306[a1]);
+              t1 = $signed(r290[a2]);
+              t2 = (t0 > t1) ? 1 : 0;
+              r307[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 328;
+      end
+      328: begin  // instr 233 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = r307[a1];
+              t1 = $signed(r292[a2]);
+              t2 = $signed(r296[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r308[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 80;
+            a3 = a3 - 80;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 80;
+          a3 = a3 + 80;
+        end
+        state <= 329;
+      end
+      329: begin  // instr 234 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = r307[a1];
+              t1 = $signed(r296[a2]);
+              t2 = $signed(r293[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r309[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 80;
+            a3 = a3 - 80;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 80;
+          a3 = a3 + 80;
+        end
+        state <= 330;
+      end
+      330: begin  // loop5.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r294[a1]);
+          r291[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 331;
+      end
+      331: begin  // loop5.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r308[a1]);
+          r292[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 332;
+      end
+      332: begin  // loop5.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r309[a1]);
+          r293[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 333;
+      end
+      333: begin  // loop5.adv
+        k5 = k5 + 1;
+        state <= 311;
+      end
+      334: begin  // loop5.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r291[a1]);
+          r310[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 335;
+      end
+      335: begin  // loop5.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r292[a1]);
+          r311[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 336;
+      end
+      336: begin  // loop5.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r293[a1]);
+          r312[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 337;
+      end
+      337: begin  // instr 235 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r285[a1]);
+              t1 = $signed(r312[a2]);
+              t2 = t0 - t1;
+              r313[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 80;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 80;
+        end
+        state <= 338;
+      end
+      338: begin  // instr 236 transpose
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r313[a1]);
+              r314[a0] = t0[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 320;
+        end
+        state <= 339;
+      end
+      339: begin  // instr 237 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r231[a1]);
+            r315[a0] = t0[7:0];
+            a0 = a0 + 1;
+          end
+        end
+        state <= 340;
+      end
+      340: begin  // instr 238 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r314[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r316[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 400;
+        end
+        state <= 341;
+      end
+      341: begin  // instr 239 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = a1;
+              r317[a0] = t0[7:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 80;
+          end
+        end
+        state <= 342;
+      end
+      342: begin  // instr 240 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r315[a1]);
+              r318[a0] = t0[7:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 343;
+      end
+      343: begin  // instr 241 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r317[a1]);
+              t1 = $signed(r318[a2]);
+              t2 = (t0 < t1) ? 1 : 0;
+              r319[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 400;
+        end
+        state <= 344;
+      end
+      344: begin  // instr 242 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom9_lit[a1]);
+        t1 = t0;
+        r320[a0] = t1[0:0];
+        state <= 345;
+      end
+      345: begin  // instr 243 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r320[a1]);
+              r321[a0] = t0[0:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 346;
+      end
+      346: begin  // instr 244 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = r319[a1];
+              t1 = $signed(r321[a2]);
+              t2 = $signed(r316[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r322[a0] = t3[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+          end
+          a1 = a1 - 400;
+          a2 = a2 - 400;
+          a3 = a3 - 400;
+        end
+        state <= 347;
+      end
+      347: begin  // instr 245 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          r323[a0] = t0[16:0];
+          a0 = a0 + 1;
+        end
+        state <= 348;
+      end
+      348: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 80; c2 = c2 + 1) begin
+              t0 = $signed(r323[a0]);
+              t1 = $signed(r322[a1]);
+              t2 = t0 + t1;
+              r323[a0] = t2[16:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 349;
+      end
+      349: begin  // instr 246 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r323[a1]);
+            t1 = t0 << 1;
+            r324[a0] = t1[17:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 350;
+      end
+      350: begin  // instr 247 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r231[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? 1 : 0;
+          r325[a0] = (t2 != 0);
+          a0 = a0 + 1;
+        end
+        state <= 351;
+      end
+      351: begin  // instr 248 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r231[a1]);
+          t1 = $signed(rom17_lit[a2]);
+          t2 = t0 + t1;
+          r326[a0] = t2[8:0];
+          a0 = a0 + 1;
+        end
+        state <= 352;
+      end
+      352: begin  // instr 249 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = r325[a1];
+          t1 = $signed(r231[a2]);
+          t2 = $signed(r326[a3]);
+          t3 = (t0 != 0) ? t2 : t1;
+          r327[a0] = t3[7:0];
+          a0 = a0 + 1;
+        end
+        state <= 353;
+      end
+      353: begin  // instr 250 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r327[a1]);
+            r328[a0] = t0[7:0];
+            a0 = a0 + 1;
+          end
+        end
+        state <= 354;
+      end
+      354: begin  // instr 251 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t9 = 0;
+            t0 = $signed(r328[a2]);
+            t1 = (t0 < 0) ? 0 : t0;
+            t1 = (t1 > 80) ? 80 : t1;
+            t2 = t1;
+            t9 = t9 + t2;
+            t3 = $signed(r232[a1 + t9]);
+            r329[a0] = t3[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 1;
+        end
+        state <= 355;
+      end
+      355: begin  // instr 252 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r7[a1]);
+          t1 = $signed(r231[a2]);
+          t2 = t0 + t1;
+          r330[a0] = t2;
+          a0 = a0 + 1;
+        end
+        state <= 356;
+      end
+      356: begin  // instr 253 and
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r7[a1]);
+          t1 = $signed(rom8_lit[a2]);
+          t2 = t0 & t1;
+          r331[a0] = t2[1:0];
+          a0 = a0 + 1;
+        end
+        state <= 357;
+      end
+      357: begin  // instr 254 slice
+        a0 = 0;
+        a1 = 10;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 85; c1 = c1 + 1) begin
+            t0 = $signed(r232[a1]);
+            r332[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 358;
+      end
+      358: begin  // instr 255 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 85; c1 = c1 + 1) begin
+            t0 = $signed(r332[a1]);
+            t1 = t0 << 1;
+            r333[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 85;
+        end
+        state <= 359;
+      end
+      359: begin  // instr 256 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom9_lit[a1]);
+        t1 = t0;
+        r334[a0] = t1[0:0];
+        state <= 360;
+      end
+      360: begin  // instr 257 pad
+        t0 = $signed(r334[0]);
+        a0 = 0;
+        for (c0 = 0; c0 < 86; c0 = c0 + 1) begin
+          r335[a0] = t0[8:0];
+          a0 = a0 + 1;
+        end
+        state <= 361;
+      end
+      361: begin  // pad.scatter
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 85; c1 = c1 + 1) begin
+            t1 = $signed(r333[a1]);
+            r335[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 1;
+        end
+        state <= 362;
+      end
+      362: begin  // instr 258 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = a1;
+          r336[a0] = t0[6:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 363;
+      end
+      363: begin  // instr 259 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r336[a1]);
+          t1 = t0 << 1;
+          r337[a0] = t1[7:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 364;
+      end
+      364: begin  // instr 260 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r337[a1]);
+            r338[a0] = t0[7:0];
+            a0 = a0 + 1;
+          end
+          a1 = a1 + 1;
+        end
+        state <= 365;
+      end
+      365: begin  // instr 261 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 6; c0 = c0 + 1) begin
+          t0 = a1;
+          r339[a0] = t0[3:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 366;
+      end
+      366: begin  // instr 262 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 6; c1 = c1 + 1) begin
+            t0 = $signed(r339[a1]);
+            r340[a0] = t0[3:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 6;
+        end
+        state <= 367;
+      end
+      367: begin  // instr 263 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 6; c1 = c1 + 1) begin
+            t0 = $signed(r338[a1]);
+            t1 = $signed(r340[a2]);
+            t2 = t0 + t1;
+            r341[a0] = t2[7:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 + 1;
+          a2 = a2 - 6;
+        end
+        state <= 368;
+      end
+      368: begin  // instr 264 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r341[a1]);
+              r342[a0] = t0[7:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 240;
+        end
+        state <= 369;
+      end
+      369: begin  // instr 265 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r331[a1]);
+              r343[a0] = t0[1:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 370;
+      end
+      370: begin  // instr 266 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r343[a1]);
+              t1 = $signed(r342[a2]);
+              t2 = t0 + t1;
+              r344[a0] = t2[7:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 240;
+        end
+        state <= 371;
+      end
+      371: begin  // instr 267 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r344[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? 1 : 0;
+              r345[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 240;
+        end
+        state <= 372;
+      end
+      372: begin  // instr 268 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r344[a1]);
+              t1 = $signed(rom18_lit[a2]);
+              t2 = t0 + t1;
+              r347[a0] = t2[8:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 240;
+        end
+        state <= 373;
+      end
+      373: begin  // instr 269 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = r345[a1];
+              t1 = $signed(r344[a2]);
+              t2 = $signed(r347[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r348[a0] = t3[7:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+          end
+          a1 = a1 - 240;
+          a2 = a2 - 240;
+          a3 = a3 - 240;
+        end
+        state <= 374;
+      end
+      374: begin  // instr 270 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r348[a1]);
+                r349[a0] = t0[7:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 240;
+        end
+        state <= 375;
+      end
+      375: begin  // instr 271 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t9 = 0;
+              t0 = $signed(r349[a2]);
+              t1 = (t0 < 0) ? 0 : t0;
+              t1 = (t1 > 85) ? 85 : t1;
+              t2 = t1;
+              t9 = t9 + t2;
+              t3 = $signed(r335[a1 + t9]);
+              r350[a0] = t3[8:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a1 = a1 + 86;
+        end
+        state <= 376;
+      end
+      376: begin  // instr 272 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 6; c0 = c0 + 1) begin
+          t0 = $signed(rom1_c[a1]);
+          t1 = t0;
+          r351[a0] = t1[6:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 377;
+      end
+      377: begin  // instr 273 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r351[a1]);
+              r352[a0] = t0[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 6;
+          end
+        end
+        state <= 378;
+      end
+      378: begin  // instr 274 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r352[a1]);
+              t1 = $signed(r350[a2]);
+              t2 = t0 + t1;
+              r353[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 6;
+          end
+          a2 = a2 - 240;
+        end
+        state <= 379;
+      end
+      379: begin  // instr 275 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r354[a0] = t1[9:0];
+        state <= 380;
+      end
+      380: begin  // instr 276 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r354[a1]);
+              t1 = $signed(r353[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r355[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 240;
+        end
+        state <= 381;
+      end
+      381: begin  // instr 277 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r356[a0] = t1[9:0];
+        state <= 382;
+      end
+      382: begin  // instr 278 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r356[a1]);
+              t1 = $signed(r355[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r357[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 240;
+        end
+        state <= 383;
+      end
+      383: begin  // instr 279 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r351[a1]);
+              r358[a0] = t0[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 6;
+          end
+        end
+        state <= 384;
+      end
+      384: begin  // instr 280 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r358[a1]);
+              t1 = $signed(r350[a2]);
+              t2 = t0 - t1;
+              r359[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 6;
+          end
+          a2 = a2 - 240;
+        end
+        state <= 385;
+      end
+      385: begin  // instr 281 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r360[a0] = t1[9:0];
+        state <= 386;
+      end
+      386: begin  // instr 282 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r360[a1]);
+              t1 = $signed(r359[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r361[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 240;
+        end
+        state <= 387;
+      end
+      387: begin  // instr 283 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r362[a0] = t1[9:0];
+        state <= 388;
+      end
+      388: begin  // instr 284 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r362[a1]);
+              t1 = $signed(r361[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r363[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 240;
+        end
+        state <= 389;
+      end
+      389: begin  // instr 285 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r357[a1]);
+              t1 = (t0 < 0) ? (0 - t0) : t0;
+              r364[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 240;
+        end
+        state <= 390;
+      end
+      390: begin  // instr 286 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          r365[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 391;
+      end
+      391: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r365[a0]);
+              t1 = $signed(r364[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r365[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 392;
+      end
+      392: begin  // instr 287 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r365[a1]);
+            t1 = $signed(rom13_lit[a2]);
+            t2 = t0 - t1;
+            r366[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 40;
+        end
+        state <= 393;
+      end
+      393: begin  // instr 288 loop
+        k6 = 0;
+        state <= 394;
+      end
+      394: begin  // loop6.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 240; c0 = c0 + 1) begin
+          t0 = $signed(r357[a1]);
+          r367[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 395;
+      end
+      395: begin  // loop6.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r368[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 396;
+      end
+      396: begin  // loop6.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r369[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 397;
+      end
+      397: begin  // loop6.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r366[a1]);
+          r370[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 398;
+      end
+      398: begin  // loop6.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r365[a1]);
+          r371[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 399;
+      end
+      399: begin  // loop6.head
+        if (k6 == 12) state <= 422;
+        else state <= 400;
+      end
+      400: begin  // instr 289 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r369[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r372[a0] = t2[4:0];
+        state <= 401;
+      end
+      401: begin  // instr 290 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r370[a1]);
+            t1 = $signed(r371[a2]);
+            t2 = t0 + t1;
+            r373[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 40;
+          a2 = a2 - 40;
+        end
+        state <= 402;
+      end
+      402: begin  // instr 291 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r373[a1]);
+            t1 = t0 >>> 1;
+            r374[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 40;
+        end
+        state <= 403;
+      end
+      403: begin  // instr 292 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r374[a1]);
+              r375[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 40;
+        end
+        state <= 404;
+      end
+      404: begin  // instr 293 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r367[a1]);
+              t1 = $signed(r375[a2]);
+              t2 = t0 - t1;
+              r376[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 240;
+          a2 = a2 - 40;
+        end
+        state <= 405;
+      end
+      405: begin  // instr 294 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r376[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r377[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 240;
+        end
+        state <= 406;
+      end
+      406: begin  // instr 295 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          r378[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 407;
+      end
+      407: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r378[a0]);
+              t1 = $signed(r377[a1]);
+              t2 = t0 + t1;
+              r378[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 408;
+      end
+      408: begin  // instr 296 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r367[a1]);
+              t1 = 0 - t0;
+              r379[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 240;
+        end
+        state <= 409;
+      end
+      409: begin  // instr 297 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r374[a1]);
+              r380[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 40;
+        end
+        state <= 410;
+      end
+      410: begin  // instr 298 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r379[a1]);
+              t1 = $signed(r380[a2]);
+              t2 = t0 - t1;
+              r381[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 240;
+          a2 = a2 - 40;
+        end
+        state <= 411;
+      end
+      411: begin  // instr 299 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r381[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r382[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 240;
+        end
+        state <= 412;
+      end
+      412: begin  // instr 300 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          r383[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 413;
+      end
+      413: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r383[a0]);
+              t1 = $signed(r382[a1]);
+              t2 = t0 + t1;
+              r383[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 414;
+      end
+      414: begin  // instr 301 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r378[a1]);
+            t1 = $signed(r383[a2]);
+            t2 = t0 + t1;
+            r384[a0] = t2[14:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 40;
+          a2 = a2 - 40;
+        end
+        state <= 415;
+      end
+      415: begin  // instr 302 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r384[a1]);
+            t1 = $signed(r368[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r385[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 40;
+        end
+        state <= 416;
+      end
+      416: begin  // instr 303 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = r385[a1];
+            t1 = $signed(r370[a2]);
+            t2 = $signed(r374[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r386[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 40;
+          a2 = a2 - 40;
+          a3 = a3 - 40;
+        end
+        state <= 417;
+      end
+      417: begin  // instr 304 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = r385[a1];
+            t1 = $signed(r374[a2]);
+            t2 = $signed(r371[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r387[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 40;
+          a2 = a2 - 40;
+          a3 = a3 - 40;
+        end
+        state <= 418;
+      end
+      418: begin  // loop6.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r372[a1]);
+          r369[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 419;
+      end
+      419: begin  // loop6.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r386[a1]);
+          r370[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 420;
+      end
+      420: begin  // loop6.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r387[a1]);
+          r371[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 421;
+      end
+      421: begin  // loop6.adv
+        k6 = k6 + 1;
+        state <= 399;
+      end
+      422: begin  // loop6.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r369[a1]);
+          r388[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 423;
+      end
+      423: begin  // loop6.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r370[a1]);
+          r389[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 424;
+      end
+      424: begin  // loop6.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r371[a1]);
+          r390[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 425;
+      end
+      425: begin  // instr 305 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r363[a1]);
+              t1 = (t0 < 0) ? (0 - t0) : t0;
+              r391[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 240;
+        end
+        state <= 426;
+      end
+      426: begin  // instr 306 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          r392[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 427;
+      end
+      427: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r392[a0]);
+              t1 = $signed(r391[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r392[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 428;
+      end
+      428: begin  // instr 307 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r392[a1]);
+            t1 = $signed(rom13_lit[a2]);
+            t2 = t0 - t1;
+            r393[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 40;
+        end
+        state <= 429;
+      end
+      429: begin  // instr 308 loop
+        k7 = 0;
+        state <= 430;
+      end
+      430: begin  // loop7.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 240; c0 = c0 + 1) begin
+          t0 = $signed(r363[a1]);
+          r394[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 431;
+      end
+      431: begin  // loop7.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r395[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 432;
+      end
+      432: begin  // loop7.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r396[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 433;
+      end
+      433: begin  // loop7.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r393[a1]);
+          r397[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 434;
+      end
+      434: begin  // loop7.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r392[a1]);
+          r398[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 435;
+      end
+      435: begin  // loop7.head
+        if (k7 == 12) state <= 458;
+        else state <= 436;
+      end
+      436: begin  // instr 309 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r396[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r399[a0] = t2[4:0];
+        state <= 437;
+      end
+      437: begin  // instr 310 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r397[a1]);
+            t1 = $signed(r398[a2]);
+            t2 = t0 + t1;
+            r400[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 40;
+          a2 = a2 - 40;
+        end
+        state <= 438;
+      end
+      438: begin  // instr 311 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r400[a1]);
+            t1 = t0 >>> 1;
+            r401[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 40;
+        end
+        state <= 439;
+      end
+      439: begin  // instr 312 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r401[a1]);
+              r402[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 40;
+        end
+        state <= 440;
+      end
+      440: begin  // instr 313 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r394[a1]);
+              t1 = $signed(r402[a2]);
+              t2 = t0 - t1;
+              r403[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 240;
+          a2 = a2 - 40;
+        end
+        state <= 441;
+      end
+      441: begin  // instr 314 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r403[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r404[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 240;
+        end
+        state <= 442;
+      end
+      442: begin  // instr 315 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          r405[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 443;
+      end
+      443: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r405[a0]);
+              t1 = $signed(r404[a1]);
+              t2 = t0 + t1;
+              r405[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 444;
+      end
+      444: begin  // instr 316 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r394[a1]);
+              t1 = 0 - t0;
+              r406[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 240;
+        end
+        state <= 445;
+      end
+      445: begin  // instr 317 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r401[a1]);
+              r407[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 40;
+        end
+        state <= 446;
+      end
+      446: begin  // instr 318 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r406[a1]);
+              t1 = $signed(r407[a2]);
+              t2 = t0 - t1;
+              r408[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 240;
+          a2 = a2 - 40;
+        end
+        state <= 447;
+      end
+      447: begin  // instr 319 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r408[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r409[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 240;
+        end
+        state <= 448;
+      end
+      448: begin  // instr 320 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          r410[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 449;
+      end
+      449: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r410[a0]);
+              t1 = $signed(r409[a1]);
+              t2 = t0 + t1;
+              r410[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 450;
+      end
+      450: begin  // instr 321 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r405[a1]);
+            t1 = $signed(r410[a2]);
+            t2 = t0 + t1;
+            r411[a0] = t2[14:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 40;
+          a2 = a2 - 40;
+        end
+        state <= 451;
+      end
+      451: begin  // instr 322 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r411[a1]);
+            t1 = $signed(r395[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r412[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 40;
+        end
+        state <= 452;
+      end
+      452: begin  // instr 323 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = r412[a1];
+            t1 = $signed(r397[a2]);
+            t2 = $signed(r401[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r413[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 40;
+          a2 = a2 - 40;
+          a3 = a3 - 40;
+        end
+        state <= 453;
+      end
+      453: begin  // instr 324 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = r412[a1];
+            t1 = $signed(r401[a2]);
+            t2 = $signed(r398[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r414[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 40;
+          a2 = a2 - 40;
+          a3 = a3 - 40;
+        end
+        state <= 454;
+      end
+      454: begin  // loop7.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r399[a1]);
+          r396[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 455;
+      end
+      455: begin  // loop7.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r413[a1]);
+          r397[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 456;
+      end
+      456: begin  // loop7.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r414[a1]);
+          r398[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 457;
+      end
+      457: begin  // loop7.adv
+        k7 = k7 + 1;
+        state <= 435;
+      end
+      458: begin  // loop7.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r396[a1]);
+          r415[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 459;
+      end
+      459: begin  // loop7.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r397[a1]);
+          r416[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 460;
+      end
+      460: begin  // loop7.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = $signed(r398[a1]);
+          r417[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 461;
+      end
+      461: begin  // instr 325 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r390[a1]);
+            t1 = $signed(r417[a2]);
+            t2 = t0 - t1;
+            r418[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 40;
+          a2 = a2 - 40;
+        end
+        state <= 462;
+      end
+      462: begin  // instr 326 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r418[a1]);
+            t1 = t0 >>> 1;
+            r419[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 40;
+        end
+        state <= 463;
+      end
+      463: begin  // instr 327 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom15_lit[a1]);
+        t1 = t0;
+        r420[a0] = t1[7:0];
+        state <= 464;
+      end
+      464: begin  // instr 328 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r420[a1]);
+            t1 = $signed(r419[a2]);
+            t2 = (t0 < t1) ? t1 : t0;
+            r421[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a2 = a2 - 40;
+        end
+        state <= 465;
+      end
+      465: begin  // instr 329 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom16_lit[a1]);
+        t1 = t0;
+        r422[a0] = t1[7:0];
+        state <= 466;
+      end
+      466: begin  // instr 330 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r422[a1]);
+            t1 = $signed(r421[a2]);
+            t2 = (t1 < t0) ? t1 : t0;
+            r423[a0] = t2[7:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a2 = a2 - 40;
+        end
+        state <= 467;
+      end
+      467: begin  // instr 331 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r231[a1]);
+          t1 = $signed(r331[a2]);
+          t2 = t0 - t1;
+          r424[a0] = t2[7:0];
+          a0 = a0 + 1;
+        end
+        state <= 468;
+      end
+      468: begin  // instr 332 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r424[a1]);
+          t1 = $signed(rom8_lit[a2]);
+          t2 = t0 + t1;
+          r425[a0] = t2[7:0];
+          a0 = a0 + 1;
+        end
+        state <= 469;
+      end
+      469: begin  // instr 333 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r425[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? t1 : t0;
+          r426[a0] = t2[7:0];
+          a0 = a0 + 1;
+        end
+        state <= 470;
+      end
+      470: begin  // instr 334 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r426[a1]);
+          t1 = t0 >>> 1;
+          r427[a0] = t1[6:0];
+          a0 = a0 + 1;
+        end
+        state <= 471;
+      end
+      471: begin  // instr 335 concat
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t0 = $signed(r2[a1]);
+            r428[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 40;
+        end
+        state <= 472;
+      end
+      472: begin  // concat
+        a0 = 15;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            t0 = $signed(r423[a1]);
+            r428[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 15;
+        end
+        state <= 473;
+      end
+      473: begin  // instr 336 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 55; c1 = c1 + 1) begin
+            t0 = $signed(r428[a1]);
+            t1 = t0 << 1;
+            r429[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 55;
+        end
+        state <= 474;
+      end
+      474: begin  // instr 337 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(rom0_c[a1]);
+            t1 = t0;
+            r430[a0] = t1[5:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 475;
+      end
+      475: begin  // instr 338 rev
+        a0 = 0;
+        a1 = 15;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r430[a1]);
+            r431[a0] = t0[5:0];
+            a0 = a0 + 1;
+            a1 = a1 - 1;
+          end
+          a1 = a1 + 32;
+        end
+        state <= 476;
+      end
+      476: begin  // instr 339 reshape
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r431[a1]);
+          r432[a0] = t0[5:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 477;
+      end
+      477: begin  // instr 340 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          t0 = a1;
+          r433[a0] = t0[6:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 478;
+      end
+      478: begin  // instr 341 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r433[a1]);
+            r434[a0] = t0[6:0];
+            a0 = a0 + 1;
+          end
+          a1 = a1 + 1;
+        end
+        state <= 479;
+      end
+      479: begin  // instr 342 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 16; c0 = c0 + 1) begin
+          t0 = a1;
+          r435[a0] = t0[4:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 480;
+      end
+      480: begin  // instr 343 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r435[a1]);
+            r436[a0] = t0[4:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 16;
+        end
+        state <= 481;
+      end
+      481: begin  // instr 344 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r434[a1]);
+            t1 = $signed(r436[a2]);
+            t2 = t0 + t1;
+            r437[a0] = t2[6:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 + 1;
+          a2 = a2 - 16;
+        end
+        state <= 482;
+      end
+      482: begin  // instr 345 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r437[a1]);
+            t1 = $signed(rom9_lit[a2]);
+            t2 = (t0 < t1) ? 1 : 0;
+            r438[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 483;
+      end
+      483: begin  // instr 346 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r437[a1]);
+            t1 = $signed(rom19_lit[a2]);
+            t2 = t0 + t1;
+            r440[a0] = t2[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 484;
+      end
+      484: begin  // instr 347 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = r438[a1];
+            t1 = $signed(r437[a2]);
+            t2 = $signed(r440[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r441[a0] = t3[6:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+        end
+        state <= 485;
+      end
+      485: begin  // instr 348 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 40; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r441[a1]);
+              r442[a0] = t0[6:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+        end
+        state <= 486;
+      end
+      486: begin  // instr 349 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 40; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 16; c2 = c2 + 1) begin
+              t9 = 0;
+              t0 = $signed(r442[a2]);
+              t1 = (t0 < 0) ? 0 : t0;
+              t1 = (t1 > 54) ? 54 : t1;
+              t2 = t1;
+              t9 = t9 + t2;
+              t3 = $signed(r429[a1 + t9]);
+              r443[a0] = t3[8:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a1 = a1 + 55;
+          a2 = a2 - 640;
+        end
+        state <= 487;
+      end
+      487: begin  // instr 350 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r443[a1]);
+                r444[a0] = t0[8:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 640;
+          end
+        end
+        state <= 488;
+      end
+      488: begin  // instr 351 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r432[a1]);
+                t1 = $signed(r444[a2]);
+                t2 = t0 + t1;
+                r445[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+                a2 = a2 + 1;
+              end
+              a1 = a1 - 16;
+            end
+            a2 = a2 - 640;
+          end
+          a1 = a1 + 16;
+        end
+        state <= 489;
+      end
+      489: begin  // instr 352 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r446[a0] = t1[9:0];
+        state <= 490;
+      end
+      490: begin  // instr 353 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r446[a1]);
+                t1 = $signed(r445[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r447[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 640;
+          end
+          a2 = a2 + 640;
+        end
+        state <= 491;
+      end
+      491: begin  // instr 354 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r448[a0] = t1[9:0];
+        state <= 492;
+      end
+      492: begin  // instr 355 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r448[a1]);
+                t1 = $signed(r447[a2]);
+                t2 = (t1 < t0) ? t1 : t0;
+                r449[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 640;
+          end
+          a2 = a2 + 640;
+        end
+        state <= 493;
+      end
+      493: begin  // instr 356 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r432[a1]);
+                t1 = $signed(r444[a2]);
+                t2 = t0 - t1;
+                r450[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+                a2 = a2 + 1;
+              end
+              a1 = a1 - 16;
+            end
+            a2 = a2 - 640;
+          end
+          a1 = a1 + 16;
+        end
+        state <= 494;
+      end
+      494: begin  // instr 357 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r451[a0] = t1[9:0];
+        state <= 495;
+      end
+      495: begin  // instr 358 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r451[a1]);
+                t1 = $signed(r450[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r452[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 640;
+          end
+          a2 = a2 + 640;
+        end
+        state <= 496;
+      end
+      496: begin  // instr 359 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r453[a0] = t1[9:0];
+        state <= 497;
+      end
+      497: begin  // instr 360 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r453[a1]);
+                t1 = $signed(r452[a2]);
+                t2 = (t1 < t0) ? t1 : t0;
+                r454[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 640;
+          end
+          a2 = a2 + 640;
+        end
+        state <= 498;
+      end
+      498: begin  // instr 361 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r449[a1]);
+                t1 = (t0 < 0) ? (0 - t0) : t0;
+                r455[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 640;
+          end
+          a1 = a1 + 640;
+        end
+        state <= 499;
+      end
+      499: begin  // instr 362 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          r456[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 500;
+      end
+      500: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r456[a0]);
+                t1 = $signed(r455[a1]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r456[a0] = t2[9:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 501;
+      end
+      501: begin  // instr 363 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r456[a1]);
+              t1 = $signed(rom13_lit[a2]);
+              t2 = t0 - t1;
+              r457[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 40;
+          end
+          a1 = a1 + 40;
+        end
+        state <= 502;
+      end
+      502: begin  // instr 364 loop
+        k8 = 0;
+        state <= 503;
+      end
+      503: begin  // loop8.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 3200; c0 = c0 + 1) begin
+          t0 = $signed(r449[a1]);
+          r458[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 504;
+      end
+      504: begin  // loop8.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r459[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 505;
+      end
+      505: begin  // loop8.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r460[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 506;
+      end
+      506: begin  // loop8.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          t0 = $signed(r457[a1]);
+          r461[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 507;
+      end
+      507: begin  // loop8.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          t0 = $signed(r456[a1]);
+          r462[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 508;
+      end
+      508: begin  // loop8.head
+        if (k8 == 12) state <= 531;
+        else state <= 509;
+      end
+      509: begin  // instr 365 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r460[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r463[a0] = t2[4:0];
+        state <= 510;
+      end
+      510: begin  // instr 366 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r461[a1]);
+              t1 = $signed(r462[a2]);
+              t2 = t0 + t1;
+              r464[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 40;
+            a2 = a2 - 40;
+          end
+          a1 = a1 + 40;
+          a2 = a2 + 40;
+        end
+        state <= 511;
+      end
+      511: begin  // instr 367 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r464[a1]);
+              t1 = t0 >>> 1;
+              r465[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 40;
+          end
+          a1 = a1 + 40;
+        end
+        state <= 512;
+      end
+      512: begin  // instr 368 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r465[a1]);
+                r466[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 40;
+          end
+          a1 = a1 + 40;
+        end
+        state <= 513;
+      end
+      513: begin  // instr 369 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r458[a1]);
+                t1 = $signed(r466[a2]);
+                t2 = t0 - t1;
+                r467[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 640;
+            a2 = a2 - 40;
+          end
+          a1 = a1 + 640;
+          a2 = a2 + 40;
+        end
+        state <= 514;
+      end
+      514: begin  // instr 370 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r467[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r468[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 640;
+          end
+          a1 = a1 + 640;
+        end
+        state <= 515;
+      end
+      515: begin  // instr 371 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          r469[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 516;
+      end
+      516: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r469[a0]);
+                t1 = $signed(r468[a1]);
+                t2 = t0 + t1;
+                r469[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 517;
+      end
+      517: begin  // instr 372 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r458[a1]);
+                t1 = 0 - t0;
+                r470[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 640;
+          end
+          a1 = a1 + 640;
+        end
+        state <= 518;
+      end
+      518: begin  // instr 373 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r465[a1]);
+                r471[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 40;
+          end
+          a1 = a1 + 40;
+        end
+        state <= 519;
+      end
+      519: begin  // instr 374 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r470[a1]);
+                t1 = $signed(r471[a2]);
+                t2 = t0 - t1;
+                r472[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 640;
+            a2 = a2 - 40;
+          end
+          a1 = a1 + 640;
+          a2 = a2 + 40;
+        end
+        state <= 520;
+      end
+      520: begin  // instr 375 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r472[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r473[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 640;
+          end
+          a1 = a1 + 640;
+        end
+        state <= 521;
+      end
+      521: begin  // instr 376 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          r474[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 522;
+      end
+      522: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r474[a0]);
+                t1 = $signed(r473[a1]);
+                t2 = t0 + t1;
+                r474[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 523;
+      end
+      523: begin  // instr 377 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r469[a1]);
+              t1 = $signed(r474[a2]);
+              t2 = t0 + t1;
+              r475[a0] = t2[15:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 40;
+            a2 = a2 - 40;
+          end
+          a1 = a1 + 40;
+          a2 = a2 + 40;
+        end
+        state <= 524;
+      end
+      524: begin  // instr 378 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r475[a1]);
+              t1 = $signed(r459[a2]);
+              t2 = (t0 > t1) ? 1 : 0;
+              r476[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 40;
+          end
+          a1 = a1 + 40;
+        end
+        state <= 525;
+      end
+      525: begin  // instr 379 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = r476[a1];
+              t1 = $signed(r461[a2]);
+              t2 = $signed(r465[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r477[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 40;
+            a2 = a2 - 40;
+            a3 = a3 - 40;
+          end
+          a1 = a1 + 40;
+          a2 = a2 + 40;
+          a3 = a3 + 40;
+        end
+        state <= 526;
+      end
+      526: begin  // instr 380 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = r476[a1];
+              t1 = $signed(r465[a2]);
+              t2 = $signed(r462[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r478[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 40;
+            a2 = a2 - 40;
+            a3 = a3 - 40;
+          end
+          a1 = a1 + 40;
+          a2 = a2 + 40;
+          a3 = a3 + 40;
+        end
+        state <= 527;
+      end
+      527: begin  // loop8.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r463[a1]);
+          r460[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 528;
+      end
+      528: begin  // loop8.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          t0 = $signed(r477[a1]);
+          r461[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 529;
+      end
+      529: begin  // loop8.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          t0 = $signed(r478[a1]);
+          r462[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 530;
+      end
+      530: begin  // loop8.adv
+        k8 = k8 + 1;
+        state <= 508;
+      end
+      531: begin  // loop8.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r460[a1]);
+          r479[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 532;
+      end
+      532: begin  // loop8.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          t0 = $signed(r461[a1]);
+          r480[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 533;
+      end
+      533: begin  // loop8.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          t0 = $signed(r462[a1]);
+          r481[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 534;
+      end
+      534: begin  // instr 381 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r454[a1]);
+                t1 = (t0 < 0) ? (0 - t0) : t0;
+                r482[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 640;
+          end
+          a1 = a1 + 640;
+        end
+        state <= 535;
+      end
+      535: begin  // instr 382 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          r483[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 536;
+      end
+      536: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r483[a0]);
+                t1 = $signed(r482[a1]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r483[a0] = t2[9:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 537;
+      end
+      537: begin  // instr 383 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r483[a1]);
+              t1 = $signed(rom13_lit[a2]);
+              t2 = t0 - t1;
+              r484[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 40;
+          end
+          a1 = a1 + 40;
+        end
+        state <= 538;
+      end
+      538: begin  // instr 384 loop
+        k9 = 0;
+        state <= 539;
+      end
+      539: begin  // loop9.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 3200; c0 = c0 + 1) begin
+          t0 = $signed(r454[a1]);
+          r485[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 540;
+      end
+      540: begin  // loop9.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r486[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 541;
+      end
+      541: begin  // loop9.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r487[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 542;
+      end
+      542: begin  // loop9.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          t0 = $signed(r484[a1]);
+          r488[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 543;
+      end
+      543: begin  // loop9.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          t0 = $signed(r483[a1]);
+          r489[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 544;
+      end
+      544: begin  // loop9.head
+        if (k9 == 12) state <= 567;
+        else state <= 545;
+      end
+      545: begin  // instr 385 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r487[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r490[a0] = t2[4:0];
+        state <= 546;
+      end
+      546: begin  // instr 386 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r488[a1]);
+              t1 = $signed(r489[a2]);
+              t2 = t0 + t1;
+              r491[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 40;
+            a2 = a2 - 40;
+          end
+          a1 = a1 + 40;
+          a2 = a2 + 40;
+        end
+        state <= 547;
+      end
+      547: begin  // instr 387 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r491[a1]);
+              t1 = t0 >>> 1;
+              r492[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 40;
+          end
+          a1 = a1 + 40;
+        end
+        state <= 548;
+      end
+      548: begin  // instr 388 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r492[a1]);
+                r493[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 40;
+          end
+          a1 = a1 + 40;
+        end
+        state <= 549;
+      end
+      549: begin  // instr 389 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r485[a1]);
+                t1 = $signed(r493[a2]);
+                t2 = t0 - t1;
+                r494[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 640;
+            a2 = a2 - 40;
+          end
+          a1 = a1 + 640;
+          a2 = a2 + 40;
+        end
+        state <= 550;
+      end
+      550: begin  // instr 390 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r494[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r495[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 640;
+          end
+          a1 = a1 + 640;
+        end
+        state <= 551;
+      end
+      551: begin  // instr 391 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          r496[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 552;
+      end
+      552: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r496[a0]);
+                t1 = $signed(r495[a1]);
+                t2 = t0 + t1;
+                r496[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 553;
+      end
+      553: begin  // instr 392 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r485[a1]);
+                t1 = 0 - t0;
+                r497[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 640;
+          end
+          a1 = a1 + 640;
+        end
+        state <= 554;
+      end
+      554: begin  // instr 393 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r492[a1]);
+                r498[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 40;
+          end
+          a1 = a1 + 40;
+        end
+        state <= 555;
+      end
+      555: begin  // instr 394 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r497[a1]);
+                t1 = $signed(r498[a2]);
+                t2 = t0 - t1;
+                r499[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 640;
+            a2 = a2 - 40;
+          end
+          a1 = a1 + 640;
+          a2 = a2 + 40;
+        end
+        state <= 556;
+      end
+      556: begin  // instr 395 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r499[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r500[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 640;
+          end
+          a1 = a1 + 640;
+        end
+        state <= 557;
+      end
+      557: begin  // instr 396 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          r501[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 558;
+      end
+      558: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r501[a0]);
+                t1 = $signed(r500[a1]);
+                t2 = t0 + t1;
+                r501[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 559;
+      end
+      559: begin  // instr 397 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r496[a1]);
+              t1 = $signed(r501[a2]);
+              t2 = t0 + t1;
+              r502[a0] = t2[15:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 40;
+            a2 = a2 - 40;
+          end
+          a1 = a1 + 40;
+          a2 = a2 + 40;
+        end
+        state <= 560;
+      end
+      560: begin  // instr 398 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r502[a1]);
+              t1 = $signed(r486[a2]);
+              t2 = (t0 > t1) ? 1 : 0;
+              r503[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 40;
+          end
+          a1 = a1 + 40;
+        end
+        state <= 561;
+      end
+      561: begin  // instr 399 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = r503[a1];
+              t1 = $signed(r488[a2]);
+              t2 = $signed(r492[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r504[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 40;
+            a2 = a2 - 40;
+            a3 = a3 - 40;
+          end
+          a1 = a1 + 40;
+          a2 = a2 + 40;
+          a3 = a3 + 40;
+        end
+        state <= 562;
+      end
+      562: begin  // instr 400 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = r503[a1];
+              t1 = $signed(r492[a2]);
+              t2 = $signed(r489[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r505[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 40;
+            a2 = a2 - 40;
+            a3 = a3 - 40;
+          end
+          a1 = a1 + 40;
+          a2 = a2 + 40;
+          a3 = a3 + 40;
+        end
+        state <= 563;
+      end
+      563: begin  // loop9.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r490[a1]);
+          r487[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 564;
+      end
+      564: begin  // loop9.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          t0 = $signed(r504[a1]);
+          r488[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 565;
+      end
+      565: begin  // loop9.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          t0 = $signed(r505[a1]);
+          r489[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 566;
+      end
+      566: begin  // loop9.adv
+        k9 = k9 + 1;
+        state <= 544;
+      end
+      567: begin  // loop9.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r487[a1]);
+          r506[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 568;
+      end
+      568: begin  // loop9.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          t0 = $signed(r488[a1]);
+          r507[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 569;
+      end
+      569: begin  // loop9.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 200; c0 = c0 + 1) begin
+          t0 = $signed(r489[a1]);
+          r508[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 570;
+      end
+      570: begin  // instr 401 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r481[a1]);
+              t1 = $signed(r508[a2]);
+              t2 = t0 - t1;
+              r509[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 40;
+            a2 = a2 - 40;
+          end
+          a1 = a1 + 40;
+          a2 = a2 + 40;
+        end
+        state <= 571;
+      end
+      571: begin  // instr 402 transpose
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r509[a1]);
+              r510[a0] = t0[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 160;
+        end
+        state <= 572;
+      end
+      572: begin  // instr 403 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r427[a1]);
+            r511[a0] = t0[6:0];
+            a0 = a0 + 1;
+          end
+        end
+        state <= 573;
+      end
+      573: begin  // instr 404 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r510[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r512[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 200;
+        end
+        state <= 574;
+      end
+      574: begin  // instr 405 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = a1;
+              r513[a0] = t0[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 40;
+          end
+        end
+        state <= 575;
+      end
+      575: begin  // instr 406 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r511[a1]);
+              r514[a0] = t0[6:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 576;
+      end
+      576: begin  // instr 407 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r513[a1]);
+              t1 = $signed(r514[a2]);
+              t2 = (t0 < t1) ? 1 : 0;
+              r515[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 200;
+        end
+        state <= 577;
+      end
+      577: begin  // instr 408 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom9_lit[a1]);
+        t1 = t0;
+        r516[a0] = t1[0:0];
+        state <= 578;
+      end
+      578: begin  // instr 409 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r516[a1]);
+              r517[a0] = t0[0:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 579;
+      end
+      579: begin  // instr 410 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = r515[a1];
+              t1 = $signed(r517[a2]);
+              t2 = $signed(r512[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r518[a0] = t3[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+          end
+          a1 = a1 - 200;
+          a2 = a2 - 200;
+          a3 = a3 - 200;
+        end
+        state <= 580;
+      end
+      580: begin  // instr 411 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          r519[a0] = t0[15:0];
+          a0 = a0 + 1;
+        end
+        state <= 581;
+      end
+      581: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 40; c2 = c2 + 1) begin
+              t0 = $signed(r519[a0]);
+              t1 = $signed(r518[a1]);
+              t2 = t0 + t1;
+              r519[a0] = t2[15:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 582;
+      end
+      582: begin  // instr 412 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r519[a1]);
+            t1 = t0 << 2;
+            r521[a0] = t1[17:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 583;
+      end
+      583: begin  // instr 413 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r427[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? 1 : 0;
+          r522[a0] = (t2 != 0);
+          a0 = a0 + 1;
+        end
+        state <= 584;
+      end
+      584: begin  // instr 414 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r427[a1]);
+          t1 = $signed(rom19_lit[a2]);
+          t2 = t0 + t1;
+          r523[a0] = t2[7:0];
+          a0 = a0 + 1;
+        end
+        state <= 585;
+      end
+      585: begin  // instr 415 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = r522[a1];
+          t1 = $signed(r427[a2]);
+          t2 = $signed(r523[a3]);
+          t3 = (t0 != 0) ? t2 : t1;
+          r524[a0] = t3[6:0];
+          a0 = a0 + 1;
+        end
+        state <= 586;
+      end
+      586: begin  // instr 416 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r524[a1]);
+            r525[a0] = t0[6:0];
+            a0 = a0 + 1;
+          end
+        end
+        state <= 587;
+      end
+      587: begin  // instr 417 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t9 = 0;
+            t0 = $signed(r525[a2]);
+            t1 = (t0 < 0) ? 0 : t0;
+            t1 = (t1 > 40) ? 40 : t1;
+            t2 = t1;
+            t9 = t9 + t2;
+            t3 = $signed(r428[a1 + t9]);
+            r526[a0] = t3[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 + 40;
+          a2 = a2 + 1;
+        end
+        state <= 588;
+      end
+      588: begin  // instr 418 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r8[a1]);
+          t1 = $signed(r427[a2]);
+          t2 = t0 + t1;
+          r527[a0] = t2;
+          a0 = a0 + 1;
+        end
+        state <= 589;
+      end
+      589: begin  // instr 419 and
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r8[a1]);
+          t1 = $signed(rom8_lit[a2]);
+          t2 = t0 & t1;
+          r528[a0] = t2[1:0];
+          a0 = a0 + 1;
+        end
+        state <= 590;
+      end
+      590: begin  // instr 420 slice
+        a0 = 0;
+        a1 = 10;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 45; c1 = c1 + 1) begin
+            t0 = $signed(r428[a1]);
+            r529[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 591;
+      end
+      591: begin  // instr 421 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 45; c1 = c1 + 1) begin
+            t0 = $signed(r529[a1]);
+            t1 = t0 << 1;
+            r530[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 45;
+        end
+        state <= 592;
+      end
+      592: begin  // instr 422 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom9_lit[a1]);
+        t1 = t0;
+        r531[a0] = t1[0:0];
+        state <= 593;
+      end
+      593: begin  // instr 423 pad
+        t0 = $signed(r531[0]);
+        a0 = 0;
+        for (c0 = 0; c0 < 46; c0 = c0 + 1) begin
+          r532[a0] = t0[8:0];
+          a0 = a0 + 1;
+        end
+        state <= 594;
+      end
+      594: begin  // pad.scatter
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 45; c1 = c1 + 1) begin
+            t1 = $signed(r530[a1]);
+            r532[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 1;
+        end
+        state <= 595;
+      end
+      595: begin  // instr 424 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = a1;
+          r533[a0] = t0[5:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 596;
+      end
+      596: begin  // instr 425 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r533[a1]);
+          t1 = t0 << 1;
+          r534[a0] = t1[6:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 597;
+      end
+      597: begin  // instr 426 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r534[a1]);
+            r535[a0] = t0[6:0];
+            a0 = a0 + 1;
+          end
+          a1 = a1 + 1;
+        end
+        state <= 598;
+      end
+      598: begin  // instr 427 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 6; c0 = c0 + 1) begin
+          t0 = a1;
+          r536[a0] = t0[3:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 599;
+      end
+      599: begin  // instr 428 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 6; c1 = c1 + 1) begin
+            t0 = $signed(r536[a1]);
+            r537[a0] = t0[3:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 6;
+        end
+        state <= 600;
+      end
+      600: begin  // instr 429 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 6; c1 = c1 + 1) begin
+            t0 = $signed(r535[a1]);
+            t1 = $signed(r537[a2]);
+            t2 = t0 + t1;
+            r538[a0] = t2[6:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 + 1;
+          a2 = a2 - 6;
+        end
+        state <= 601;
+      end
+      601: begin  // instr 430 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r538[a1]);
+              r539[a0] = t0[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 120;
+        end
+        state <= 602;
+      end
+      602: begin  // instr 431 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r528[a1]);
+              r540[a0] = t0[1:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 603;
+      end
+      603: begin  // instr 432 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r540[a1]);
+              t1 = $signed(r539[a2]);
+              t2 = t0 + t1;
+              r541[a0] = t2[6:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 120;
+        end
+        state <= 604;
+      end
+      604: begin  // instr 433 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r541[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? 1 : 0;
+              r542[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 120;
+        end
+        state <= 605;
+      end
+      605: begin  // instr 434 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r541[a1]);
+              t1 = $signed(rom21_lit[a2]);
+              t2 = t0 + t1;
+              r544[a0] = t2[7:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 120;
+        end
+        state <= 606;
+      end
+      606: begin  // instr 435 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = r542[a1];
+              t1 = $signed(r541[a2]);
+              t2 = $signed(r544[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r545[a0] = t3[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+          end
+          a1 = a1 - 120;
+          a2 = a2 - 120;
+          a3 = a3 - 120;
+        end
+        state <= 607;
+      end
+      607: begin  // instr 436 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r545[a1]);
+                r546[a0] = t0[6:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 120;
+        end
+        state <= 608;
+      end
+      608: begin  // instr 437 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t9 = 0;
+              t0 = $signed(r546[a2]);
+              t1 = (t0 < 0) ? 0 : t0;
+              t1 = (t1 > 45) ? 45 : t1;
+              t2 = t1;
+              t9 = t9 + t2;
+              t3 = $signed(r532[a1 + t9]);
+              r547[a0] = t3[8:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a1 = a1 + 46;
+        end
+        state <= 609;
+      end
+      609: begin  // instr 438 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 6; c0 = c0 + 1) begin
+          t0 = $signed(rom1_c[a1]);
+          t1 = t0;
+          r548[a0] = t1[6:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 610;
+      end
+      610: begin  // instr 439 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r548[a1]);
+              r549[a0] = t0[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 6;
+          end
+        end
+        state <= 611;
+      end
+      611: begin  // instr 440 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r549[a1]);
+              t1 = $signed(r547[a2]);
+              t2 = t0 + t1;
+              r550[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 6;
+          end
+          a2 = a2 - 120;
+        end
+        state <= 612;
+      end
+      612: begin  // instr 441 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r551[a0] = t1[9:0];
+        state <= 613;
+      end
+      613: begin  // instr 442 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r551[a1]);
+              t1 = $signed(r550[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r552[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 120;
+        end
+        state <= 614;
+      end
+      614: begin  // instr 443 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r553[a0] = t1[9:0];
+        state <= 615;
+      end
+      615: begin  // instr 444 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r553[a1]);
+              t1 = $signed(r552[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r554[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 120;
+        end
+        state <= 616;
+      end
+      616: begin  // instr 445 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r548[a1]);
+              r555[a0] = t0[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 6;
+          end
+        end
+        state <= 617;
+      end
+      617: begin  // instr 446 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r555[a1]);
+              t1 = $signed(r547[a2]);
+              t2 = t0 - t1;
+              r556[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 6;
+          end
+          a2 = a2 - 120;
+        end
+        state <= 618;
+      end
+      618: begin  // instr 447 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r557[a0] = t1[9:0];
+        state <= 619;
+      end
+      619: begin  // instr 448 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r557[a1]);
+              t1 = $signed(r556[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r558[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 120;
+        end
+        state <= 620;
+      end
+      620: begin  // instr 449 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r559[a0] = t1[9:0];
+        state <= 621;
+      end
+      621: begin  // instr 450 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r559[a1]);
+              t1 = $signed(r558[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r560[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 120;
+        end
+        state <= 622;
+      end
+      622: begin  // instr 451 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r554[a1]);
+              t1 = (t0 < 0) ? (0 - t0) : t0;
+              r561[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 120;
+        end
+        state <= 623;
+      end
+      623: begin  // instr 452 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          r562[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 624;
+      end
+      624: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r562[a0]);
+              t1 = $signed(r561[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r562[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 625;
+      end
+      625: begin  // instr 453 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r562[a1]);
+            t1 = $signed(rom13_lit[a2]);
+            t2 = t0 - t1;
+            r563[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 20;
+        end
+        state <= 626;
+      end
+      626: begin  // instr 454 loop
+        k10 = 0;
+        state <= 627;
+      end
+      627: begin  // loop10.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 120; c0 = c0 + 1) begin
+          t0 = $signed(r554[a1]);
+          r564[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 628;
+      end
+      628: begin  // loop10.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r565[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 629;
+      end
+      629: begin  // loop10.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r566[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 630;
+      end
+      630: begin  // loop10.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r563[a1]);
+          r567[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 631;
+      end
+      631: begin  // loop10.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r562[a1]);
+          r568[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 632;
+      end
+      632: begin  // loop10.head
+        if (k10 == 12) state <= 655;
+        else state <= 633;
+      end
+      633: begin  // instr 455 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r566[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r569[a0] = t2[4:0];
+        state <= 634;
+      end
+      634: begin  // instr 456 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r567[a1]);
+            t1 = $signed(r568[a2]);
+            t2 = t0 + t1;
+            r570[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 20;
+          a2 = a2 - 20;
+        end
+        state <= 635;
+      end
+      635: begin  // instr 457 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r570[a1]);
+            t1 = t0 >>> 1;
+            r571[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 20;
+        end
+        state <= 636;
+      end
+      636: begin  // instr 458 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r571[a1]);
+              r572[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 20;
+        end
+        state <= 637;
+      end
+      637: begin  // instr 459 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r564[a1]);
+              t1 = $signed(r572[a2]);
+              t2 = t0 - t1;
+              r573[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 120;
+          a2 = a2 - 20;
+        end
+        state <= 638;
+      end
+      638: begin  // instr 460 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r573[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r574[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 120;
+        end
+        state <= 639;
+      end
+      639: begin  // instr 461 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          r575[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 640;
+      end
+      640: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r575[a0]);
+              t1 = $signed(r574[a1]);
+              t2 = t0 + t1;
+              r575[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 641;
+      end
+      641: begin  // instr 462 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r564[a1]);
+              t1 = 0 - t0;
+              r576[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 120;
+        end
+        state <= 642;
+      end
+      642: begin  // instr 463 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r571[a1]);
+              r577[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 20;
+        end
+        state <= 643;
+      end
+      643: begin  // instr 464 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r576[a1]);
+              t1 = $signed(r577[a2]);
+              t2 = t0 - t1;
+              r578[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 120;
+          a2 = a2 - 20;
+        end
+        state <= 644;
+      end
+      644: begin  // instr 465 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r578[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r579[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 120;
+        end
+        state <= 645;
+      end
+      645: begin  // instr 466 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          r580[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 646;
+      end
+      646: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r580[a0]);
+              t1 = $signed(r579[a1]);
+              t2 = t0 + t1;
+              r580[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 647;
+      end
+      647: begin  // instr 467 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r575[a1]);
+            t1 = $signed(r580[a2]);
+            t2 = t0 + t1;
+            r581[a0] = t2[14:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 20;
+          a2 = a2 - 20;
+        end
+        state <= 648;
+      end
+      648: begin  // instr 468 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r581[a1]);
+            t1 = $signed(r565[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r582[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 20;
+        end
+        state <= 649;
+      end
+      649: begin  // instr 469 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = r582[a1];
+            t1 = $signed(r567[a2]);
+            t2 = $signed(r571[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r583[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 20;
+          a2 = a2 - 20;
+          a3 = a3 - 20;
+        end
+        state <= 650;
+      end
+      650: begin  // instr 470 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = r582[a1];
+            t1 = $signed(r571[a2]);
+            t2 = $signed(r568[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r584[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 20;
+          a2 = a2 - 20;
+          a3 = a3 - 20;
+        end
+        state <= 651;
+      end
+      651: begin  // loop10.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r569[a1]);
+          r566[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 652;
+      end
+      652: begin  // loop10.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r583[a1]);
+          r567[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 653;
+      end
+      653: begin  // loop10.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r584[a1]);
+          r568[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 654;
+      end
+      654: begin  // loop10.adv
+        k10 = k10 + 1;
+        state <= 632;
+      end
+      655: begin  // loop10.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r566[a1]);
+          r585[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 656;
+      end
+      656: begin  // loop10.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r567[a1]);
+          r586[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 657;
+      end
+      657: begin  // loop10.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r568[a1]);
+          r587[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 658;
+      end
+      658: begin  // instr 471 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r560[a1]);
+              t1 = (t0 < 0) ? (0 - t0) : t0;
+              r588[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 120;
+        end
+        state <= 659;
+      end
+      659: begin  // instr 472 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          r589[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 660;
+      end
+      660: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r589[a0]);
+              t1 = $signed(r588[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r589[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 661;
+      end
+      661: begin  // instr 473 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r589[a1]);
+            t1 = $signed(rom13_lit[a2]);
+            t2 = t0 - t1;
+            r590[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 20;
+        end
+        state <= 662;
+      end
+      662: begin  // instr 474 loop
+        k11 = 0;
+        state <= 663;
+      end
+      663: begin  // loop11.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 120; c0 = c0 + 1) begin
+          t0 = $signed(r560[a1]);
+          r591[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 664;
+      end
+      664: begin  // loop11.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r592[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 665;
+      end
+      665: begin  // loop11.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r593[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 666;
+      end
+      666: begin  // loop11.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r590[a1]);
+          r594[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 667;
+      end
+      667: begin  // loop11.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r589[a1]);
+          r595[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 668;
+      end
+      668: begin  // loop11.head
+        if (k11 == 12) state <= 691;
+        else state <= 669;
+      end
+      669: begin  // instr 475 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r593[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r596[a0] = t2[4:0];
+        state <= 670;
+      end
+      670: begin  // instr 476 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r594[a1]);
+            t1 = $signed(r595[a2]);
+            t2 = t0 + t1;
+            r597[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 20;
+          a2 = a2 - 20;
+        end
+        state <= 671;
+      end
+      671: begin  // instr 477 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r597[a1]);
+            t1 = t0 >>> 1;
+            r598[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 20;
+        end
+        state <= 672;
+      end
+      672: begin  // instr 478 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r598[a1]);
+              r599[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 20;
+        end
+        state <= 673;
+      end
+      673: begin  // instr 479 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r591[a1]);
+              t1 = $signed(r599[a2]);
+              t2 = t0 - t1;
+              r600[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 120;
+          a2 = a2 - 20;
+        end
+        state <= 674;
+      end
+      674: begin  // instr 480 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r600[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r601[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 120;
+        end
+        state <= 675;
+      end
+      675: begin  // instr 481 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          r602[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 676;
+      end
+      676: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r602[a0]);
+              t1 = $signed(r601[a1]);
+              t2 = t0 + t1;
+              r602[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 677;
+      end
+      677: begin  // instr 482 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r591[a1]);
+              t1 = 0 - t0;
+              r603[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 120;
+        end
+        state <= 678;
+      end
+      678: begin  // instr 483 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r598[a1]);
+              r604[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 20;
+        end
+        state <= 679;
+      end
+      679: begin  // instr 484 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r603[a1]);
+              t1 = $signed(r604[a2]);
+              t2 = t0 - t1;
+              r605[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 120;
+          a2 = a2 - 20;
+        end
+        state <= 680;
+      end
+      680: begin  // instr 485 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r605[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r606[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 120;
+        end
+        state <= 681;
+      end
+      681: begin  // instr 486 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          r607[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 682;
+      end
+      682: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r607[a0]);
+              t1 = $signed(r606[a1]);
+              t2 = t0 + t1;
+              r607[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 683;
+      end
+      683: begin  // instr 487 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r602[a1]);
+            t1 = $signed(r607[a2]);
+            t2 = t0 + t1;
+            r608[a0] = t2[14:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 20;
+          a2 = a2 - 20;
+        end
+        state <= 684;
+      end
+      684: begin  // instr 488 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r608[a1]);
+            t1 = $signed(r592[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r609[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 20;
+        end
+        state <= 685;
+      end
+      685: begin  // instr 489 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = r609[a1];
+            t1 = $signed(r594[a2]);
+            t2 = $signed(r598[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r610[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 20;
+          a2 = a2 - 20;
+          a3 = a3 - 20;
+        end
+        state <= 686;
+      end
+      686: begin  // instr 490 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = r609[a1];
+            t1 = $signed(r598[a2]);
+            t2 = $signed(r595[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r611[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 20;
+          a2 = a2 - 20;
+          a3 = a3 - 20;
+        end
+        state <= 687;
+      end
+      687: begin  // loop11.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r596[a1]);
+          r593[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 688;
+      end
+      688: begin  // loop11.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r610[a1]);
+          r594[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 689;
+      end
+      689: begin  // loop11.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r611[a1]);
+          r595[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 690;
+      end
+      690: begin  // loop11.adv
+        k11 = k11 + 1;
+        state <= 668;
+      end
+      691: begin  // loop11.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r593[a1]);
+          r612[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 692;
+      end
+      692: begin  // loop11.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r594[a1]);
+          r613[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 693;
+      end
+      693: begin  // loop11.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r595[a1]);
+          r614[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 694;
+      end
+      694: begin  // instr 491 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r587[a1]);
+            t1 = $signed(r614[a2]);
+            t2 = t0 - t1;
+            r615[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 20;
+          a2 = a2 - 20;
+        end
+        state <= 695;
+      end
+      695: begin  // instr 492 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r615[a1]);
+            t1 = t0 >>> 1;
+            r616[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 20;
+        end
+        state <= 696;
+      end
+      696: begin  // instr 493 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom15_lit[a1]);
+        t1 = t0;
+        r617[a0] = t1[7:0];
+        state <= 697;
+      end
+      697: begin  // instr 494 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r617[a1]);
+            t1 = $signed(r616[a2]);
+            t2 = (t0 < t1) ? t1 : t0;
+            r618[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a2 = a2 - 20;
+        end
+        state <= 698;
+      end
+      698: begin  // instr 495 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom16_lit[a1]);
+        t1 = t0;
+        r619[a0] = t1[7:0];
+        state <= 699;
+      end
+      699: begin  // instr 496 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r619[a1]);
+            t1 = $signed(r618[a2]);
+            t2 = (t1 < t0) ? t1 : t0;
+            r620[a0] = t2[7:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a2 = a2 - 20;
+        end
+        state <= 700;
+      end
+      700: begin  // instr 497 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r427[a1]);
+          t1 = $signed(r528[a2]);
+          t2 = t0 - t1;
+          r621[a0] = t2[6:0];
+          a0 = a0 + 1;
+        end
+        state <= 701;
+      end
+      701: begin  // instr 498 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r621[a1]);
+          t1 = $signed(rom8_lit[a2]);
+          t2 = t0 + t1;
+          r622[a0] = t2[6:0];
+          a0 = a0 + 1;
+        end
+        state <= 702;
+      end
+      702: begin  // instr 499 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r622[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? t1 : t0;
+          r623[a0] = t2[6:0];
+          a0 = a0 + 1;
+        end
+        state <= 703;
+      end
+      703: begin  // instr 500 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r623[a1]);
+          t1 = t0 >>> 1;
+          r624[a0] = t1[5:0];
+          a0 = a0 + 1;
+        end
+        state <= 704;
+      end
+      704: begin  // instr 501 concat
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t0 = $signed(r3[a1]);
+            r625[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 20;
+        end
+        state <= 705;
+      end
+      705: begin  // concat
+        a0 = 15;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r620[a1]);
+            r625[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 15;
+        end
+        state <= 706;
+      end
+      706: begin  // instr 502 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 35; c1 = c1 + 1) begin
+            t0 = $signed(r625[a1]);
+            t1 = t0 << 1;
+            r626[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 35;
+        end
+        state <= 707;
+      end
+      707: begin  // instr 503 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(rom0_c[a1]);
+            t1 = t0;
+            r627[a0] = t1[5:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 708;
+      end
+      708: begin  // instr 504 rev
+        a0 = 0;
+        a1 = 15;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r627[a1]);
+            r628[a0] = t0[5:0];
+            a0 = a0 + 1;
+            a1 = a1 - 1;
+          end
+          a1 = a1 + 32;
+        end
+        state <= 709;
+      end
+      709: begin  // instr 505 reshape
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r628[a1]);
+          r629[a0] = t0[5:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 710;
+      end
+      710: begin  // instr 506 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = a1;
+          r630[a0] = t0[5:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 711;
+      end
+      711: begin  // instr 507 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r630[a1]);
+            r631[a0] = t0[5:0];
+            a0 = a0 + 1;
+          end
+          a1 = a1 + 1;
+        end
+        state <= 712;
+      end
+      712: begin  // instr 508 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 16; c0 = c0 + 1) begin
+          t0 = a1;
+          r632[a0] = t0[4:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 713;
+      end
+      713: begin  // instr 509 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r632[a1]);
+            r633[a0] = t0[4:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 16;
+        end
+        state <= 714;
+      end
+      714: begin  // instr 510 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r631[a1]);
+            t1 = $signed(r633[a2]);
+            t2 = t0 + t1;
+            r634[a0] = t2[6:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 + 1;
+          a2 = a2 - 16;
+        end
+        state <= 715;
+      end
+      715: begin  // instr 511 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r634[a1]);
+            t1 = $signed(rom9_lit[a2]);
+            t2 = (t0 < t1) ? 1 : 0;
+            r635[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 716;
+      end
+      716: begin  // instr 512 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r634[a1]);
+            t1 = $signed(rom22_lit[a2]);
+            t2 = t0 + t1;
+            r637[a0] = t2[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 717;
+      end
+      717: begin  // instr 513 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = r635[a1];
+            t1 = $signed(r634[a2]);
+            t2 = $signed(r637[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r638[a0] = t3[6:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+        end
+        state <= 718;
+      end
+      718: begin  // instr 514 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r638[a1]);
+              r639[a0] = t0[6:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+        end
+        state <= 719;
+      end
+      719: begin  // instr 515 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 16; c2 = c2 + 1) begin
+              t9 = 0;
+              t0 = $signed(r639[a2]);
+              t1 = (t0 < 0) ? 0 : t0;
+              t1 = (t1 > 34) ? 34 : t1;
+              t2 = t1;
+              t9 = t9 + t2;
+              t3 = $signed(r626[a1 + t9]);
+              r640[a0] = t3[8:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a1 = a1 + 35;
+          a2 = a2 - 320;
+        end
+        state <= 720;
+      end
+      720: begin  // instr 516 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r640[a1]);
+                r641[a0] = t0[8:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 320;
+          end
+        end
+        state <= 721;
+      end
+      721: begin  // instr 517 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r629[a1]);
+                t1 = $signed(r641[a2]);
+                t2 = t0 + t1;
+                r642[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+                a2 = a2 + 1;
+              end
+              a1 = a1 - 16;
+            end
+            a2 = a2 - 320;
+          end
+          a1 = a1 + 16;
+        end
+        state <= 722;
+      end
+      722: begin  // instr 518 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r643[a0] = t1[9:0];
+        state <= 723;
+      end
+      723: begin  // instr 519 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r643[a1]);
+                t1 = $signed(r642[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r644[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 320;
+          end
+          a2 = a2 + 320;
+        end
+        state <= 724;
+      end
+      724: begin  // instr 520 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r645[a0] = t1[9:0];
+        state <= 725;
+      end
+      725: begin  // instr 521 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r645[a1]);
+                t1 = $signed(r644[a2]);
+                t2 = (t1 < t0) ? t1 : t0;
+                r646[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 320;
+          end
+          a2 = a2 + 320;
+        end
+        state <= 726;
+      end
+      726: begin  // instr 522 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r629[a1]);
+                t1 = $signed(r641[a2]);
+                t2 = t0 - t1;
+                r647[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+                a2 = a2 + 1;
+              end
+              a1 = a1 - 16;
+            end
+            a2 = a2 - 320;
+          end
+          a1 = a1 + 16;
+        end
+        state <= 727;
+      end
+      727: begin  // instr 523 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r648[a0] = t1[9:0];
+        state <= 728;
+      end
+      728: begin  // instr 524 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r648[a1]);
+                t1 = $signed(r647[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r649[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 320;
+          end
+          a2 = a2 + 320;
+        end
+        state <= 729;
+      end
+      729: begin  // instr 525 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r650[a0] = t1[9:0];
+        state <= 730;
+      end
+      730: begin  // instr 526 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r650[a1]);
+                t1 = $signed(r649[a2]);
+                t2 = (t1 < t0) ? t1 : t0;
+                r651[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 320;
+          end
+          a2 = a2 + 320;
+        end
+        state <= 731;
+      end
+      731: begin  // instr 527 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r646[a1]);
+                t1 = (t0 < 0) ? (0 - t0) : t0;
+                r652[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 320;
+          end
+          a1 = a1 + 320;
+        end
+        state <= 732;
+      end
+      732: begin  // instr 528 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          r653[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 733;
+      end
+      733: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r653[a0]);
+                t1 = $signed(r652[a1]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r653[a0] = t2[9:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 734;
+      end
+      734: begin  // instr 529 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r653[a1]);
+              t1 = $signed(rom13_lit[a2]);
+              t2 = t0 - t1;
+              r654[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 20;
+          end
+          a1 = a1 + 20;
+        end
+        state <= 735;
+      end
+      735: begin  // instr 530 loop
+        k12 = 0;
+        state <= 736;
+      end
+      736: begin  // loop12.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1600; c0 = c0 + 1) begin
+          t0 = $signed(r646[a1]);
+          r655[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 737;
+      end
+      737: begin  // loop12.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r656[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 738;
+      end
+      738: begin  // loop12.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r657[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 739;
+      end
+      739: begin  // loop12.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          t0 = $signed(r654[a1]);
+          r658[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 740;
+      end
+      740: begin  // loop12.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          t0 = $signed(r653[a1]);
+          r659[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 741;
+      end
+      741: begin  // loop12.head
+        if (k12 == 12) state <= 764;
+        else state <= 742;
+      end
+      742: begin  // instr 531 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r657[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r660[a0] = t2[4:0];
+        state <= 743;
+      end
+      743: begin  // instr 532 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r658[a1]);
+              t1 = $signed(r659[a2]);
+              t2 = t0 + t1;
+              r661[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 20;
+            a2 = a2 - 20;
+          end
+          a1 = a1 + 20;
+          a2 = a2 + 20;
+        end
+        state <= 744;
+      end
+      744: begin  // instr 533 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r661[a1]);
+              t1 = t0 >>> 1;
+              r662[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 20;
+          end
+          a1 = a1 + 20;
+        end
+        state <= 745;
+      end
+      745: begin  // instr 534 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r662[a1]);
+                r663[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 20;
+          end
+          a1 = a1 + 20;
+        end
+        state <= 746;
+      end
+      746: begin  // instr 535 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r655[a1]);
+                t1 = $signed(r663[a2]);
+                t2 = t0 - t1;
+                r664[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 320;
+            a2 = a2 - 20;
+          end
+          a1 = a1 + 320;
+          a2 = a2 + 20;
+        end
+        state <= 747;
+      end
+      747: begin  // instr 536 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r664[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r665[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 320;
+          end
+          a1 = a1 + 320;
+        end
+        state <= 748;
+      end
+      748: begin  // instr 537 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          r666[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 749;
+      end
+      749: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r666[a0]);
+                t1 = $signed(r665[a1]);
+                t2 = t0 + t1;
+                r666[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 750;
+      end
+      750: begin  // instr 538 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r655[a1]);
+                t1 = 0 - t0;
+                r667[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 320;
+          end
+          a1 = a1 + 320;
+        end
+        state <= 751;
+      end
+      751: begin  // instr 539 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r662[a1]);
+                r668[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 20;
+          end
+          a1 = a1 + 20;
+        end
+        state <= 752;
+      end
+      752: begin  // instr 540 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r667[a1]);
+                t1 = $signed(r668[a2]);
+                t2 = t0 - t1;
+                r669[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 320;
+            a2 = a2 - 20;
+          end
+          a1 = a1 + 320;
+          a2 = a2 + 20;
+        end
+        state <= 753;
+      end
+      753: begin  // instr 541 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r669[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r670[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 320;
+          end
+          a1 = a1 + 320;
+        end
+        state <= 754;
+      end
+      754: begin  // instr 542 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          r671[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 755;
+      end
+      755: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r671[a0]);
+                t1 = $signed(r670[a1]);
+                t2 = t0 + t1;
+                r671[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 756;
+      end
+      756: begin  // instr 543 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r666[a1]);
+              t1 = $signed(r671[a2]);
+              t2 = t0 + t1;
+              r672[a0] = t2[15:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 20;
+            a2 = a2 - 20;
+          end
+          a1 = a1 + 20;
+          a2 = a2 + 20;
+        end
+        state <= 757;
+      end
+      757: begin  // instr 544 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r672[a1]);
+              t1 = $signed(r656[a2]);
+              t2 = (t0 > t1) ? 1 : 0;
+              r673[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 20;
+          end
+          a1 = a1 + 20;
+        end
+        state <= 758;
+      end
+      758: begin  // instr 545 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = r673[a1];
+              t1 = $signed(r658[a2]);
+              t2 = $signed(r662[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r674[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 20;
+            a2 = a2 - 20;
+            a3 = a3 - 20;
+          end
+          a1 = a1 + 20;
+          a2 = a2 + 20;
+          a3 = a3 + 20;
+        end
+        state <= 759;
+      end
+      759: begin  // instr 546 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = r673[a1];
+              t1 = $signed(r662[a2]);
+              t2 = $signed(r659[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r675[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 20;
+            a2 = a2 - 20;
+            a3 = a3 - 20;
+          end
+          a1 = a1 + 20;
+          a2 = a2 + 20;
+          a3 = a3 + 20;
+        end
+        state <= 760;
+      end
+      760: begin  // loop12.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r660[a1]);
+          r657[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 761;
+      end
+      761: begin  // loop12.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          t0 = $signed(r674[a1]);
+          r658[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 762;
+      end
+      762: begin  // loop12.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          t0 = $signed(r675[a1]);
+          r659[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 763;
+      end
+      763: begin  // loop12.adv
+        k12 = k12 + 1;
+        state <= 741;
+      end
+      764: begin  // loop12.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r657[a1]);
+          r676[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 765;
+      end
+      765: begin  // loop12.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          t0 = $signed(r658[a1]);
+          r677[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 766;
+      end
+      766: begin  // loop12.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          t0 = $signed(r659[a1]);
+          r678[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 767;
+      end
+      767: begin  // instr 547 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r651[a1]);
+                t1 = (t0 < 0) ? (0 - t0) : t0;
+                r679[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 320;
+          end
+          a1 = a1 + 320;
+        end
+        state <= 768;
+      end
+      768: begin  // instr 548 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          r680[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 769;
+      end
+      769: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r680[a0]);
+                t1 = $signed(r679[a1]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r680[a0] = t2[9:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 770;
+      end
+      770: begin  // instr 549 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r680[a1]);
+              t1 = $signed(rom13_lit[a2]);
+              t2 = t0 - t1;
+              r681[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 20;
+          end
+          a1 = a1 + 20;
+        end
+        state <= 771;
+      end
+      771: begin  // instr 550 loop
+        k13 = 0;
+        state <= 772;
+      end
+      772: begin  // loop13.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1600; c0 = c0 + 1) begin
+          t0 = $signed(r651[a1]);
+          r682[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 773;
+      end
+      773: begin  // loop13.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r683[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 774;
+      end
+      774: begin  // loop13.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r684[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 775;
+      end
+      775: begin  // loop13.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          t0 = $signed(r681[a1]);
+          r685[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 776;
+      end
+      776: begin  // loop13.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          t0 = $signed(r680[a1]);
+          r686[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 777;
+      end
+      777: begin  // loop13.head
+        if (k13 == 12) state <= 800;
+        else state <= 778;
+      end
+      778: begin  // instr 551 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r684[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r687[a0] = t2[4:0];
+        state <= 779;
+      end
+      779: begin  // instr 552 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r685[a1]);
+              t1 = $signed(r686[a2]);
+              t2 = t0 + t1;
+              r688[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 20;
+            a2 = a2 - 20;
+          end
+          a1 = a1 + 20;
+          a2 = a2 + 20;
+        end
+        state <= 780;
+      end
+      780: begin  // instr 553 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r688[a1]);
+              t1 = t0 >>> 1;
+              r689[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 20;
+          end
+          a1 = a1 + 20;
+        end
+        state <= 781;
+      end
+      781: begin  // instr 554 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r689[a1]);
+                r690[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 20;
+          end
+          a1 = a1 + 20;
+        end
+        state <= 782;
+      end
+      782: begin  // instr 555 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r682[a1]);
+                t1 = $signed(r690[a2]);
+                t2 = t0 - t1;
+                r691[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 320;
+            a2 = a2 - 20;
+          end
+          a1 = a1 + 320;
+          a2 = a2 + 20;
+        end
+        state <= 783;
+      end
+      783: begin  // instr 556 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r691[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r692[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 320;
+          end
+          a1 = a1 + 320;
+        end
+        state <= 784;
+      end
+      784: begin  // instr 557 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          r693[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 785;
+      end
+      785: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r693[a0]);
+                t1 = $signed(r692[a1]);
+                t2 = t0 + t1;
+                r693[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 786;
+      end
+      786: begin  // instr 558 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r682[a1]);
+                t1 = 0 - t0;
+                r694[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 320;
+          end
+          a1 = a1 + 320;
+        end
+        state <= 787;
+      end
+      787: begin  // instr 559 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r689[a1]);
+                r695[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 20;
+          end
+          a1 = a1 + 20;
+        end
+        state <= 788;
+      end
+      788: begin  // instr 560 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r694[a1]);
+                t1 = $signed(r695[a2]);
+                t2 = t0 - t1;
+                r696[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 320;
+            a2 = a2 - 20;
+          end
+          a1 = a1 + 320;
+          a2 = a2 + 20;
+        end
+        state <= 789;
+      end
+      789: begin  // instr 561 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r696[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r697[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 320;
+          end
+          a1 = a1 + 320;
+        end
+        state <= 790;
+      end
+      790: begin  // instr 562 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          r698[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 791;
+      end
+      791: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r698[a0]);
+                t1 = $signed(r697[a1]);
+                t2 = t0 + t1;
+                r698[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 792;
+      end
+      792: begin  // instr 563 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r693[a1]);
+              t1 = $signed(r698[a2]);
+              t2 = t0 + t1;
+              r699[a0] = t2[15:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 20;
+            a2 = a2 - 20;
+          end
+          a1 = a1 + 20;
+          a2 = a2 + 20;
+        end
+        state <= 793;
+      end
+      793: begin  // instr 564 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r699[a1]);
+              t1 = $signed(r683[a2]);
+              t2 = (t0 > t1) ? 1 : 0;
+              r700[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 20;
+          end
+          a1 = a1 + 20;
+        end
+        state <= 794;
+      end
+      794: begin  // instr 565 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = r700[a1];
+              t1 = $signed(r685[a2]);
+              t2 = $signed(r689[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r701[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 20;
+            a2 = a2 - 20;
+            a3 = a3 - 20;
+          end
+          a1 = a1 + 20;
+          a2 = a2 + 20;
+          a3 = a3 + 20;
+        end
+        state <= 795;
+      end
+      795: begin  // instr 566 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = r700[a1];
+              t1 = $signed(r689[a2]);
+              t2 = $signed(r686[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r702[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 20;
+            a2 = a2 - 20;
+            a3 = a3 - 20;
+          end
+          a1 = a1 + 20;
+          a2 = a2 + 20;
+          a3 = a3 + 20;
+        end
+        state <= 796;
+      end
+      796: begin  // loop13.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r687[a1]);
+          r684[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 797;
+      end
+      797: begin  // loop13.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          t0 = $signed(r701[a1]);
+          r685[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 798;
+      end
+      798: begin  // loop13.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          t0 = $signed(r702[a1]);
+          r686[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 799;
+      end
+      799: begin  // loop13.adv
+        k13 = k13 + 1;
+        state <= 777;
+      end
+      800: begin  // loop13.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r684[a1]);
+          r703[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 801;
+      end
+      801: begin  // loop13.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          t0 = $signed(r685[a1]);
+          r704[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 802;
+      end
+      802: begin  // loop13.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 100; c0 = c0 + 1) begin
+          t0 = $signed(r686[a1]);
+          r705[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 803;
+      end
+      803: begin  // instr 567 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r678[a1]);
+              t1 = $signed(r705[a2]);
+              t2 = t0 - t1;
+              r706[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 20;
+            a2 = a2 - 20;
+          end
+          a1 = a1 + 20;
+          a2 = a2 + 20;
+        end
+        state <= 804;
+      end
+      804: begin  // instr 568 transpose
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r706[a1]);
+              r707[a0] = t0[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 80;
+        end
+        state <= 805;
+      end
+      805: begin  // instr 569 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r624[a1]);
+            r708[a0] = t0[5:0];
+            a0 = a0 + 1;
+          end
+        end
+        state <= 806;
+      end
+      806: begin  // instr 570 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r707[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r709[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 100;
+        end
+        state <= 807;
+      end
+      807: begin  // instr 571 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = a1;
+              r710[a0] = t0[5:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 20;
+          end
+        end
+        state <= 808;
+      end
+      808: begin  // instr 572 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r708[a1]);
+              r711[a0] = t0[5:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 809;
+      end
+      809: begin  // instr 573 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r710[a1]);
+              t1 = $signed(r711[a2]);
+              t2 = (t0 < t1) ? 1 : 0;
+              r712[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 100;
+        end
+        state <= 810;
+      end
+      810: begin  // instr 574 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom9_lit[a1]);
+        t1 = t0;
+        r713[a0] = t1[0:0];
+        state <= 811;
+      end
+      811: begin  // instr 575 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r713[a1]);
+              r714[a0] = t0[0:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 812;
+      end
+      812: begin  // instr 576 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = r712[a1];
+              t1 = $signed(r714[a2]);
+              t2 = $signed(r709[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r715[a0] = t3[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+          end
+          a1 = a1 - 100;
+          a2 = a2 - 100;
+          a3 = a3 - 100;
+        end
+        state <= 813;
+      end
+      813: begin  // instr 577 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          r716[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 814;
+      end
+      814: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 20; c2 = c2 + 1) begin
+              t0 = $signed(r716[a0]);
+              t1 = $signed(r715[a1]);
+              t2 = t0 + t1;
+              r716[a0] = t2[14:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 815;
+      end
+      815: begin  // instr 578 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r716[a1]);
+            t1 = t0 << 3;
+            r718[a0] = t1[17:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 816;
+      end
+      816: begin  // instr 579 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r624[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? 1 : 0;
+          r719[a0] = (t2 != 0);
+          a0 = a0 + 1;
+        end
+        state <= 817;
+      end
+      817: begin  // instr 580 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r624[a1]);
+          t1 = $signed(rom22_lit[a2]);
+          t2 = t0 + t1;
+          r720[a0] = t2[6:0];
+          a0 = a0 + 1;
+        end
+        state <= 818;
+      end
+      818: begin  // instr 581 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = r719[a1];
+          t1 = $signed(r624[a2]);
+          t2 = $signed(r720[a3]);
+          t3 = (t0 != 0) ? t2 : t1;
+          r721[a0] = t3[5:0];
+          a0 = a0 + 1;
+        end
+        state <= 819;
+      end
+      819: begin  // instr 582 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r721[a1]);
+            r722[a0] = t0[5:0];
+            a0 = a0 + 1;
+          end
+        end
+        state <= 820;
+      end
+      820: begin  // instr 583 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t9 = 0;
+            t0 = $signed(r722[a2]);
+            t1 = (t0 < 0) ? 0 : t0;
+            t1 = (t1 > 20) ? 20 : t1;
+            t2 = t1;
+            t9 = t9 + t2;
+            t3 = $signed(r625[a1 + t9]);
+            r723[a0] = t3[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 + 20;
+          a2 = a2 + 1;
+        end
+        state <= 821;
+      end
+      821: begin  // instr 584 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r9[a1]);
+          t1 = $signed(r624[a2]);
+          t2 = t0 + t1;
+          r724[a0] = t2;
+          a0 = a0 + 1;
+        end
+        state <= 822;
+      end
+      822: begin  // instr 585 and
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r9[a1]);
+          t1 = $signed(rom8_lit[a2]);
+          t2 = t0 & t1;
+          r725[a0] = t2[1:0];
+          a0 = a0 + 1;
+        end
+        state <= 823;
+      end
+      823: begin  // instr 586 slice
+        a0 = 0;
+        a1 = 10;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 25; c1 = c1 + 1) begin
+            t0 = $signed(r625[a1]);
+            r726[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 824;
+      end
+      824: begin  // instr 587 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 25; c1 = c1 + 1) begin
+            t0 = $signed(r726[a1]);
+            t1 = t0 << 1;
+            r727[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 25;
+        end
+        state <= 825;
+      end
+      825: begin  // instr 588 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom9_lit[a1]);
+        t1 = t0;
+        r728[a0] = t1[0:0];
+        state <= 826;
+      end
+      826: begin  // instr 589 pad
+        t0 = $signed(r728[0]);
+        a0 = 0;
+        for (c0 = 0; c0 < 26; c0 = c0 + 1) begin
+          r729[a0] = t0[8:0];
+          a0 = a0 + 1;
+        end
+        state <= 827;
+      end
+      827: begin  // pad.scatter
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 25; c1 = c1 + 1) begin
+            t1 = $signed(r727[a1]);
+            r729[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 1;
+        end
+        state <= 828;
+      end
+      828: begin  // instr 590 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = a1;
+          r730[a0] = t0[4:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 829;
+      end
+      829: begin  // instr 591 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r730[a1]);
+          t1 = t0 << 1;
+          r731[a0] = t1[5:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 830;
+      end
+      830: begin  // instr 592 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r731[a1]);
+            r732[a0] = t0[5:0];
+            a0 = a0 + 1;
+          end
+          a1 = a1 + 1;
+        end
+        state <= 831;
+      end
+      831: begin  // instr 593 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 6; c0 = c0 + 1) begin
+          t0 = a1;
+          r733[a0] = t0[3:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 832;
+      end
+      832: begin  // instr 594 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 6; c1 = c1 + 1) begin
+            t0 = $signed(r733[a1]);
+            r734[a0] = t0[3:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 6;
+        end
+        state <= 833;
+      end
+      833: begin  // instr 595 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 6; c1 = c1 + 1) begin
+            t0 = $signed(r732[a1]);
+            t1 = $signed(r734[a2]);
+            t2 = t0 + t1;
+            r735[a0] = t2[5:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 + 1;
+          a2 = a2 - 6;
+        end
+        state <= 834;
+      end
+      834: begin  // instr 596 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r735[a1]);
+              r736[a0] = t0[5:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 60;
+        end
+        state <= 835;
+      end
+      835: begin  // instr 597 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r725[a1]);
+              r737[a0] = t0[1:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 836;
+      end
+      836: begin  // instr 598 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r737[a1]);
+              t1 = $signed(r736[a2]);
+              t2 = t0 + t1;
+              r738[a0] = t2[5:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 60;
+        end
+        state <= 837;
+      end
+      837: begin  // instr 599 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r738[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? 1 : 0;
+              r739[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 60;
+        end
+        state <= 838;
+      end
+      838: begin  // instr 600 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r738[a1]);
+              t1 = $signed(rom24_lit[a2]);
+              t2 = t0 + t1;
+              r741[a0] = t2[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 60;
+        end
+        state <= 839;
+      end
+      839: begin  // instr 601 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = r739[a1];
+              t1 = $signed(r738[a2]);
+              t2 = $signed(r741[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r742[a0] = t3[5:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+          end
+          a1 = a1 - 60;
+          a2 = a2 - 60;
+          a3 = a3 - 60;
+        end
+        state <= 840;
+      end
+      840: begin  // instr 602 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r742[a1]);
+                r743[a0] = t0[5:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 60;
+        end
+        state <= 841;
+      end
+      841: begin  // instr 603 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t9 = 0;
+              t0 = $signed(r743[a2]);
+              t1 = (t0 < 0) ? 0 : t0;
+              t1 = (t1 > 25) ? 25 : t1;
+              t2 = t1;
+              t9 = t9 + t2;
+              t3 = $signed(r729[a1 + t9]);
+              r744[a0] = t3[8:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a1 = a1 + 26;
+        end
+        state <= 842;
+      end
+      842: begin  // instr 604 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 6; c0 = c0 + 1) begin
+          t0 = $signed(rom1_c[a1]);
+          t1 = t0;
+          r745[a0] = t1[6:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 843;
+      end
+      843: begin  // instr 605 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r745[a1]);
+              r746[a0] = t0[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 6;
+          end
+        end
+        state <= 844;
+      end
+      844: begin  // instr 606 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r746[a1]);
+              t1 = $signed(r744[a2]);
+              t2 = t0 + t1;
+              r747[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 6;
+          end
+          a2 = a2 - 60;
+        end
+        state <= 845;
+      end
+      845: begin  // instr 607 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r748[a0] = t1[9:0];
+        state <= 846;
+      end
+      846: begin  // instr 608 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r748[a1]);
+              t1 = $signed(r747[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r749[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 60;
+        end
+        state <= 847;
+      end
+      847: begin  // instr 609 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r750[a0] = t1[9:0];
+        state <= 848;
+      end
+      848: begin  // instr 610 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r750[a1]);
+              t1 = $signed(r749[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r751[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 60;
+        end
+        state <= 849;
+      end
+      849: begin  // instr 611 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r745[a1]);
+              r752[a0] = t0[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 6;
+          end
+        end
+        state <= 850;
+      end
+      850: begin  // instr 612 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r752[a1]);
+              t1 = $signed(r744[a2]);
+              t2 = t0 - t1;
+              r753[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 6;
+          end
+          a2 = a2 - 60;
+        end
+        state <= 851;
+      end
+      851: begin  // instr 613 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r754[a0] = t1[9:0];
+        state <= 852;
+      end
+      852: begin  // instr 614 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r754[a1]);
+              t1 = $signed(r753[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r755[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 60;
+        end
+        state <= 853;
+      end
+      853: begin  // instr 615 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r756[a0] = t1[9:0];
+        state <= 854;
+      end
+      854: begin  // instr 616 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r756[a1]);
+              t1 = $signed(r755[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r757[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 60;
+        end
+        state <= 855;
+      end
+      855: begin  // instr 617 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r751[a1]);
+              t1 = (t0 < 0) ? (0 - t0) : t0;
+              r758[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 60;
+        end
+        state <= 856;
+      end
+      856: begin  // instr 618 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          r759[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 857;
+      end
+      857: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r759[a0]);
+              t1 = $signed(r758[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r759[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 858;
+      end
+      858: begin  // instr 619 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r759[a1]);
+            t1 = $signed(rom13_lit[a2]);
+            t2 = t0 - t1;
+            r760[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 859;
+      end
+      859: begin  // instr 620 loop
+        k14 = 0;
+        state <= 860;
+      end
+      860: begin  // loop14.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 60; c0 = c0 + 1) begin
+          t0 = $signed(r751[a1]);
+          r761[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 861;
+      end
+      861: begin  // loop14.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r762[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 862;
+      end
+      862: begin  // loop14.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r763[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 863;
+      end
+      863: begin  // loop14.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r760[a1]);
+          r764[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 864;
+      end
+      864: begin  // loop14.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r759[a1]);
+          r765[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 865;
+      end
+      865: begin  // loop14.head
+        if (k14 == 12) state <= 888;
+        else state <= 866;
+      end
+      866: begin  // instr 621 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r763[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r766[a0] = t2[4:0];
+        state <= 867;
+      end
+      867: begin  // instr 622 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r764[a1]);
+            t1 = $signed(r765[a2]);
+            t2 = t0 + t1;
+            r767[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+        end
+        state <= 868;
+      end
+      868: begin  // instr 623 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r767[a1]);
+            t1 = t0 >>> 1;
+            r768[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 869;
+      end
+      869: begin  // instr 624 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r768[a1]);
+              r769[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 870;
+      end
+      870: begin  // instr 625 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r761[a1]);
+              t1 = $signed(r769[a2]);
+              t2 = t0 - t1;
+              r770[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 60;
+          a2 = a2 - 10;
+        end
+        state <= 871;
+      end
+      871: begin  // instr 626 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r770[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r771[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 60;
+        end
+        state <= 872;
+      end
+      872: begin  // instr 627 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          r772[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 873;
+      end
+      873: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r772[a0]);
+              t1 = $signed(r771[a1]);
+              t2 = t0 + t1;
+              r772[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 874;
+      end
+      874: begin  // instr 628 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r761[a1]);
+              t1 = 0 - t0;
+              r773[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 60;
+        end
+        state <= 875;
+      end
+      875: begin  // instr 629 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r768[a1]);
+              r774[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 876;
+      end
+      876: begin  // instr 630 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r773[a1]);
+              t1 = $signed(r774[a2]);
+              t2 = t0 - t1;
+              r775[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 60;
+          a2 = a2 - 10;
+        end
+        state <= 877;
+      end
+      877: begin  // instr 631 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r775[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r776[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 60;
+        end
+        state <= 878;
+      end
+      878: begin  // instr 632 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          r777[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 879;
+      end
+      879: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r777[a0]);
+              t1 = $signed(r776[a1]);
+              t2 = t0 + t1;
+              r777[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 880;
+      end
+      880: begin  // instr 633 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r772[a1]);
+            t1 = $signed(r777[a2]);
+            t2 = t0 + t1;
+            r778[a0] = t2[14:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+        end
+        state <= 881;
+      end
+      881: begin  // instr 634 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r778[a1]);
+            t1 = $signed(r762[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r779[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 882;
+      end
+      882: begin  // instr 635 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = r779[a1];
+            t1 = $signed(r764[a2]);
+            t2 = $signed(r768[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r780[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+          a3 = a3 - 10;
+        end
+        state <= 883;
+      end
+      883: begin  // instr 636 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = r779[a1];
+            t1 = $signed(r768[a2]);
+            t2 = $signed(r765[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r781[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+          a3 = a3 - 10;
+        end
+        state <= 884;
+      end
+      884: begin  // loop14.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r766[a1]);
+          r763[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 885;
+      end
+      885: begin  // loop14.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r780[a1]);
+          r764[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 886;
+      end
+      886: begin  // loop14.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r781[a1]);
+          r765[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 887;
+      end
+      887: begin  // loop14.adv
+        k14 = k14 + 1;
+        state <= 865;
+      end
+      888: begin  // loop14.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r763[a1]);
+          r782[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 889;
+      end
+      889: begin  // loop14.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r764[a1]);
+          r783[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 890;
+      end
+      890: begin  // loop14.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r765[a1]);
+          r784[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 891;
+      end
+      891: begin  // instr 637 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r757[a1]);
+              t1 = (t0 < 0) ? (0 - t0) : t0;
+              r785[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 60;
+        end
+        state <= 892;
+      end
+      892: begin  // instr 638 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          r786[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 893;
+      end
+      893: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r786[a0]);
+              t1 = $signed(r785[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r786[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 894;
+      end
+      894: begin  // instr 639 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r786[a1]);
+            t1 = $signed(rom13_lit[a2]);
+            t2 = t0 - t1;
+            r787[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 895;
+      end
+      895: begin  // instr 640 loop
+        k15 = 0;
+        state <= 896;
+      end
+      896: begin  // loop15.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 60; c0 = c0 + 1) begin
+          t0 = $signed(r757[a1]);
+          r788[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 897;
+      end
+      897: begin  // loop15.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r789[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 898;
+      end
+      898: begin  // loop15.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r790[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 899;
+      end
+      899: begin  // loop15.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r787[a1]);
+          r791[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 900;
+      end
+      900: begin  // loop15.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r786[a1]);
+          r792[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 901;
+      end
+      901: begin  // loop15.head
+        if (k15 == 12) state <= 924;
+        else state <= 902;
+      end
+      902: begin  // instr 641 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r790[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r793[a0] = t2[4:0];
+        state <= 903;
+      end
+      903: begin  // instr 642 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r791[a1]);
+            t1 = $signed(r792[a2]);
+            t2 = t0 + t1;
+            r794[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+        end
+        state <= 904;
+      end
+      904: begin  // instr 643 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r794[a1]);
+            t1 = t0 >>> 1;
+            r795[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 905;
+      end
+      905: begin  // instr 644 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r795[a1]);
+              r796[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 906;
+      end
+      906: begin  // instr 645 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r788[a1]);
+              t1 = $signed(r796[a2]);
+              t2 = t0 - t1;
+              r797[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 60;
+          a2 = a2 - 10;
+        end
+        state <= 907;
+      end
+      907: begin  // instr 646 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r797[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r798[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 60;
+        end
+        state <= 908;
+      end
+      908: begin  // instr 647 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          r799[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 909;
+      end
+      909: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r799[a0]);
+              t1 = $signed(r798[a1]);
+              t2 = t0 + t1;
+              r799[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 910;
+      end
+      910: begin  // instr 648 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r788[a1]);
+              t1 = 0 - t0;
+              r800[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 60;
+        end
+        state <= 911;
+      end
+      911: begin  // instr 649 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r795[a1]);
+              r801[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 912;
+      end
+      912: begin  // instr 650 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r800[a1]);
+              t1 = $signed(r801[a2]);
+              t2 = t0 - t1;
+              r802[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 60;
+          a2 = a2 - 10;
+        end
+        state <= 913;
+      end
+      913: begin  // instr 651 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r802[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r803[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 60;
+        end
+        state <= 914;
+      end
+      914: begin  // instr 652 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          r804[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 915;
+      end
+      915: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r804[a0]);
+              t1 = $signed(r803[a1]);
+              t2 = t0 + t1;
+              r804[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 916;
+      end
+      916: begin  // instr 653 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r799[a1]);
+            t1 = $signed(r804[a2]);
+            t2 = t0 + t1;
+            r805[a0] = t2[14:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+        end
+        state <= 917;
+      end
+      917: begin  // instr 654 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r805[a1]);
+            t1 = $signed(r789[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r806[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 918;
+      end
+      918: begin  // instr 655 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = r806[a1];
+            t1 = $signed(r791[a2]);
+            t2 = $signed(r795[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r807[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+          a3 = a3 - 10;
+        end
+        state <= 919;
+      end
+      919: begin  // instr 656 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = r806[a1];
+            t1 = $signed(r795[a2]);
+            t2 = $signed(r792[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r808[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+          a3 = a3 - 10;
+        end
+        state <= 920;
+      end
+      920: begin  // loop15.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r793[a1]);
+          r790[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 921;
+      end
+      921: begin  // loop15.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r807[a1]);
+          r791[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 922;
+      end
+      922: begin  // loop15.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r808[a1]);
+          r792[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 923;
+      end
+      923: begin  // loop15.adv
+        k15 = k15 + 1;
+        state <= 901;
+      end
+      924: begin  // loop15.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r790[a1]);
+          r809[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 925;
+      end
+      925: begin  // loop15.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r791[a1]);
+          r810[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 926;
+      end
+      926: begin  // loop15.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r792[a1]);
+          r811[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 927;
+      end
+      927: begin  // instr 657 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r784[a1]);
+            t1 = $signed(r811[a2]);
+            t2 = t0 - t1;
+            r812[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+        end
+        state <= 928;
+      end
+      928: begin  // instr 658 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r812[a1]);
+            t1 = t0 >>> 1;
+            r813[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 929;
+      end
+      929: begin  // instr 659 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom15_lit[a1]);
+        t1 = t0;
+        r814[a0] = t1[7:0];
+        state <= 930;
+      end
+      930: begin  // instr 660 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r814[a1]);
+            t1 = $signed(r813[a2]);
+            t2 = (t0 < t1) ? t1 : t0;
+            r815[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a2 = a2 - 10;
+        end
+        state <= 931;
+      end
+      931: begin  // instr 661 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom16_lit[a1]);
+        t1 = t0;
+        r816[a0] = t1[7:0];
+        state <= 932;
+      end
+      932: begin  // instr 662 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r816[a1]);
+            t1 = $signed(r815[a2]);
+            t2 = (t1 < t0) ? t1 : t0;
+            r817[a0] = t2[7:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a2 = a2 - 10;
+        end
+        state <= 933;
+      end
+      933: begin  // instr 663 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r624[a1]);
+          t1 = $signed(r725[a2]);
+          t2 = t0 - t1;
+          r818[a0] = t2[5:0];
+          a0 = a0 + 1;
+        end
+        state <= 934;
+      end
+      934: begin  // instr 664 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r818[a1]);
+          t1 = $signed(rom8_lit[a2]);
+          t2 = t0 + t1;
+          r819[a0] = t2[5:0];
+          a0 = a0 + 1;
+        end
+        state <= 935;
+      end
+      935: begin  // instr 665 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r819[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? t1 : t0;
+          r820[a0] = t2[5:0];
+          a0 = a0 + 1;
+        end
+        state <= 936;
+      end
+      936: begin  // instr 666 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r820[a1]);
+          t1 = t0 >>> 1;
+          r821[a0] = t1[4:0];
+          a0 = a0 + 1;
+        end
+        state <= 937;
+      end
+      937: begin  // instr 667 concat
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t0 = $signed(r4[a1]);
+            r822[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 10;
+        end
+        state <= 938;
+      end
+      938: begin  // concat
+        a0 = 15;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r817[a1]);
+            r822[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 15;
+        end
+        state <= 939;
+      end
+      939: begin  // instr 668 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 25; c1 = c1 + 1) begin
+            t0 = $signed(r822[a1]);
+            t1 = t0 << 1;
+            r823[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 25;
+        end
+        state <= 940;
+      end
+      940: begin  // instr 669 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(rom0_c[a1]);
+            t1 = t0;
+            r824[a0] = t1[5:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 941;
+      end
+      941: begin  // instr 670 rev
+        a0 = 0;
+        a1 = 15;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r824[a1]);
+            r825[a0] = t0[5:0];
+            a0 = a0 + 1;
+            a1 = a1 - 1;
+          end
+          a1 = a1 + 32;
+        end
+        state <= 942;
+      end
+      942: begin  // instr 671 reshape
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r825[a1]);
+          r826[a0] = t0[5:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 943;
+      end
+      943: begin  // instr 672 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = a1;
+          r827[a0] = t0[4:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 944;
+      end
+      944: begin  // instr 673 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r827[a1]);
+            r828[a0] = t0[4:0];
+            a0 = a0 + 1;
+          end
+          a1 = a1 + 1;
+        end
+        state <= 945;
+      end
+      945: begin  // instr 674 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 16; c0 = c0 + 1) begin
+          t0 = a1;
+          r829[a0] = t0[4:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 946;
+      end
+      946: begin  // instr 675 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r829[a1]);
+            r830[a0] = t0[4:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 16;
+        end
+        state <= 947;
+      end
+      947: begin  // instr 676 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r828[a1]);
+            t1 = $signed(r830[a2]);
+            t2 = t0 + t1;
+            r831[a0] = t2[5:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 + 1;
+          a2 = a2 - 16;
+        end
+        state <= 948;
+      end
+      948: begin  // instr 677 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r831[a1]);
+            t1 = $signed(rom9_lit[a2]);
+            t2 = (t0 < t1) ? 1 : 0;
+            r832[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 949;
+      end
+      949: begin  // instr 678 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r831[a1]);
+            t1 = $signed(rom25_lit[a2]);
+            t2 = t0 + t1;
+            r834[a0] = t2[6:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 950;
+      end
+      950: begin  // instr 679 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = r832[a1];
+            t1 = $signed(r831[a2]);
+            t2 = $signed(r834[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r835[a0] = t3[5:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+        end
+        state <= 951;
+      end
+      951: begin  // instr 680 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r835[a1]);
+              r836[a0] = t0[5:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+        end
+        state <= 952;
+      end
+      952: begin  // instr 681 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 16; c2 = c2 + 1) begin
+              t9 = 0;
+              t0 = $signed(r836[a2]);
+              t1 = (t0 < 0) ? 0 : t0;
+              t1 = (t1 > 24) ? 24 : t1;
+              t2 = t1;
+              t9 = t9 + t2;
+              t3 = $signed(r823[a1 + t9]);
+              r837[a0] = t3[8:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a1 = a1 + 25;
+          a2 = a2 - 160;
+        end
+        state <= 953;
+      end
+      953: begin  // instr 682 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r837[a1]);
+                r838[a0] = t0[8:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 160;
+          end
+        end
+        state <= 954;
+      end
+      954: begin  // instr 683 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r826[a1]);
+                t1 = $signed(r838[a2]);
+                t2 = t0 + t1;
+                r839[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+                a2 = a2 + 1;
+              end
+              a1 = a1 - 16;
+            end
+            a2 = a2 - 160;
+          end
+          a1 = a1 + 16;
+        end
+        state <= 955;
+      end
+      955: begin  // instr 684 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r840[a0] = t1[9:0];
+        state <= 956;
+      end
+      956: begin  // instr 685 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r840[a1]);
+                t1 = $signed(r839[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r841[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 160;
+          end
+          a2 = a2 + 160;
+        end
+        state <= 957;
+      end
+      957: begin  // instr 686 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r842[a0] = t1[9:0];
+        state <= 958;
+      end
+      958: begin  // instr 687 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r842[a1]);
+                t1 = $signed(r841[a2]);
+                t2 = (t1 < t0) ? t1 : t0;
+                r843[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 160;
+          end
+          a2 = a2 + 160;
+        end
+        state <= 959;
+      end
+      959: begin  // instr 688 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r826[a1]);
+                t1 = $signed(r838[a2]);
+                t2 = t0 - t1;
+                r844[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+                a2 = a2 + 1;
+              end
+              a1 = a1 - 16;
+            end
+            a2 = a2 - 160;
+          end
+          a1 = a1 + 16;
+        end
+        state <= 960;
+      end
+      960: begin  // instr 689 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r845[a0] = t1[9:0];
+        state <= 961;
+      end
+      961: begin  // instr 690 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r845[a1]);
+                t1 = $signed(r844[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r846[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 160;
+          end
+          a2 = a2 + 160;
+        end
+        state <= 962;
+      end
+      962: begin  // instr 691 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r847[a0] = t1[9:0];
+        state <= 963;
+      end
+      963: begin  // instr 692 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r847[a1]);
+                t1 = $signed(r846[a2]);
+                t2 = (t1 < t0) ? t1 : t0;
+                r848[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 160;
+          end
+          a2 = a2 + 160;
+        end
+        state <= 964;
+      end
+      964: begin  // instr 693 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r843[a1]);
+                t1 = (t0 < 0) ? (0 - t0) : t0;
+                r849[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 965;
+      end
+      965: begin  // instr 694 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          r850[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 966;
+      end
+      966: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r850[a0]);
+                t1 = $signed(r849[a1]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r850[a0] = t2[9:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 967;
+      end
+      967: begin  // instr 695 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r850[a1]);
+              t1 = $signed(rom13_lit[a2]);
+              t2 = t0 - t1;
+              r851[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 968;
+      end
+      968: begin  // instr 696 loop
+        k16 = 0;
+        state <= 969;
+      end
+      969: begin  // loop16.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r843[a1]);
+          r852[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 970;
+      end
+      970: begin  // loop16.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r853[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 971;
+      end
+      971: begin  // loop16.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r854[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 972;
+      end
+      972: begin  // loop16.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          t0 = $signed(r851[a1]);
+          r855[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 973;
+      end
+      973: begin  // loop16.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          t0 = $signed(r850[a1]);
+          r856[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 974;
+      end
+      974: begin  // loop16.head
+        if (k16 == 12) state <= 997;
+        else state <= 975;
+      end
+      975: begin  // instr 697 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r854[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r857[a0] = t2[4:0];
+        state <= 976;
+      end
+      976: begin  // instr 698 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r855[a1]);
+              t1 = $signed(r856[a2]);
+              t2 = t0 + t1;
+              r858[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 10;
+            a2 = a2 - 10;
+          end
+          a1 = a1 + 10;
+          a2 = a2 + 10;
+        end
+        state <= 977;
+      end
+      977: begin  // instr 699 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r858[a1]);
+              t1 = t0 >>> 1;
+              r859[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 978;
+      end
+      978: begin  // instr 700 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r859[a1]);
+                r860[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 979;
+      end
+      979: begin  // instr 701 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r852[a1]);
+                t1 = $signed(r860[a2]);
+                t2 = t0 - t1;
+                r861[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 10;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 10;
+        end
+        state <= 980;
+      end
+      980: begin  // instr 702 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r861[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r862[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 981;
+      end
+      981: begin  // instr 703 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          r863[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 982;
+      end
+      982: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r863[a0]);
+                t1 = $signed(r862[a1]);
+                t2 = t0 + t1;
+                r863[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 983;
+      end
+      983: begin  // instr 704 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r852[a1]);
+                t1 = 0 - t0;
+                r864[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 984;
+      end
+      984: begin  // instr 705 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r859[a1]);
+                r865[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 985;
+      end
+      985: begin  // instr 706 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r864[a1]);
+                t1 = $signed(r865[a2]);
+                t2 = t0 - t1;
+                r866[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 10;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 10;
+        end
+        state <= 986;
+      end
+      986: begin  // instr 707 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r866[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r867[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 987;
+      end
+      987: begin  // instr 708 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          r868[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 988;
+      end
+      988: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r868[a0]);
+                t1 = $signed(r867[a1]);
+                t2 = t0 + t1;
+                r868[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 989;
+      end
+      989: begin  // instr 709 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r863[a1]);
+              t1 = $signed(r868[a2]);
+              t2 = t0 + t1;
+              r869[a0] = t2[15:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 10;
+            a2 = a2 - 10;
+          end
+          a1 = a1 + 10;
+          a2 = a2 + 10;
+        end
+        state <= 990;
+      end
+      990: begin  // instr 710 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r869[a1]);
+              t1 = $signed(r853[a2]);
+              t2 = (t0 > t1) ? 1 : 0;
+              r870[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 991;
+      end
+      991: begin  // instr 711 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = r870[a1];
+              t1 = $signed(r855[a2]);
+              t2 = $signed(r859[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r871[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 10;
+            a2 = a2 - 10;
+            a3 = a3 - 10;
+          end
+          a1 = a1 + 10;
+          a2 = a2 + 10;
+          a3 = a3 + 10;
+        end
+        state <= 992;
+      end
+      992: begin  // instr 712 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = r870[a1];
+              t1 = $signed(r859[a2]);
+              t2 = $signed(r856[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r872[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 10;
+            a2 = a2 - 10;
+            a3 = a3 - 10;
+          end
+          a1 = a1 + 10;
+          a2 = a2 + 10;
+          a3 = a3 + 10;
+        end
+        state <= 993;
+      end
+      993: begin  // loop16.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r857[a1]);
+          r854[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 994;
+      end
+      994: begin  // loop16.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          t0 = $signed(r871[a1]);
+          r855[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 995;
+      end
+      995: begin  // loop16.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          t0 = $signed(r872[a1]);
+          r856[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 996;
+      end
+      996: begin  // loop16.adv
+        k16 = k16 + 1;
+        state <= 974;
+      end
+      997: begin  // loop16.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r854[a1]);
+          r873[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 998;
+      end
+      998: begin  // loop16.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          t0 = $signed(r855[a1]);
+          r874[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 999;
+      end
+      999: begin  // loop16.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          t0 = $signed(r856[a1]);
+          r875[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1000;
+      end
+      1000: begin  // instr 713 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r848[a1]);
+                t1 = (t0 < 0) ? (0 - t0) : t0;
+                r876[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 1001;
+      end
+      1001: begin  // instr 714 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          r877[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 1002;
+      end
+      1002: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r877[a0]);
+                t1 = $signed(r876[a1]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r877[a0] = t2[9:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1003;
+      end
+      1003: begin  // instr 715 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r877[a1]);
+              t1 = $signed(rom13_lit[a2]);
+              t2 = t0 - t1;
+              r878[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 1004;
+      end
+      1004: begin  // instr 716 loop
+        k17 = 0;
+        state <= 1005;
+      end
+      1005: begin  // loop17.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 800; c0 = c0 + 1) begin
+          t0 = $signed(r848[a1]);
+          r879[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1006;
+      end
+      1006: begin  // loop17.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r880[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1007;
+      end
+      1007: begin  // loop17.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r881[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1008;
+      end
+      1008: begin  // loop17.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          t0 = $signed(r878[a1]);
+          r882[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1009;
+      end
+      1009: begin  // loop17.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          t0 = $signed(r877[a1]);
+          r883[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1010;
+      end
+      1010: begin  // loop17.head
+        if (k17 == 12) state <= 1033;
+        else state <= 1011;
+      end
+      1011: begin  // instr 717 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r881[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r884[a0] = t2[4:0];
+        state <= 1012;
+      end
+      1012: begin  // instr 718 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r882[a1]);
+              t1 = $signed(r883[a2]);
+              t2 = t0 + t1;
+              r885[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 10;
+            a2 = a2 - 10;
+          end
+          a1 = a1 + 10;
+          a2 = a2 + 10;
+        end
+        state <= 1013;
+      end
+      1013: begin  // instr 719 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r885[a1]);
+              t1 = t0 >>> 1;
+              r886[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 1014;
+      end
+      1014: begin  // instr 720 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r886[a1]);
+                r887[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 1015;
+      end
+      1015: begin  // instr 721 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r879[a1]);
+                t1 = $signed(r887[a2]);
+                t2 = t0 - t1;
+                r888[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 10;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 10;
+        end
+        state <= 1016;
+      end
+      1016: begin  // instr 722 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r888[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r889[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 1017;
+      end
+      1017: begin  // instr 723 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          r890[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 1018;
+      end
+      1018: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r890[a0]);
+                t1 = $signed(r889[a1]);
+                t2 = t0 + t1;
+                r890[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1019;
+      end
+      1019: begin  // instr 724 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r879[a1]);
+                t1 = 0 - t0;
+                r891[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 1020;
+      end
+      1020: begin  // instr 725 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r886[a1]);
+                r892[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 1021;
+      end
+      1021: begin  // instr 726 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r891[a1]);
+                t1 = $signed(r892[a2]);
+                t2 = t0 - t1;
+                r893[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 160;
+            a2 = a2 - 10;
+          end
+          a1 = a1 + 160;
+          a2 = a2 + 10;
+        end
+        state <= 1022;
+      end
+      1022: begin  // instr 727 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r893[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r894[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 160;
+          end
+          a1 = a1 + 160;
+        end
+        state <= 1023;
+      end
+      1023: begin  // instr 728 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          r895[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 1024;
+      end
+      1024: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r895[a0]);
+                t1 = $signed(r894[a1]);
+                t2 = t0 + t1;
+                r895[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1025;
+      end
+      1025: begin  // instr 729 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r890[a1]);
+              t1 = $signed(r895[a2]);
+              t2 = t0 + t1;
+              r896[a0] = t2[15:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 10;
+            a2 = a2 - 10;
+          end
+          a1 = a1 + 10;
+          a2 = a2 + 10;
+        end
+        state <= 1026;
+      end
+      1026: begin  // instr 730 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r896[a1]);
+              t1 = $signed(r880[a2]);
+              t2 = (t0 > t1) ? 1 : 0;
+              r897[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 1027;
+      end
+      1027: begin  // instr 731 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = r897[a1];
+              t1 = $signed(r882[a2]);
+              t2 = $signed(r886[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r898[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 10;
+            a2 = a2 - 10;
+            a3 = a3 - 10;
+          end
+          a1 = a1 + 10;
+          a2 = a2 + 10;
+          a3 = a3 + 10;
+        end
+        state <= 1028;
+      end
+      1028: begin  // instr 732 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = r897[a1];
+              t1 = $signed(r886[a2]);
+              t2 = $signed(r883[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r899[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 10;
+            a2 = a2 - 10;
+            a3 = a3 - 10;
+          end
+          a1 = a1 + 10;
+          a2 = a2 + 10;
+          a3 = a3 + 10;
+        end
+        state <= 1029;
+      end
+      1029: begin  // loop17.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r884[a1]);
+          r881[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1030;
+      end
+      1030: begin  // loop17.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          t0 = $signed(r898[a1]);
+          r882[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1031;
+      end
+      1031: begin  // loop17.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          t0 = $signed(r899[a1]);
+          r883[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1032;
+      end
+      1032: begin  // loop17.adv
+        k17 = k17 + 1;
+        state <= 1010;
+      end
+      1033: begin  // loop17.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r881[a1]);
+          r900[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1034;
+      end
+      1034: begin  // loop17.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          t0 = $signed(r882[a1]);
+          r901[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1035;
+      end
+      1035: begin  // loop17.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 50; c0 = c0 + 1) begin
+          t0 = $signed(r883[a1]);
+          r902[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1036;
+      end
+      1036: begin  // instr 733 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r875[a1]);
+              t1 = $signed(r902[a2]);
+              t2 = t0 - t1;
+              r903[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 10;
+            a2 = a2 - 10;
+          end
+          a1 = a1 + 10;
+          a2 = a2 + 10;
+        end
+        state <= 1037;
+      end
+      1037: begin  // instr 734 transpose
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r903[a1]);
+              r904[a0] = t0[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 40;
+        end
+        state <= 1038;
+      end
+      1038: begin  // instr 735 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r821[a1]);
+            r905[a0] = t0[4:0];
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1039;
+      end
+      1039: begin  // instr 736 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r904[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r906[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 50;
+        end
+        state <= 1040;
+      end
+      1040: begin  // instr 737 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = a1;
+              r907[a0] = t0[4:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+        end
+        state <= 1041;
+      end
+      1041: begin  // instr 738 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r905[a1]);
+              r908[a0] = t0[4:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1042;
+      end
+      1042: begin  // instr 739 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r907[a1]);
+              t1 = $signed(r908[a2]);
+              t2 = (t0 < t1) ? 1 : 0;
+              r909[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 50;
+        end
+        state <= 1043;
+      end
+      1043: begin  // instr 740 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom9_lit[a1]);
+        t1 = t0;
+        r910[a0] = t1[0:0];
+        state <= 1044;
+      end
+      1044: begin  // instr 741 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r910[a1]);
+              r911[a0] = t0[0:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1045;
+      end
+      1045: begin  // instr 742 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = r909[a1];
+              t1 = $signed(r911[a2]);
+              t2 = $signed(r906[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r912[a0] = t3[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+          end
+          a1 = a1 - 50;
+          a2 = a2 - 50;
+          a3 = a3 - 50;
+        end
+        state <= 1046;
+      end
+      1046: begin  // instr 743 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          r913[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 1047;
+      end
+      1047: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r913[a0]);
+              t1 = $signed(r912[a1]);
+              t2 = t0 + t1;
+              r913[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1048;
+      end
+      1048: begin  // instr 744 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r913[a1]);
+            t1 = t0 << 4;
+            r915[a0] = t1[17:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1049;
+      end
+      1049: begin  // instr 745 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r821[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? 1 : 0;
+          r916[a0] = (t2 != 0);
+          a0 = a0 + 1;
+        end
+        state <= 1050;
+      end
+      1050: begin  // instr 746 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r821[a1]);
+          t1 = $signed(rom25_lit[a2]);
+          t2 = t0 + t1;
+          r917[a0] = t2[6:0];
+          a0 = a0 + 1;
+        end
+        state <= 1051;
+      end
+      1051: begin  // instr 747 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = r916[a1];
+          t1 = $signed(r821[a2]);
+          t2 = $signed(r917[a3]);
+          t3 = (t0 != 0) ? t2 : t1;
+          r918[a0] = t3[4:0];
+          a0 = a0 + 1;
+        end
+        state <= 1052;
+      end
+      1052: begin  // instr 748 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r918[a1]);
+            r919[a0] = t0[4:0];
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1053;
+      end
+      1053: begin  // instr 749 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t9 = 0;
+            t0 = $signed(r919[a2]);
+            t1 = (t0 < 0) ? 0 : t0;
+            t1 = (t1 > 10) ? 10 : t1;
+            t2 = t1;
+            t9 = t9 + t2;
+            t3 = $signed(r822[a1 + t9]);
+            r920[a0] = t3[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 + 10;
+          a2 = a2 + 1;
+        end
+        state <= 1054;
+      end
+      1054: begin  // instr 750 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r10[a1]);
+          t1 = $signed(r821[a2]);
+          t2 = t0 + t1;
+          r921[a0] = t2;
+          a0 = a0 + 1;
+        end
+        state <= 1055;
+      end
+      1055: begin  // instr 751 and
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r10[a1]);
+          t1 = $signed(rom8_lit[a2]);
+          t2 = t0 & t1;
+          r922[a0] = t2[1:0];
+          a0 = a0 + 1;
+        end
+        state <= 1056;
+      end
+      1056: begin  // instr 752 slice
+        a0 = 0;
+        a1 = 10;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t0 = $signed(r822[a1]);
+            r923[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 + 10;
+        end
+        state <= 1057;
+      end
+      1057: begin  // instr 753 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t0 = $signed(r923[a1]);
+            t1 = t0 << 1;
+            r924[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 15;
+        end
+        state <= 1058;
+      end
+      1058: begin  // instr 754 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom9_lit[a1]);
+        t1 = t0;
+        r925[a0] = t1[0:0];
+        state <= 1059;
+      end
+      1059: begin  // instr 755 pad
+        t0 = $signed(r925[0]);
+        a0 = 0;
+        for (c0 = 0; c0 < 16; c0 = c0 + 1) begin
+          r926[a0] = t0[8:0];
+          a0 = a0 + 1;
+        end
+        state <= 1060;
+      end
+      1060: begin  // pad.scatter
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t1 = $signed(r924[a1]);
+            r926[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 1;
+        end
+        state <= 1061;
+      end
+      1061: begin  // instr 756 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = a1;
+          r927[a0] = t0[3:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1062;
+      end
+      1062: begin  // instr 757 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r927[a1]);
+          t1 = t0 << 1;
+          r928[a0] = t1[4:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1063;
+      end
+      1063: begin  // instr 758 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r928[a1]);
+            r929[a0] = t0[4:0];
+            a0 = a0 + 1;
+          end
+          a1 = a1 + 1;
+        end
+        state <= 1064;
+      end
+      1064: begin  // instr 759 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 6; c0 = c0 + 1) begin
+          t0 = a1;
+          r930[a0] = t0[3:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1065;
+      end
+      1065: begin  // instr 760 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 6; c1 = c1 + 1) begin
+            t0 = $signed(r930[a1]);
+            r931[a0] = t0[3:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 6;
+        end
+        state <= 1066;
+      end
+      1066: begin  // instr 761 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 6; c1 = c1 + 1) begin
+            t0 = $signed(r929[a1]);
+            t1 = $signed(r931[a2]);
+            t2 = t0 + t1;
+            r932[a0] = t2[4:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 + 1;
+          a2 = a2 - 6;
+        end
+        state <= 1067;
+      end
+      1067: begin  // instr 762 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r932[a1]);
+              r933[a0] = t0[4:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1068;
+      end
+      1068: begin  // instr 763 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r922[a1]);
+              r934[a0] = t0[1:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1069;
+      end
+      1069: begin  // instr 764 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r934[a1]);
+              t1 = $signed(r933[a2]);
+              t2 = t0 + t1;
+              r935[a0] = t2[4:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 30;
+        end
+        state <= 1070;
+      end
+      1070: begin  // instr 765 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r935[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? 1 : 0;
+              r936[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1071;
+      end
+      1071: begin  // instr 766 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r935[a1]);
+              t1 = $signed(rom27_lit[a2]);
+              t2 = t0 + t1;
+              r938[a0] = t2[5:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1072;
+      end
+      1072: begin  // instr 767 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = r936[a1];
+              t1 = $signed(r935[a2]);
+              t2 = $signed(r938[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r939[a0] = t3[4:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+          a3 = a3 - 30;
+        end
+        state <= 1073;
+      end
+      1073: begin  // instr 768 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r939[a1]);
+                r940[a0] = t0[4:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1074;
+      end
+      1074: begin  // instr 769 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t9 = 0;
+              t0 = $signed(r940[a2]);
+              t1 = (t0 < 0) ? 0 : t0;
+              t1 = (t1 > 15) ? 15 : t1;
+              t2 = t1;
+              t9 = t9 + t2;
+              t3 = $signed(r926[a1 + t9]);
+              r941[a0] = t3[8:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a1 = a1 + 16;
+        end
+        state <= 1075;
+      end
+      1075: begin  // instr 770 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 6; c0 = c0 + 1) begin
+          t0 = $signed(rom1_c[a1]);
+          t1 = t0;
+          r942[a0] = t1[6:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1076;
+      end
+      1076: begin  // instr 771 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r942[a1]);
+              r943[a0] = t0[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 6;
+          end
+        end
+        state <= 1077;
+      end
+      1077: begin  // instr 772 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r943[a1]);
+              t1 = $signed(r941[a2]);
+              t2 = t0 + t1;
+              r944[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 6;
+          end
+          a2 = a2 - 30;
+        end
+        state <= 1078;
+      end
+      1078: begin  // instr 773 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r945[a0] = t1[9:0];
+        state <= 1079;
+      end
+      1079: begin  // instr 774 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r945[a1]);
+              t1 = $signed(r944[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r946[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 30;
+        end
+        state <= 1080;
+      end
+      1080: begin  // instr 775 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r947[a0] = t1[9:0];
+        state <= 1081;
+      end
+      1081: begin  // instr 776 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r947[a1]);
+              t1 = $signed(r946[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r948[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 30;
+        end
+        state <= 1082;
+      end
+      1082: begin  // instr 777 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r942[a1]);
+              r949[a0] = t0[6:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 6;
+          end
+        end
+        state <= 1083;
+      end
+      1083: begin  // instr 778 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r949[a1]);
+              t1 = $signed(r941[a2]);
+              t2 = t0 - t1;
+              r950[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 6;
+          end
+          a2 = a2 - 30;
+        end
+        state <= 1084;
+      end
+      1084: begin  // instr 779 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r951[a0] = t1[9:0];
+        state <= 1085;
+      end
+      1085: begin  // instr 780 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r951[a1]);
+              t1 = $signed(r950[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r952[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 30;
+        end
+        state <= 1086;
+      end
+      1086: begin  // instr 781 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r953[a0] = t1[9:0];
+        state <= 1087;
+      end
+      1087: begin  // instr 782 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r953[a1]);
+              t1 = $signed(r952[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r954[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 30;
+        end
+        state <= 1088;
+      end
+      1088: begin  // instr 783 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r948[a1]);
+              t1 = (t0 < 0) ? (0 - t0) : t0;
+              r955[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1089;
+      end
+      1089: begin  // instr 784 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          r956[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 1090;
+      end
+      1090: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r956[a0]);
+              t1 = $signed(r955[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r956[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1091;
+      end
+      1091: begin  // instr 785 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r956[a1]);
+            t1 = $signed(rom13_lit[a2]);
+            t2 = t0 - t1;
+            r957[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1092;
+      end
+      1092: begin  // instr 786 loop
+        k18 = 0;
+        state <= 1093;
+      end
+      1093: begin  // loop18.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(r948[a1]);
+          r958[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1094;
+      end
+      1094: begin  // loop18.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r959[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1095;
+      end
+      1095: begin  // loop18.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r960[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1096;
+      end
+      1096: begin  // loop18.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r957[a1]);
+          r961[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1097;
+      end
+      1097: begin  // loop18.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r956[a1]);
+          r962[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1098;
+      end
+      1098: begin  // loop18.head
+        if (k18 == 12) state <= 1121;
+        else state <= 1099;
+      end
+      1099: begin  // instr 787 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r960[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r963[a0] = t2[4:0];
+        state <= 1100;
+      end
+      1100: begin  // instr 788 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r961[a1]);
+            t1 = $signed(r962[a2]);
+            t2 = t0 + t1;
+            r964[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 5;
+          a2 = a2 - 5;
+        end
+        state <= 1101;
+      end
+      1101: begin  // instr 789 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r964[a1]);
+            t1 = t0 >>> 1;
+            r965[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1102;
+      end
+      1102: begin  // instr 790 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r965[a1]);
+              r966[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1103;
+      end
+      1103: begin  // instr 791 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r958[a1]);
+              t1 = $signed(r966[a2]);
+              t2 = t0 - t1;
+              r967[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 5;
+        end
+        state <= 1104;
+      end
+      1104: begin  // instr 792 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r967[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r968[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1105;
+      end
+      1105: begin  // instr 793 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          r969[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 1106;
+      end
+      1106: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r969[a0]);
+              t1 = $signed(r968[a1]);
+              t2 = t0 + t1;
+              r969[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1107;
+      end
+      1107: begin  // instr 794 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r958[a1]);
+              t1 = 0 - t0;
+              r970[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1108;
+      end
+      1108: begin  // instr 795 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r965[a1]);
+              r971[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1109;
+      end
+      1109: begin  // instr 796 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r970[a1]);
+              t1 = $signed(r971[a2]);
+              t2 = t0 - t1;
+              r972[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 5;
+        end
+        state <= 1110;
+      end
+      1110: begin  // instr 797 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r972[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r973[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1111;
+      end
+      1111: begin  // instr 798 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          r974[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 1112;
+      end
+      1112: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r974[a0]);
+              t1 = $signed(r973[a1]);
+              t2 = t0 + t1;
+              r974[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1113;
+      end
+      1113: begin  // instr 799 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r969[a1]);
+            t1 = $signed(r974[a2]);
+            t2 = t0 + t1;
+            r975[a0] = t2[14:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 5;
+          a2 = a2 - 5;
+        end
+        state <= 1114;
+      end
+      1114: begin  // instr 800 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r975[a1]);
+            t1 = $signed(r959[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r976[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1115;
+      end
+      1115: begin  // instr 801 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = r976[a1];
+            t1 = $signed(r961[a2]);
+            t2 = $signed(r965[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r977[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 5;
+          a2 = a2 - 5;
+          a3 = a3 - 5;
+        end
+        state <= 1116;
+      end
+      1116: begin  // instr 802 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = r976[a1];
+            t1 = $signed(r965[a2]);
+            t2 = $signed(r962[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r978[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 5;
+          a2 = a2 - 5;
+          a3 = a3 - 5;
+        end
+        state <= 1117;
+      end
+      1117: begin  // loop18.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r963[a1]);
+          r960[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1118;
+      end
+      1118: begin  // loop18.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r977[a1]);
+          r961[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1119;
+      end
+      1119: begin  // loop18.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r978[a1]);
+          r962[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1120;
+      end
+      1120: begin  // loop18.adv
+        k18 = k18 + 1;
+        state <= 1098;
+      end
+      1121: begin  // loop18.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r960[a1]);
+          r979[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1122;
+      end
+      1122: begin  // loop18.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r961[a1]);
+          r980[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1123;
+      end
+      1123: begin  // loop18.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r962[a1]);
+          r981[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1124;
+      end
+      1124: begin  // instr 803 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r954[a1]);
+              t1 = (t0 < 0) ? (0 - t0) : t0;
+              r982[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1125;
+      end
+      1125: begin  // instr 804 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          r983[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 1126;
+      end
+      1126: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r983[a0]);
+              t1 = $signed(r982[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r983[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1127;
+      end
+      1127: begin  // instr 805 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r983[a1]);
+            t1 = $signed(rom13_lit[a2]);
+            t2 = t0 - t1;
+            r984[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1128;
+      end
+      1128: begin  // instr 806 loop
+        k19 = 0;
+        state <= 1129;
+      end
+      1129: begin  // loop19.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(r954[a1]);
+          r985[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1130;
+      end
+      1130: begin  // loop19.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r986[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1131;
+      end
+      1131: begin  // loop19.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r987[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1132;
+      end
+      1132: begin  // loop19.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r984[a1]);
+          r988[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1133;
+      end
+      1133: begin  // loop19.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r983[a1]);
+          r989[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1134;
+      end
+      1134: begin  // loop19.head
+        if (k19 == 12) state <= 1157;
+        else state <= 1135;
+      end
+      1135: begin  // instr 807 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r987[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r990[a0] = t2[4:0];
+        state <= 1136;
+      end
+      1136: begin  // instr 808 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r988[a1]);
+            t1 = $signed(r989[a2]);
+            t2 = t0 + t1;
+            r991[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 5;
+          a2 = a2 - 5;
+        end
+        state <= 1137;
+      end
+      1137: begin  // instr 809 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r991[a1]);
+            t1 = t0 >>> 1;
+            r992[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1138;
+      end
+      1138: begin  // instr 810 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r992[a1]);
+              r993[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1139;
+      end
+      1139: begin  // instr 811 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r985[a1]);
+              t1 = $signed(r993[a2]);
+              t2 = t0 - t1;
+              r994[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 5;
+        end
+        state <= 1140;
+      end
+      1140: begin  // instr 812 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r994[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r995[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1141;
+      end
+      1141: begin  // instr 813 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          r996[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 1142;
+      end
+      1142: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r996[a0]);
+              t1 = $signed(r995[a1]);
+              t2 = t0 + t1;
+              r996[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1143;
+      end
+      1143: begin  // instr 814 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r985[a1]);
+              t1 = 0 - t0;
+              r997[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1144;
+      end
+      1144: begin  // instr 815 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r992[a1]);
+              r998[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1145;
+      end
+      1145: begin  // instr 816 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r997[a1]);
+              t1 = $signed(r998[a2]);
+              t2 = t0 - t1;
+              r999[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 5;
+        end
+        state <= 1146;
+      end
+      1146: begin  // instr 817 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r999[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r1000[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1147;
+      end
+      1147: begin  // instr 818 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          r1001[a0] = t0[13:0];
+          a0 = a0 + 1;
+        end
+        state <= 1148;
+      end
+      1148: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 6; c2 = c2 + 1) begin
+              t0 = $signed(r1001[a0]);
+              t1 = $signed(r1000[a1]);
+              t2 = t0 + t1;
+              r1001[a0] = t2[13:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1149;
+      end
+      1149: begin  // instr 819 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r996[a1]);
+            t1 = $signed(r1001[a2]);
+            t2 = t0 + t1;
+            r1002[a0] = t2[14:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 5;
+          a2 = a2 - 5;
+        end
+        state <= 1150;
+      end
+      1150: begin  // instr 820 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r1002[a1]);
+            t1 = $signed(r986[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r1003[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1151;
+      end
+      1151: begin  // instr 821 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = r1003[a1];
+            t1 = $signed(r988[a2]);
+            t2 = $signed(r992[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1004[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 5;
+          a2 = a2 - 5;
+          a3 = a3 - 5;
+        end
+        state <= 1152;
+      end
+      1152: begin  // instr 822 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = r1003[a1];
+            t1 = $signed(r992[a2]);
+            t2 = $signed(r989[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1005[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 5;
+          a2 = a2 - 5;
+          a3 = a3 - 5;
+        end
+        state <= 1153;
+      end
+      1153: begin  // loop19.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r990[a1]);
+          r987[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1154;
+      end
+      1154: begin  // loop19.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r1004[a1]);
+          r988[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1155;
+      end
+      1155: begin  // loop19.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r1005[a1]);
+          r989[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1156;
+      end
+      1156: begin  // loop19.adv
+        k19 = k19 + 1;
+        state <= 1134;
+      end
+      1157: begin  // loop19.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r987[a1]);
+          r1006[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1158;
+      end
+      1158: begin  // loop19.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r988[a1]);
+          r1007[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1159;
+      end
+      1159: begin  // loop19.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = $signed(r989[a1]);
+          r1008[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1160;
+      end
+      1160: begin  // instr 823 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r981[a1]);
+            t1 = $signed(r1008[a2]);
+            t2 = t0 - t1;
+            r1009[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 5;
+          a2 = a2 - 5;
+        end
+        state <= 1161;
+      end
+      1161: begin  // instr 824 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r1009[a1]);
+            t1 = t0 >>> 1;
+            r1010[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1162;
+      end
+      1162: begin  // instr 825 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom15_lit[a1]);
+        t1 = t0;
+        r1011[a0] = t1[7:0];
+        state <= 1163;
+      end
+      1163: begin  // instr 826 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r1011[a1]);
+            t1 = $signed(r1010[a2]);
+            t2 = (t0 < t1) ? t1 : t0;
+            r1012[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a2 = a2 - 5;
+        end
+        state <= 1164;
+      end
+      1164: begin  // instr 827 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom16_lit[a1]);
+        t1 = t0;
+        r1013[a0] = t1[7:0];
+        state <= 1165;
+      end
+      1165: begin  // instr 828 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r1013[a1]);
+            t1 = $signed(r1012[a2]);
+            t2 = (t1 < t0) ? t1 : t0;
+            r1014[a0] = t2[7:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a2 = a2 - 5;
+        end
+        state <= 1166;
+      end
+      1166: begin  // instr 829 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r821[a1]);
+          t1 = $signed(r922[a2]);
+          t2 = t0 - t1;
+          r1015[a0] = t2[4:0];
+          a0 = a0 + 1;
+        end
+        state <= 1167;
+      end
+      1167: begin  // instr 830 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1015[a1]);
+          t1 = $signed(rom8_lit[a2]);
+          t2 = t0 + t1;
+          r1016[a0] = t2[4:0];
+          a0 = a0 + 1;
+        end
+        state <= 1168;
+      end
+      1168: begin  // instr 831 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1016[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? t1 : t0;
+          r1017[a0] = t2[4:0];
+          a0 = a0 + 1;
+        end
+        state <= 1169;
+      end
+      1169: begin  // instr 832 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1017[a1]);
+          t1 = t0 >>> 1;
+          r1018[a0] = t1[3:0];
+          a0 = a0 + 1;
+        end
+        state <= 1170;
+      end
+      1170: begin  // instr 833 concat
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t0 = $signed(r5[a1]);
+            r1019[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 5;
+        end
+        state <= 1171;
+      end
+      1171: begin  // concat
+        a0 = 15;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r1014[a1]);
+            r1019[a0] = t0[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 15;
+        end
+        state <= 1172;
+      end
+      1172: begin  // instr 834 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 20; c1 = c1 + 1) begin
+            t0 = $signed(r1019[a1]);
+            t1 = t0 << 1;
+            r1020[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 20;
+        end
+        state <= 1173;
+      end
+      1173: begin  // instr 835 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(rom0_c[a1]);
+            t1 = t0;
+            r1021[a0] = t1[5:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 1174;
+      end
+      1174: begin  // instr 836 rev
+        a0 = 0;
+        a1 = 15;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r1021[a1]);
+            r1022[a0] = t0[5:0];
+            a0 = a0 + 1;
+            a1 = a1 - 1;
+          end
+          a1 = a1 + 32;
+        end
+        state <= 1175;
+      end
+      1175: begin  // instr 837 reshape
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 80; c0 = c0 + 1) begin
+          t0 = $signed(r1022[a1]);
+          r1023[a0] = t0[5:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1176;
+      end
+      1176: begin  // instr 838 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          t0 = a1;
+          r1024[a0] = t0[3:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1177;
+      end
+      1177: begin  // instr 839 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r1024[a1]);
+            r1025[a0] = t0[3:0];
+            a0 = a0 + 1;
+          end
+          a1 = a1 + 1;
+        end
+        state <= 1178;
+      end
+      1178: begin  // instr 840 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 16; c0 = c0 + 1) begin
+          t0 = a1;
+          r1026[a0] = t0[4:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1179;
+      end
+      1179: begin  // instr 841 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r1026[a1]);
+            r1027[a0] = t0[4:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 16;
+        end
+        state <= 1180;
+      end
+      1180: begin  // instr 842 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r1025[a1]);
+            t1 = $signed(r1027[a2]);
+            t2 = t0 + t1;
+            r1028[a0] = t2[5:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 + 1;
+          a2 = a2 - 16;
+        end
+        state <= 1181;
+      end
+      1181: begin  // instr 843 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r1028[a1]);
+            t1 = $signed(rom9_lit[a2]);
+            t2 = (t0 < t1) ? 1 : 0;
+            r1029[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 1182;
+      end
+      1182: begin  // instr 844 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = $signed(r1028[a1]);
+            t1 = $signed(rom28_lit[a2]);
+            t2 = t0 + t1;
+            r1031[a0] = t2[6:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 1183;
+      end
+      1183: begin  // instr 845 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            t0 = r1029[a1];
+            t1 = $signed(r1028[a2]);
+            t2 = $signed(r1031[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1032[a0] = t3[5:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+        end
+        state <= 1184;
+      end
+      1184: begin  // instr 846 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 16; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r1032[a1]);
+              r1033[a0] = t0[5:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+        end
+        state <= 1185;
+      end
+      1185: begin  // instr 847 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 16; c2 = c2 + 1) begin
+              t9 = 0;
+              t0 = $signed(r1033[a2]);
+              t1 = (t0 < 0) ? 0 : t0;
+              t1 = (t1 > 19) ? 19 : t1;
+              t2 = t1;
+              t9 = t9 + t2;
+              t3 = $signed(r1020[a1 + t9]);
+              r1034[a0] = t3[8:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a1 = a1 + 20;
+          a2 = a2 - 80;
+        end
+        state <= 1186;
+      end
+      1186: begin  // instr 848 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1034[a1]);
+                r1035[a0] = t0[8:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 80;
+          end
+        end
+        state <= 1187;
+      end
+      1187: begin  // instr 849 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1023[a1]);
+                t1 = $signed(r1035[a2]);
+                t2 = t0 + t1;
+                r1036[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+                a2 = a2 + 1;
+              end
+              a1 = a1 - 16;
+            end
+            a2 = a2 - 80;
+          end
+          a1 = a1 + 16;
+        end
+        state <= 1188;
+      end
+      1188: begin  // instr 850 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r1037[a0] = t1[9:0];
+        state <= 1189;
+      end
+      1189: begin  // instr 851 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1037[a1]);
+                t1 = $signed(r1036[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r1038[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 80;
+          end
+          a2 = a2 + 80;
+        end
+        state <= 1190;
+      end
+      1190: begin  // instr 852 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r1039[a0] = t1[9:0];
+        state <= 1191;
+      end
+      1191: begin  // instr 853 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1039[a1]);
+                t1 = $signed(r1038[a2]);
+                t2 = (t1 < t0) ? t1 : t0;
+                r1040[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 80;
+          end
+          a2 = a2 + 80;
+        end
+        state <= 1192;
+      end
+      1192: begin  // instr 854 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1023[a1]);
+                t1 = $signed(r1035[a2]);
+                t2 = t0 - t1;
+                r1041[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+                a2 = a2 + 1;
+              end
+              a1 = a1 - 16;
+            end
+            a2 = a2 - 80;
+          end
+          a1 = a1 + 16;
+        end
+        state <= 1193;
+      end
+      1193: begin  // instr 855 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r1042[a0] = t1[9:0];
+        state <= 1194;
+      end
+      1194: begin  // instr 856 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1042[a1]);
+                t1 = $signed(r1041[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r1043[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 80;
+          end
+          a2 = a2 + 80;
+        end
+        state <= 1195;
+      end
+      1195: begin  // instr 857 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r1044[a0] = t1[9:0];
+        state <= 1196;
+      end
+      1196: begin  // instr 858 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1044[a1]);
+                t1 = $signed(r1043[a2]);
+                t2 = (t1 < t0) ? t1 : t0;
+                r1045[a0] = t2[9:0];
+                a0 = a0 + 1;
+                a2 = a2 + 1;
+              end
+            end
+            a2 = a2 - 80;
+          end
+          a2 = a2 + 80;
+        end
+        state <= 1197;
+      end
+      1197: begin  // instr 859 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1040[a1]);
+                t1 = (t0 < 0) ? (0 - t0) : t0;
+                r1046[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 1198;
+      end
+      1198: begin  // instr 860 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          r1047[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 1199;
+      end
+      1199: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1047[a0]);
+                t1 = $signed(r1046[a1]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r1047[a0] = t2[9:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1200;
+      end
+      1200: begin  // instr 861 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1047[a1]);
+              t1 = $signed(rom13_lit[a2]);
+              t2 = t0 - t1;
+              r1048[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 5;
+          end
+          a1 = a1 + 5;
+        end
+        state <= 1201;
+      end
+      1201: begin  // instr 862 loop
+        k20 = 0;
+        state <= 1202;
+      end
+      1202: begin  // loop20.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r1040[a1]);
+          r1049[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1203;
+      end
+      1203: begin  // loop20.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r1050[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1204;
+      end
+      1204: begin  // loop20.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r1051[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1205;
+      end
+      1205: begin  // loop20.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          t0 = $signed(r1048[a1]);
+          r1052[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1206;
+      end
+      1206: begin  // loop20.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          t0 = $signed(r1047[a1]);
+          r1053[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1207;
+      end
+      1207: begin  // loop20.head
+        if (k20 == 12) state <= 1230;
+        else state <= 1208;
+      end
+      1208: begin  // instr 863 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r1051[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r1054[a0] = t2[4:0];
+        state <= 1209;
+      end
+      1209: begin  // instr 864 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1052[a1]);
+              t1 = $signed(r1053[a2]);
+              t2 = t0 + t1;
+              r1055[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 5;
+            a2 = a2 - 5;
+          end
+          a1 = a1 + 5;
+          a2 = a2 + 5;
+        end
+        state <= 1210;
+      end
+      1210: begin  // instr 865 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1055[a1]);
+              t1 = t0 >>> 1;
+              r1056[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 5;
+          end
+          a1 = a1 + 5;
+        end
+        state <= 1211;
+      end
+      1211: begin  // instr 866 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r1056[a1]);
+                r1057[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 5;
+          end
+          a1 = a1 + 5;
+        end
+        state <= 1212;
+      end
+      1212: begin  // instr 867 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1049[a1]);
+                t1 = $signed(r1057[a2]);
+                t2 = t0 - t1;
+                r1058[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 5;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 5;
+        end
+        state <= 1213;
+      end
+      1213: begin  // instr 868 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1058[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r1059[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 1214;
+      end
+      1214: begin  // instr 869 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          r1060[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 1215;
+      end
+      1215: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1060[a0]);
+                t1 = $signed(r1059[a1]);
+                t2 = t0 + t1;
+                r1060[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1216;
+      end
+      1216: begin  // instr 870 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1049[a1]);
+                t1 = 0 - t0;
+                r1061[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 1217;
+      end
+      1217: begin  // instr 871 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r1056[a1]);
+                r1062[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 5;
+          end
+          a1 = a1 + 5;
+        end
+        state <= 1218;
+      end
+      1218: begin  // instr 872 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1061[a1]);
+                t1 = $signed(r1062[a2]);
+                t2 = t0 - t1;
+                r1063[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 5;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 5;
+        end
+        state <= 1219;
+      end
+      1219: begin  // instr 873 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1063[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r1064[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 1220;
+      end
+      1220: begin  // instr 874 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          r1065[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 1221;
+      end
+      1221: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1065[a0]);
+                t1 = $signed(r1064[a1]);
+                t2 = t0 + t1;
+                r1065[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1222;
+      end
+      1222: begin  // instr 875 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1060[a1]);
+              t1 = $signed(r1065[a2]);
+              t2 = t0 + t1;
+              r1066[a0] = t2[15:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 5;
+            a2 = a2 - 5;
+          end
+          a1 = a1 + 5;
+          a2 = a2 + 5;
+        end
+        state <= 1223;
+      end
+      1223: begin  // instr 876 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1066[a1]);
+              t1 = $signed(r1050[a2]);
+              t2 = (t0 > t1) ? 1 : 0;
+              r1067[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 5;
+          end
+          a1 = a1 + 5;
+        end
+        state <= 1224;
+      end
+      1224: begin  // instr 877 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = r1067[a1];
+              t1 = $signed(r1052[a2]);
+              t2 = $signed(r1056[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r1068[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 5;
+            a2 = a2 - 5;
+            a3 = a3 - 5;
+          end
+          a1 = a1 + 5;
+          a2 = a2 + 5;
+          a3 = a3 + 5;
+        end
+        state <= 1225;
+      end
+      1225: begin  // instr 878 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = r1067[a1];
+              t1 = $signed(r1056[a2]);
+              t2 = $signed(r1053[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r1069[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 5;
+            a2 = a2 - 5;
+            a3 = a3 - 5;
+          end
+          a1 = a1 + 5;
+          a2 = a2 + 5;
+          a3 = a3 + 5;
+        end
+        state <= 1226;
+      end
+      1226: begin  // loop20.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1054[a1]);
+          r1051[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1227;
+      end
+      1227: begin  // loop20.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          t0 = $signed(r1068[a1]);
+          r1052[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1228;
+      end
+      1228: begin  // loop20.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          t0 = $signed(r1069[a1]);
+          r1053[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1229;
+      end
+      1229: begin  // loop20.adv
+        k20 = k20 + 1;
+        state <= 1207;
+      end
+      1230: begin  // loop20.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1051[a1]);
+          r1070[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1231;
+      end
+      1231: begin  // loop20.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          t0 = $signed(r1052[a1]);
+          r1071[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1232;
+      end
+      1232: begin  // loop20.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          t0 = $signed(r1053[a1]);
+          r1072[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1233;
+      end
+      1233: begin  // instr 879 abs
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1045[a1]);
+                t1 = (t0 < 0) ? (0 - t0) : t0;
+                r1073[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 1234;
+      end
+      1234: begin  // instr 880 reduce_max
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          r1074[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 1235;
+      end
+      1235: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1074[a0]);
+                t1 = $signed(r1073[a1]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r1074[a0] = t2[9:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1236;
+      end
+      1236: begin  // instr 881 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1074[a1]);
+              t1 = $signed(rom13_lit[a2]);
+              t2 = t0 - t1;
+              r1075[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 5;
+          end
+          a1 = a1 + 5;
+        end
+        state <= 1237;
+      end
+      1237: begin  // instr 882 loop
+        k21 = 0;
+        state <= 1238;
+      end
+      1238: begin  // loop21.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 400; c0 = c0 + 1) begin
+          t0 = $signed(r1045[a1]);
+          r1076[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1239;
+      end
+      1239: begin  // loop21.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom13_lit[a1]);
+          r1077[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1240;
+      end
+      1240: begin  // loop21.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r1078[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1241;
+      end
+      1241: begin  // loop21.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          t0 = $signed(r1075[a1]);
+          r1079[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1242;
+      end
+      1242: begin  // loop21.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          t0 = $signed(r1074[a1]);
+          r1080[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1243;
+      end
+      1243: begin  // loop21.head
+        if (k21 == 12) state <= 1266;
+        else state <= 1244;
+      end
+      1244: begin  // instr 883 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r1078[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r1081[a0] = t2[4:0];
+        state <= 1245;
+      end
+      1245: begin  // instr 884 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1079[a1]);
+              t1 = $signed(r1080[a2]);
+              t2 = t0 + t1;
+              r1082[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 5;
+            a2 = a2 - 5;
+          end
+          a1 = a1 + 5;
+          a2 = a2 + 5;
+        end
+        state <= 1246;
+      end
+      1246: begin  // instr 885 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1082[a1]);
+              t1 = t0 >>> 1;
+              r1083[a0] = t1[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 5;
+          end
+          a1 = a1 + 5;
+        end
+        state <= 1247;
+      end
+      1247: begin  // instr 886 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r1083[a1]);
+                r1084[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 5;
+          end
+          a1 = a1 + 5;
+        end
+        state <= 1248;
+      end
+      1248: begin  // instr 887 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1076[a1]);
+                t1 = $signed(r1084[a2]);
+                t2 = t0 - t1;
+                r1085[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 5;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 5;
+        end
+        state <= 1249;
+      end
+      1249: begin  // instr 888 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1085[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r1086[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 1250;
+      end
+      1250: begin  // instr 889 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          r1087[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 1251;
+      end
+      1251: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1087[a0]);
+                t1 = $signed(r1086[a1]);
+                t2 = t0 + t1;
+                r1087[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1252;
+      end
+      1252: begin  // instr 890 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1076[a1]);
+                t1 = 0 - t0;
+                r1088[a0] = t1[9:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 1253;
+      end
+      1253: begin  // instr 891 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 1; c3 = c3 + 1) begin
+                t0 = $signed(r1083[a1]);
+                r1089[a0] = t0[9:0];
+                a0 = a0 + 1;
+              end
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 5;
+          end
+          a1 = a1 + 5;
+        end
+        state <= 1254;
+      end
+      1254: begin  // instr 892 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1088[a1]);
+                t1 = $signed(r1089[a2]);
+                t2 = t0 - t1;
+                r1090[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 80;
+            a2 = a2 - 5;
+          end
+          a1 = a1 + 80;
+          a2 = a2 + 5;
+        end
+        state <= 1255;
+      end
+      1255: begin  // instr 893 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1090[a1]);
+                t1 = $signed(rom9_lit[a2]);
+                t2 = (t0 < t1) ? t1 : t0;
+                r1091[a0] = t2[10:0];
+                a0 = a0 + 1;
+                a1 = a1 + 1;
+              end
+            end
+            a1 = a1 - 80;
+          end
+          a1 = a1 + 80;
+        end
+        state <= 1256;
+      end
+      1256: begin  // instr 894 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          r1092[a0] = t0[14:0];
+          a0 = a0 + 1;
+        end
+        state <= 1257;
+      end
+      1257: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              for (c3 = 0; c3 < 16; c3 = c3 + 1) begin
+                t0 = $signed(r1092[a0]);
+                t1 = $signed(r1091[a1]);
+                t2 = t0 + t1;
+                r1092[a0] = t2[14:0];
+                a1 = a1 + 1;
+              end
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1258;
+      end
+      1258: begin  // instr 895 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1087[a1]);
+              t1 = $signed(r1092[a2]);
+              t2 = t0 + t1;
+              r1093[a0] = t2[15:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 5;
+            a2 = a2 - 5;
+          end
+          a1 = a1 + 5;
+          a2 = a2 + 5;
+        end
+        state <= 1259;
+      end
+      1259: begin  // instr 896 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1093[a1]);
+              t1 = $signed(r1077[a2]);
+              t2 = (t0 > t1) ? 1 : 0;
+              r1094[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 5;
+          end
+          a1 = a1 + 5;
+        end
+        state <= 1260;
+      end
+      1260: begin  // instr 897 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = r1094[a1];
+              t1 = $signed(r1079[a2]);
+              t2 = $signed(r1083[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r1095[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 5;
+            a2 = a2 - 5;
+            a3 = a3 - 5;
+          end
+          a1 = a1 + 5;
+          a2 = a2 + 5;
+          a3 = a3 + 5;
+        end
+        state <= 1261;
+      end
+      1261: begin  // instr 898 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = r1094[a1];
+              t1 = $signed(r1083[a2]);
+              t2 = $signed(r1080[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r1096[a0] = t3[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+            a1 = a1 - 5;
+            a2 = a2 - 5;
+            a3 = a3 - 5;
+          end
+          a1 = a1 + 5;
+          a2 = a2 + 5;
+          a3 = a3 + 5;
+        end
+        state <= 1262;
+      end
+      1262: begin  // loop21.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1081[a1]);
+          r1078[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1263;
+      end
+      1263: begin  // loop21.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          t0 = $signed(r1095[a1]);
+          r1079[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1264;
+      end
+      1264: begin  // loop21.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          t0 = $signed(r1096[a1]);
+          r1080[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1265;
+      end
+      1265: begin  // loop21.adv
+        k21 = k21 + 1;
+        state <= 1243;
+      end
+      1266: begin  // loop21.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1078[a1]);
+          r1097[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1267;
+      end
+      1267: begin  // loop21.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          t0 = $signed(r1079[a1]);
+          r1098[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1268;
+      end
+      1268: begin  // loop21.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 25; c0 = c0 + 1) begin
+          t0 = $signed(r1080[a1]);
+          r1099[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1269;
+      end
+      1269: begin  // instr 899 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1072[a1]);
+              t1 = $signed(r1099[a2]);
+              t2 = t0 - t1;
+              r1100[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+            end
+            a1 = a1 - 5;
+            a2 = a2 - 5;
+          end
+          a1 = a1 + 5;
+          a2 = a2 + 5;
+        end
+        state <= 1270;
+      end
+      1270: begin  // instr 900 transpose
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1100[a1]);
+              r1101[a0] = t0[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 20;
+        end
+        state <= 1271;
+      end
+      1271: begin  // instr 901 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r1018[a1]);
+            r1102[a0] = t0[3:0];
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1272;
+      end
+      1272: begin  // instr 902 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1101[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r1103[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 25;
+        end
+        state <= 1273;
+      end
+      1273: begin  // instr 903 iota
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = a1;
+              r1104[a0] = t0[3:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 5;
+          end
+        end
+        state <= 1274;
+      end
+      1274: begin  // instr 904 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r1102[a1]);
+              r1105[a0] = t0[3:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1275;
+      end
+      1275: begin  // instr 905 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1104[a1]);
+              t1 = $signed(r1105[a2]);
+              t2 = (t0 < t1) ? 1 : 0;
+              r1106[a0] = (t2 != 0);
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 25;
+        end
+        state <= 1276;
+      end
+      1276: begin  // instr 906 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom9_lit[a1]);
+        t1 = t0;
+        r1107[a0] = t1[0:0];
+        state <= 1277;
+      end
+      1277: begin  // instr 907 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1107[a1]);
+              r1108[a0] = t0[0:0];
+              a0 = a0 + 1;
+            end
+          end
+        end
+        state <= 1278;
+      end
+      1278: begin  // instr 908 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = r1106[a1];
+              t1 = $signed(r1108[a2]);
+              t2 = $signed(r1103[a3]);
+              t3 = (t0 != 0) ? t2 : t1;
+              r1109[a0] = t3[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+              a2 = a2 + 1;
+              a3 = a3 + 1;
+            end
+          end
+          a1 = a1 - 25;
+          a2 = a2 - 25;
+          a3 = a3 - 25;
+        end
+        state <= 1279;
+      end
+      1279: begin  // instr 909 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 5; c0 = c0 + 1) begin
+          r1110[a0] = t0[12:0];
+          a0 = a0 + 1;
+        end
+        state <= 1280;
+      end
+      1280: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 5; c2 = c2 + 1) begin
+              t0 = $signed(r1110[a0]);
+              t1 = $signed(r1109[a1]);
+              t2 = t0 + t1;
+              r1110[a0] = t2[12:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1281;
+      end
+      1281: begin  // instr 910 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r1110[a1]);
+            t1 = t0 << 5;
+            r1112[a0] = t1[17:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 5;
+        end
+        state <= 1282;
+      end
+      1282: begin  // instr 911 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1018[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? 1 : 0;
+          r1113[a0] = (t2 != 0);
+          a0 = a0 + 1;
+        end
+        state <= 1283;
+      end
+      1283: begin  // instr 912 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1018[a1]);
+          t1 = $signed(rom28_lit[a2]);
+          t2 = t0 + t1;
+          r1114[a0] = t2[5:0];
+          a0 = a0 + 1;
+        end
+        state <= 1284;
+      end
+      1284: begin  // instr 913 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = r1113[a1];
+          t1 = $signed(r1018[a2]);
+          t2 = $signed(r1114[a3]);
+          t3 = (t0 != 0) ? t2 : t1;
+          r1115[a0] = t3[3:0];
+          a0 = a0 + 1;
+        end
+        state <= 1285;
+      end
+      1285: begin  // instr 914 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            t0 = $signed(r1115[a1]);
+            r1116[a0] = t0[3:0];
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1286;
+      end
+      1286: begin  // instr 915 gather
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 15; c1 = c1 + 1) begin
+            t9 = 0;
+            t0 = $signed(r1116[a2]);
+            t1 = (t0 < 0) ? 0 : t0;
+            t1 = (t1 > 5) ? 5 : t1;
+            t2 = t1;
+            t9 = t9 + t2;
+            t3 = $signed(r1019[a1 + t9]);
+            r1117[a0] = t3[7:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 + 5;
+          a2 = a2 + 1;
+        end
+        state <= 1287;
+      end
+      1287: begin  // instr 916 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r11[a1]);
+          t1 = $signed(r1018[a2]);
+          t2 = t0 + t1;
+          r1118[a0] = t2;
+          a0 = a0 + 1;
+        end
+        state <= 1288;
+      end
+      1288: begin  // instr 917 concat
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r126[a1]);
+            r1119[a0] = t0[17:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 25;
+        end
+        state <= 1289;
+      end
+      1289: begin  // concat
+        a0 = 5;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r324[a1]);
+            r1119[a0] = t0[17:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 25;
+        end
+        state <= 1290;
+      end
+      1290: begin  // concat
+        a0 = 10;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r521[a1]);
+            r1119[a0] = t0[17:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 25;
+        end
+        state <= 1291;
+      end
+      1291: begin  // concat
+        a0 = 15;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r718[a1]);
+            r1119[a0] = t0[17:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 25;
+        end
+        state <= 1292;
+      end
+      1292: begin  // concat
+        a0 = 20;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r915[a1]);
+            r1119[a0] = t0[17:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 25;
+        end
+        state <= 1293;
+      end
+      1293: begin  // concat
+        a0 = 25;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 5; c1 = c1 + 1) begin
+            t0 = $signed(r1112[a1]);
+            r1119[a0] = t0[17:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a0 = a0 + 25;
+        end
+        state <= 1294;
+      end
+      1294: begin  // instr 918 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r12[a1]);
+            t1 = $signed(r1119[a2]);
+            t2 = t0 + t1;
+            r1120[a0] = t2[23:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+        end
+        state <= 1295;
+      end
+      1295: begin  // instr 919 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r14[a1]);
+          t1 = $signed(r17[a2]);
+          t2 = t0 + t1;
+          r1121[a0] = t2;
+          a0 = a0 + 1;
+        end
+        state <= 1296;
+      end
+      1296: begin  // instr 920 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(rom2_c[a1]);
+          t1 = t0;
+          r1122[a0] = t1[0:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1297;
+      end
+      1297: begin  // instr 921 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1122[a1]);
+            r1123[a0] = t0[0:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1298;
+      end
+      1298: begin  // instr 922 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1120[a1]);
+            t1 = $signed(r1123[a2]);
+            t2 = t0 - t1;
+            r1124[a0] = t2[23:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+        end
+        state <= 1299;
+      end
+      1299: begin  // instr 923 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(rom3_c[a1]);
+          t1 = t0;
+          r1125[a0] = t1[2:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1300;
+      end
+      1300: begin  // instr 924 ge
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(r1125[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 >= t1) ? 1 : 0;
+          r1126[a0] = (t2 != 0);
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1301;
+      end
+      1301: begin  // instr 925 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(r1125[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? t1 : t0;
+          r1127[a0] = t2[0:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1302;
+      end
+      1302: begin  // instr 926 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1127[a1]);
+            r1128[a0] = t0[0:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1303;
+      end
+      1303: begin  // instr 927 shl
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1124[a1]);
+            t1 = $signed(r1128[a2]);
+            t2 = t0 << t1;
+            r1129[a0] = t2[23:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+        end
+        state <= 1304;
+      end
+      1304: begin  // instr 928 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(r1125[a1]);
+          t1 = 0 - t0;
+          r1130[a0] = t1[2:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1305;
+      end
+      1305: begin  // instr 929 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(r1130[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? t1 : t0;
+          r1131[a0] = t2[2:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1306;
+      end
+      1306: begin  // instr 930 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1131[a1]);
+            r1132[a0] = t0[2:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1307;
+      end
+      1307: begin  // instr 931 shra
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1124[a1]);
+            t1 = $signed(r1132[a2]);
+            t2 = t0 >>> t1;
+            r1133[a0] = t2[20:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+        end
+        state <= 1308;
+      end
+      1308: begin  // instr 932 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = r1126[a1];
+            r1134[a0] = (t0 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1309;
+      end
+      1309: begin  // instr 933 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = r1134[a1];
+            t1 = $signed(r1133[a2]);
+            t2 = $signed(r1129[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1135[a0] = t3[20:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+          a3 = a3 - 30;
+        end
+        state <= 1310;
+      end
+      1310: begin  // instr 934 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(rom4_c[a1]);
+          t1 = t0;
+          r1136[a0] = t1[2:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1311;
+      end
+      1311: begin  // instr 935 ge
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(r1136[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 >= t1) ? 1 : 0;
+          r1137[a0] = (t2 != 0);
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1312;
+      end
+      1312: begin  // instr 936 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(r1136[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? t1 : t0;
+          r1138[a0] = t2[0:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1313;
+      end
+      1313: begin  // instr 937 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1138[a1]);
+            r1139[a0] = t0[0:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1314;
+      end
+      1314: begin  // instr 938 shl
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1124[a1]);
+            t1 = $signed(r1139[a2]);
+            t2 = t0 << t1;
+            r1140[a0] = t2[23:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+        end
+        state <= 1315;
+      end
+      1315: begin  // instr 939 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(r1136[a1]);
+          t1 = 0 - t0;
+          r1141[a0] = t1[3:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1316;
+      end
+      1316: begin  // instr 940 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(r1141[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? t1 : t0;
+          r1142[a0] = t2[3:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1317;
+      end
+      1317: begin  // instr 941 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1142[a1]);
+            r1143[a0] = t0[3:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1318;
+      end
+      1318: begin  // instr 942 shra
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1124[a1]);
+            t1 = $signed(r1143[a2]);
+            t2 = t0 >>> t1;
+            r1144[a0] = t2[19:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+        end
+        state <= 1319;
+      end
+      1319: begin  // instr 943 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = r1137[a1];
+            r1145[a0] = (t0 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1320;
+      end
+      1320: begin  // instr 944 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = r1145[a1];
+            t1 = $signed(r1144[a2]);
+            t2 = $signed(r1140[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1146[a0] = t3[20:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+          a3 = a3 - 30;
+        end
+        state <= 1321;
+      end
+      1321: begin  // instr 945 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(rom2_c[a1]);
+          t1 = t0;
+          r1147[a0] = t1[0:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1322;
+      end
+      1322: begin  // instr 946 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(r1147[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 > t1) ? 1 : 0;
+          r1148[a0] = (t2 != 0);
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1323;
+      end
+      1323: begin  // instr 947 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1135[a1]);
+            t1 = $signed(r1146[a2]);
+            t2 = t0 + t1;
+            r1149[a0] = t2[21:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+        end
+        state <= 1324;
+      end
+      1324: begin  // instr 948 lt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          t0 = $signed(r1147[a1]);
+          t1 = $signed(rom9_lit[a2]);
+          t2 = (t0 < t1) ? 1 : 0;
+          r1150[a0] = (t2 != 0);
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1325;
+      end
+      1325: begin  // instr 949 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1135[a1]);
+            t1 = $signed(r1146[a2]);
+            t2 = t0 - t1;
+            r1151[a0] = t2[20:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+        end
+        state <= 1326;
+      end
+      1326: begin  // instr 950 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = r1150[a1];
+            r1152[a0] = (t0 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1327;
+      end
+      1327: begin  // instr 951 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = r1152[a1];
+            t1 = $signed(r1135[a2]);
+            t2 = $signed(r1151[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1153[a0] = t3[20:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+          a3 = a3 - 30;
+        end
+        state <= 1328;
+      end
+      1328: begin  // instr 952 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = r1148[a1];
+            r1154[a0] = (t0 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1329;
+      end
+      1329: begin  // instr 953 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = r1154[a1];
+            t1 = $signed(r1153[a2]);
+            t2 = $signed(r1149[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1155[a0] = t3[20:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 30;
+          a2 = a2 - 30;
+          a3 = a3 - 30;
+        end
+        state <= 1330;
+      end
+      1330: begin  // instr 954 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom15_lit[a1]);
+        t1 = t0;
+        r1156[a0] = t1[7:0];
+        state <= 1331;
+      end
+      1331: begin  // instr 955 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1156[a1]);
+            t1 = $signed(r1155[a2]);
+            t2 = (t0 < t1) ? t1 : t0;
+            r1157[a0] = t2[20:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a2 = a2 - 30;
+        end
+        state <= 1332;
+      end
+      1332: begin  // instr 956 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom16_lit[a1]);
+        t1 = t0;
+        r1158[a0] = t1[7:0];
+        state <= 1333;
+      end
+      1333: begin  // instr 957 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1158[a1]);
+            t1 = $signed(r1157[a2]);
+            t2 = (t1 < t0) ? t1 : t0;
+            r1159[a0] = t2[7:0];
+            a0 = a0 + 1;
+            a2 = a2 + 1;
+          end
+          a2 = a2 - 30;
+        end
+        state <= 1334;
+      end
+      1334: begin  // instr 958 shl
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            t0 = $signed(r1159[a1]);
+            t1 = t0 << 1;
+            r1160[a0] = t1[8:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1335;
+      end
+      1335: begin  // instr 959 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r1160[a1]);
+              r1161[a0] = t0[8:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1336;
+      end
+      1336: begin  // instr 960 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r1160[a1]);
+              r1162[a0] = t0[8:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1337;
+      end
+      1337: begin  // instr 961 neg
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r1162[a1]);
+              t1 = 0 - t0;
+              r1163[a0] = t1[8:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 30;
+        end
+        state <= 1338;
+      end
+      1338: begin  // instr 962 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(rom5_c[a1]);
+            t1 = t0;
+            r1164[a0] = t1[5:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 1339;
+      end
+      1339: begin  // instr 963 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 30; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(rom6_c[a1]);
+            t1 = t0;
+            r1165[a0] = t1[5:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+        end
+        state <= 1340;
+      end
+      1340: begin  // instr 964 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1164[a1]);
+              r1166[a0] = t0[5:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 300;
+        end
+        state <= 1341;
+      end
+      1341: begin  // instr 965 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1166[a1]);
+              t1 = $signed(r1161[a2]);
+              t2 = t0 + t1;
+              r1167[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 300;
+          a2 = a2 - 30;
+        end
+        state <= 1342;
+      end
+      1342: begin  // instr 966 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r1168[a0] = t1[9:0];
+        state <= 1343;
+      end
+      1343: begin  // instr 967 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1168[a1]);
+              t1 = $signed(r1167[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r1169[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 300;
+        end
+        state <= 1344;
+      end
+      1344: begin  // instr 968 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r1170[a0] = t1[9:0];
+        state <= 1345;
+      end
+      1345: begin  // instr 969 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1170[a1]);
+              t1 = $signed(r1169[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r1171[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 300;
+        end
+        state <= 1346;
+      end
+      1346: begin  // instr 970 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1165[a1]);
+              r1172[a0] = t0[5:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 300;
+        end
+        state <= 1347;
+      end
+      1347: begin  // instr 971 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1172[a1]);
+              t1 = $signed(r1163[a2]);
+              t2 = t0 + t1;
+              r1173[a0] = t2[8:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 300;
+          a2 = a2 - 30;
+        end
+        state <= 1348;
+      end
+      1348: begin  // instr 972 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r1174[a0] = t1[9:0];
+        state <= 1349;
+      end
+      1349: begin  // instr 973 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1174[a1]);
+              t1 = $signed(r1173[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r1175[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 300;
+        end
+        state <= 1350;
+      end
+      1350: begin  // instr 974 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r1176[a0] = t1[9:0];
+        state <= 1351;
+      end
+      1351: begin  // instr 975 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1176[a1]);
+              t1 = $signed(r1175[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r1177[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 300;
+        end
+        state <= 1352;
+      end
+      1352: begin  // instr 976 concat
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1171[a1]);
+              r1178[a0] = t0[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a0 = a0 + 300;
+        end
+        state <= 1353;
+      end
+      1353: begin  // concat
+        a0 = 300;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1177[a1]);
+              r1178[a0] = t0[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a0 = a0 + 300;
+        end
+        state <= 1354;
+      end
+      1354: begin  // instr 977 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(rom7_c[a1]);
+          t1 = t0;
+          r1179[a0] = t1[0:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1355;
+      end
+      1355: begin  // instr 978 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1179[a1]);
+              r1180[a0] = t0[0:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+        end
+        state <= 1356;
+      end
+      1356: begin  // instr 979 concat
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 60; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1178[a1]);
+              r1181[a0] = t0[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a0 = a0 + 10;
+        end
+        state <= 1357;
+      end
+      1357: begin  // concat
+        a0 = 600;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1180[a1]);
+              r1181[a0] = t0[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a0 = a0 + 600;
+        end
+        state <= 1358;
+      end
+      1358: begin  // instr 980 transpose
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 61; c2 = c2 + 1) begin
+              t0 = $signed(r1181[a1]);
+              r1182[a0] = t0[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 10;
+            end
+            a1 = a1 - 609;
+          end
+          a1 = a1 + 600;
+        end
+        state <= 1359;
+      end
+      1359: begin  // instr 981 reduce_max
+        t0 = -254;
+        a0 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          r1183[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 1360;
+      end
+      1360: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 61; c2 = c2 + 1) begin
+              t0 = $signed(r1183[a0]);
+              t1 = $signed(r1182[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r1183[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1361;
+      end
+      1361: begin  // instr 982 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1183[a1]);
+            t1 = $signed(rom30_lit[a2]);
+            t2 = t0 - t1;
+            r1185[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1362;
+      end
+      1362: begin  // instr 983 loop
+        k22 = 0;
+        state <= 1363;
+      end
+      1363: begin  // loop22.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 610; c0 = c0 + 1) begin
+          t0 = $signed(r1182[a1]);
+          r1186[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1364;
+      end
+      1364: begin  // loop22.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom30_lit[a1]);
+          r1187[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1365;
+      end
+      1365: begin  // loop22.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r1188[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1366;
+      end
+      1366: begin  // loop22.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1185[a1]);
+          r1189[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1367;
+      end
+      1367: begin  // loop22.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1183[a1]);
+          r1190[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1368;
+      end
+      1368: begin  // loop22.head
+        if (k22 == 11) state <= 1384;
+        else state <= 1369;
+      end
+      1369: begin  // instr 984 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r1188[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r1191[a0] = t2[4:0];
+        state <= 1370;
+      end
+      1370: begin  // instr 985 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1189[a1]);
+            t1 = $signed(r1190[a2]);
+            t2 = t0 + t1;
+            r1192[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+        end
+        state <= 1371;
+      end
+      1371: begin  // instr 986 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1192[a1]);
+            t1 = t0 >>> 1;
+            r1193[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1372;
+      end
+      1372: begin  // instr 987 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r1193[a1]);
+              r1194[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1373;
+      end
+      1373: begin  // instr 988 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 61; c2 = c2 + 1) begin
+              t0 = $signed(r1186[a1]);
+              t1 = $signed(r1194[a2]);
+              t2 = t0 - t1;
+              r1195[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 610;
+          a2 = a2 - 10;
+        end
+        state <= 1374;
+      end
+      1374: begin  // instr 989 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 61; c2 = c2 + 1) begin
+              t0 = $signed(r1195[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r1196[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 610;
+        end
+        state <= 1375;
+      end
+      1375: begin  // instr 990 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          r1197[a0] = t0[16:0];
+          a0 = a0 + 1;
+        end
+        state <= 1376;
+      end
+      1376: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 61; c2 = c2 + 1) begin
+              t0 = $signed(r1197[a0]);
+              t1 = $signed(r1196[a1]);
+              t2 = t0 + t1;
+              r1197[a0] = t2[16:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1377;
+      end
+      1377: begin  // instr 991 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1197[a1]);
+            t1 = $signed(r1187[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r1198[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1378;
+      end
+      1378: begin  // instr 992 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = r1198[a1];
+            t1 = $signed(r1189[a2]);
+            t2 = $signed(r1193[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1199[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+          a3 = a3 - 10;
+        end
+        state <= 1379;
+      end
+      1379: begin  // instr 993 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = r1198[a1];
+            t1 = $signed(r1193[a2]);
+            t2 = $signed(r1190[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1200[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+          a3 = a3 - 10;
+        end
+        state <= 1380;
+      end
+      1380: begin  // loop22.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1191[a1]);
+          r1188[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1381;
+      end
+      1381: begin  // loop22.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1199[a1]);
+          r1189[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1382;
+      end
+      1382: begin  // loop22.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1200[a1]);
+          r1190[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1383;
+      end
+      1383: begin  // loop22.adv
+        k22 = k22 + 1;
+        state <= 1368;
+      end
+      1384: begin  // loop22.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1188[a1]);
+          r1201[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1385;
+      end
+      1385: begin  // loop22.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1189[a1]);
+          r1202[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1386;
+      end
+      1386: begin  // loop22.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1190[a1]);
+          r1203[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1387;
+      end
+      1387: begin  // instr 994 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1165[a1]);
+              r1204[a0] = t0[5:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 300;
+        end
+        state <= 1388;
+      end
+      1388: begin  // instr 995 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1204[a1]);
+              t1 = $signed(r1161[a2]);
+              t2 = t0 + t1;
+              r1205[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 300;
+          a2 = a2 - 30;
+        end
+        state <= 1389;
+      end
+      1389: begin  // instr 996 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r1206[a0] = t1[9:0];
+        state <= 1390;
+      end
+      1390: begin  // instr 997 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1206[a1]);
+              t1 = $signed(r1205[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r1207[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 300;
+        end
+        state <= 1391;
+      end
+      1391: begin  // instr 998 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r1208[a0] = t1[9:0];
+        state <= 1392;
+      end
+      1392: begin  // instr 999 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1208[a1]);
+              t1 = $signed(r1207[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r1209[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 300;
+        end
+        state <= 1393;
+      end
+      1393: begin  // instr 1000 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1164[a1]);
+              r1210[a0] = t0[5:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 300;
+        end
+        state <= 1394;
+      end
+      1394: begin  // instr 1001 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1210[a1]);
+              t1 = $signed(r1163[a2]);
+              t2 = t0 + t1;
+              r1211[a0] = t2[8:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 300;
+          a2 = a2 - 30;
+        end
+        state <= 1395;
+      end
+      1395: begin  // instr 1002 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom11_lit[a1]);
+        t1 = t0;
+        r1212[a0] = t1[9:0];
+        state <= 1396;
+      end
+      1396: begin  // instr 1003 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1212[a1]);
+              t1 = $signed(r1211[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r1213[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 300;
+        end
+        state <= 1397;
+      end
+      1397: begin  // instr 1004 convert
+        a0 = 0;
+        a1 = 0;
+        t0 = $signed(rom12_lit[a1]);
+        t1 = t0;
+        r1214[a0] = t1[9:0];
+        state <= 1398;
+      end
+      1398: begin  // instr 1005 min
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1214[a1]);
+              t1 = $signed(r1213[a2]);
+              t2 = (t1 < t0) ? t1 : t0;
+              r1215[a0] = t2[9:0];
+              a0 = a0 + 1;
+              a2 = a2 + 1;
+            end
+          end
+          a2 = a2 - 300;
+        end
+        state <= 1399;
+      end
+      1399: begin  // instr 1006 concat
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1209[a1]);
+              r1216[a0] = t0[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a0 = a0 + 300;
+        end
+        state <= 1400;
+      end
+      1400: begin  // concat
+        a0 = 300;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 30; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1215[a1]);
+              r1216[a0] = t0[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a0 = a0 + 300;
+        end
+        state <= 1401;
+      end
+      1401: begin  // instr 1007 mov
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(rom7_c[a1]);
+          t1 = t0;
+          r1217[a0] = t1[0:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1402;
+      end
+      1402: begin  // instr 1008 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1217[a1]);
+              r1218[a0] = t0[0:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a1 = a1 - 10;
+          end
+        end
+        state <= 1403;
+      end
+      1403: begin  // instr 1009 concat
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 60; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1216[a1]);
+              r1219[a0] = t0[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a0 = a0 + 10;
+        end
+        state <= 1404;
+      end
+      1404: begin  // concat
+        a0 = 600;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 1; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 10; c2 = c2 + 1) begin
+              t0 = $signed(r1218[a1]);
+              r1219[a0] = t0[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a0 = a0 + 600;
+        end
+        state <= 1405;
+      end
+      1405: begin  // instr 1010 transpose
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 61; c2 = c2 + 1) begin
+              t0 = $signed(r1219[a1]);
+              r1220[a0] = t0[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 10;
+            end
+            a1 = a1 - 609;
+          end
+          a1 = a1 + 600;
+        end
+        state <= 1406;
+      end
+      1406: begin  // instr 1011 reduce_max
+        t0 = -254;
+        a0 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          r1221[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 1407;
+      end
+      1407: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 61; c2 = c2 + 1) begin
+              t0 = $signed(r1221[a0]);
+              t1 = $signed(r1220[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r1221[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1408;
+      end
+      1408: begin  // instr 1012 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1221[a1]);
+            t1 = $signed(rom30_lit[a2]);
+            t2 = t0 - t1;
+            r1222[a0] = t2[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1409;
+      end
+      1409: begin  // instr 1013 loop
+        k23 = 0;
+        state <= 1410;
+      end
+      1410: begin  // loop23.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 610; c0 = c0 + 1) begin
+          t0 = $signed(r1220[a1]);
+          r1223[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1411;
+      end
+      1411: begin  // loop23.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom30_lit[a1]);
+          r1224[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1412;
+      end
+      1412: begin  // loop23.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r1225[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1413;
+      end
+      1413: begin  // loop23.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1222[a1]);
+          r1226[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1414;
+      end
+      1414: begin  // loop23.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1221[a1]);
+          r1227[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1415;
+      end
+      1415: begin  // loop23.head
+        if (k23 == 11) state <= 1431;
+        else state <= 1416;
+      end
+      1416: begin  // instr 1014 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r1225[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r1228[a0] = t2[4:0];
+        state <= 1417;
+      end
+      1417: begin  // instr 1015 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1226[a1]);
+            t1 = $signed(r1227[a2]);
+            t2 = t0 + t1;
+            r1229[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+        end
+        state <= 1418;
+      end
+      1418: begin  // instr 1016 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1229[a1]);
+            t1 = t0 >>> 1;
+            r1230[a0] = t1[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1419;
+      end
+      1419: begin  // instr 1017 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r1230[a1]);
+              r1231[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1420;
+      end
+      1420: begin  // instr 1018 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 61; c2 = c2 + 1) begin
+              t0 = $signed(r1223[a1]);
+              t1 = $signed(r1231[a2]);
+              t2 = t0 - t1;
+              r1232[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 610;
+          a2 = a2 - 10;
+        end
+        state <= 1421;
+      end
+      1421: begin  // instr 1019 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 61; c2 = c2 + 1) begin
+              t0 = $signed(r1232[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r1233[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 610;
+        end
+        state <= 1422;
+      end
+      1422: begin  // instr 1020 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          r1234[a0] = t0[16:0];
+          a0 = a0 + 1;
+        end
+        state <= 1423;
+      end
+      1423: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 61; c2 = c2 + 1) begin
+              t0 = $signed(r1234[a0]);
+              t1 = $signed(r1233[a1]);
+              t2 = t0 + t1;
+              r1234[a0] = t2[16:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1424;
+      end
+      1424: begin  // instr 1021 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1234[a1]);
+            t1 = $signed(r1224[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r1235[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1425;
+      end
+      1425: begin  // instr 1022 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = r1235[a1];
+            t1 = $signed(r1226[a2]);
+            t2 = $signed(r1230[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1236[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+          a3 = a3 - 10;
+        end
+        state <= 1426;
+      end
+      1426: begin  // instr 1023 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = r1235[a1];
+            t1 = $signed(r1230[a2]);
+            t2 = $signed(r1227[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1237[a0] = t3[9:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+          a3 = a3 - 10;
+        end
+        state <= 1427;
+      end
+      1427: begin  // loop23.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1228[a1]);
+          r1225[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1428;
+      end
+      1428: begin  // loop23.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1236[a1]);
+          r1226[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1429;
+      end
+      1429: begin  // loop23.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1237[a1]);
+          r1227[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1430;
+      end
+      1430: begin  // loop23.adv
+        k23 = k23 + 1;
+        state <= 1415;
+      end
+      1431: begin  // loop23.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1225[a1]);
+          r1238[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1432;
+      end
+      1432: begin  // loop23.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1226[a1]);
+          r1239[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1433;
+      end
+      1433: begin  // loop23.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1227[a1]);
+          r1240[a0] = t0[9:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1434;
+      end
+      1434: begin  // instr 1024 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r1203[a1]);
+              r1241[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1435;
+      end
+      1435: begin  // instr 1025 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r1240[a1]);
+              r1242[a0] = t0[9:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1436;
+      end
+      1436: begin  // instr 1026 concat
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r1241[a1]);
+              r1243[a0] = t0[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1437;
+      end
+      1437: begin  // concat
+        a0 = 1;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r1242[a1]);
+              r1243[a0] = t0[9:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1438;
+      end
+      1438: begin  // instr 1027 reduce_max
+        t0 = -510;
+        a0 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          r1244[a0] = t0[9:0];
+          a0 = a0 + 1;
+        end
+        state <= 1439;
+      end
+      1439: begin  // reduce.max.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 2; c2 = c2 + 1) begin
+              t0 = $signed(r1244[a0]);
+              t1 = $signed(r1243[a1]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r1244[a0] = t2[9:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1440;
+      end
+      1440: begin  // instr 1028 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1244[a1]);
+            t1 = $signed(rom31_lit[a2]);
+            t2 = t0 - t1;
+            r1246[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1441;
+      end
+      1441: begin  // instr 1029 loop
+        k24 = 0;
+        state <= 1442;
+      end
+      1442: begin  // loop24.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 20; c0 = c0 + 1) begin
+          t0 = $signed(r1243[a1]);
+          r1247[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1443;
+      end
+      1443: begin  // loop24.const
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom31_lit[a1]);
+          r1248[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1444;
+      end
+      1444: begin  // loop24.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(rom9_lit[a1]);
+          r1249[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1445;
+      end
+      1445: begin  // loop24.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1246[a1]);
+          r1250[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1446;
+      end
+      1446: begin  // loop24.carry0
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1244[a1]);
+          r1251[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1447;
+      end
+      1447: begin  // loop24.head
+        if (k24 == 8) state <= 1463;
+        else state <= 1448;
+      end
+      1448: begin  // instr 1030 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        t0 = $signed(r1249[a1]);
+        t1 = $signed(rom8_lit[a2]);
+        t2 = t0 + t1;
+        r1252[a0] = t2[4:0];
+        state <= 1449;
+      end
+      1449: begin  // instr 1031 add
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1250[a1]);
+            t1 = $signed(r1251[a2]);
+            t2 = t0 + t1;
+            r1253[a0] = t2[11:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+        end
+        state <= 1450;
+      end
+      1450: begin  // instr 1032 shra
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1253[a1]);
+            t1 = t0 >>> 1;
+            r1254[a0] = t1[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1451;
+      end
+      1451: begin  // instr 1033 broadcast
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 1; c2 = c2 + 1) begin
+              t0 = $signed(r1254[a1]);
+              r1255[a0] = t0[10:0];
+              a0 = a0 + 1;
+            end
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1452;
+      end
+      1452: begin  // instr 1034 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 2; c2 = c2 + 1) begin
+              t0 = $signed(r1247[a1]);
+              t1 = $signed(r1255[a2]);
+              t2 = t0 - t1;
+              r1256[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 20;
+          a2 = a2 - 10;
+        end
+        state <= 1453;
+      end
+      1453: begin  // instr 1035 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 2; c2 = c2 + 1) begin
+              t0 = $signed(r1256[a1]);
+              t1 = $signed(rom9_lit[a2]);
+              t2 = (t0 < t1) ? t1 : t0;
+              r1257[a0] = t2[10:0];
+              a0 = a0 + 1;
+              a1 = a1 + 1;
+            end
+          end
+          a1 = a1 - 20;
+        end
+        state <= 1454;
+      end
+      1454: begin  // instr 1036 reduce_sum
+        t0 = 0;
+        a0 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          r1258[a0] = t0[11:0];
+          a0 = a0 + 1;
+        end
+        state <= 1455;
+      end
+      1455: begin  // reduce.sum.acc
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            for (c2 = 0; c2 < 2; c2 = c2 + 1) begin
+              t0 = $signed(r1258[a0]);
+              t1 = $signed(r1257[a1]);
+              t2 = t0 + t1;
+              r1258[a0] = t2[11:0];
+              a1 = a1 + 1;
+            end
+            a0 = a0 + 1;
+          end
+        end
+        state <= 1456;
+      end
+      1456: begin  // instr 1037 gt
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1258[a1]);
+            t1 = $signed(r1248[a2]);
+            t2 = (t0 > t1) ? 1 : 0;
+            r1259[a0] = (t2 != 0);
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1457;
+      end
+      1457: begin  // instr 1038 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = r1259[a1];
+            t1 = $signed(r1250[a2]);
+            t2 = $signed(r1254[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1260[a0] = t3[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+          a3 = a3 - 10;
+        end
+        state <= 1458;
+      end
+      1458: begin  // instr 1039 select_n
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        a3 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = r1259[a1];
+            t1 = $signed(r1254[a2]);
+            t2 = $signed(r1251[a3]);
+            t3 = (t0 != 0) ? t2 : t1;
+            r1261[a0] = t3[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+            a3 = a3 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+          a3 = a3 - 10;
+        end
+        state <= 1459;
+      end
+      1459: begin  // loop24.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1252[a1]);
+          r1249[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1460;
+      end
+      1460: begin  // loop24.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1260[a1]);
+          r1250[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1461;
+      end
+      1461: begin  // loop24.knext
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1261[a1]);
+          r1251[a0] = t0;
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1462;
+      end
+      1462: begin  // loop24.adv
+        k24 = k24 + 1;
+        state <= 1447;
+      end
+      1463: begin  // loop24.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          t0 = $signed(r1249[a1]);
+          r1262[a0] = t0[10:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1464;
+      end
+      1464: begin  // loop24.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1250[a1]);
+          r1263[a0] = t0[10:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1465;
+      end
+      1465: begin  // loop24.out
+        a0 = 0;
+        a1 = 0;
+        for (c0 = 0; c0 < 10; c0 = c0 + 1) begin
+          t0 = $signed(r1251[a1]);
+          r1264[a0] = t0[10:0];
+          a0 = a0 + 1;
+          a1 = a1 + 1;
+        end
+        state <= 1466;
+      end
+      1466: begin  // instr 1040 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1203[a1]);
+            t1 = $signed(r1264[a2]);
+            t2 = t0 - t1;
+            r1265[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+        end
+        state <= 1467;
+      end
+      1467: begin  // instr 1041 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1265[a1]);
+            t1 = $signed(rom9_lit[a2]);
+            t2 = (t0 < t1) ? t1 : t0;
+            r1266[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1468;
+      end
+      1468: begin  // instr 1042 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1240[a1]);
+            t1 = $signed(r1264[a2]);
+            t2 = t0 - t1;
+            r1267[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+        end
+        state <= 1469;
+      end
+      1469: begin  // instr 1043 max
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1267[a1]);
+            t1 = $signed(rom9_lit[a2]);
+            t2 = (t0 < t1) ? t1 : t0;
+            r1268[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+          end
+          a1 = a1 - 10;
+        end
+        state <= 1470;
+      end
+      1470: begin  // instr 1044 sub
+        a0 = 0;
+        a1 = 0;
+        a2 = 0;
+        for (c0 = 0; c0 < 1; c0 = c0 + 1) begin
+          for (c1 = 0; c1 < 10; c1 = c1 + 1) begin
+            t0 = $signed(r1266[a1]);
+            t1 = $signed(r1268[a2]);
+            t2 = t0 - t1;
+            r1269[a0] = t2[10:0];
+            a0 = a0 + 1;
+            a1 = a1 + 1;
+            a2 = a2 + 1;
+          end
+          a1 = a1 - 10;
+          a2 = a2 - 10;
+        end
+        state <= 1471;
+      end
+      1471: begin done <= 1; end
+      default: state <= 0;
+      endcase
+    end
+  end
+endmodule
+
+module session_step_q_top(input wire clk, input wire rst, input wire start, output wire done);
+  session_step_q u_core(.clk(clk), .rst(rst), .start(start), .done(done));
+endmodule

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import row
 from repro.analysis import assert_multiplierless, census  # noqa: F401
+from repro.analysis.intervals import Interval
 from repro.analysis.legality import census_jaxpr
 from repro.core.filterbank import FilterBank, FilterBankConfig
 from repro.core import fixed
@@ -59,21 +60,24 @@ FS = 16000.0
 N = 16000  # 1 s
 
 
-def census_ir(fn, *args, tag: str) -> Counter:
+def census_ir(fn, *args, tag: str, in_intervals=None):
     """Census an integer program THROUGH the typed IR: trace, lower with
     ``repro.ir.build`` (which rejects anything outside the multiplierless
     contract), and count with the IR census pass. Pinned at runtime
     against the legacy jaxpr walk — if the lowering ever re-associates or
     drops an op, the committed ``hw.*`` rows can't silently move; the
-    bench fails instead."""
+    bench fails instead. Returns ``(census, program)`` — the typed
+    program also feeds the allocator cost rows; passing ``in_intervals``
+    runs the interval pass so register widths are the proven minima."""
     jaxpr = jax.make_jaxpr(fn)(*args)
-    c_ir = census_program(build_program(jaxpr, name=tag))
+    prog = build_program(jaxpr, name=tag, in_intervals=in_intervals)
+    c_ir = census_program(prog)
     c_jx = census_jaxpr(jaxpr)
     if dict(c_ir) != dict(c_jx):
         raise AssertionError(
             f"{tag}: IR census {dict(c_ir)} != jaxpr census {dict(c_jx)} "
             "— the IR lowering moved the pinned hw.* numbers")
-    return c_ir
+    return c_ir, prog
 
 
 def lut_estimate(c: Counter) -> float:
@@ -103,6 +107,32 @@ def emit_rows(tag: str, c: Counter, n_samples: int) -> None:
     row(f"hw.{tag}.lut_weighted_ops_per_sample", None,
         f"{lut_estimate(c) / n_samples:.0f} (ops-weighted; the FPGA time-"
         f"multiplexes 3 MP modules so unit count is far lower)")
+
+
+def emit_alloc_rows(tag: str, prog) -> None:
+    """Allocator-derived hardware totals — the repo's slice-count proxy
+    (paper Table I: 0 DSP, <1K slices). Register/adder/ROM totals come
+    from the same allocation the committed ``program.v`` declares; with
+    typed inputs the register bits are the interval-proven minima, and
+    the carrier-saving row says how much the interval pass buys over a
+    uniform int32 register file."""
+    from repro.ir.alloc import allocate
+
+    rep = allocate(prog).report
+    regs, dp, roms = rep["registers"], rep["datapath"], rep["roms"]
+    row(f"hw.{tag}.alloc_registers", None, f"{regs['count']}")
+    row(f"hw.{tag}.alloc_register_bits", None,
+        f"{regs['bits_allocated']} "
+        f"(int32 carrier: {regs['bits_carrier']}, saving "
+        f"{100 * regs['carrier_saving']:.1f}%)")
+    row(f"hw.{tag}.alloc_rom_bits", None,
+        f"{roms['bits_stored']} ({roms['count']} ROMs, "
+        f"width-trimmed minimum {roms['bits_minimal']})")
+    row(f"hw.{tag}.alloc_adder_sites", None,
+        f"{dp['adder_sites']} (+{dp['comparator_sites']} comparators, "
+        f"{dp['dyn_shifter_sites']} barrel shifters; time-multiplexed "
+        f"over {rep['time_multiplexed']['element_ops_per_inference']} "
+        f"element-ops/inference)")
 
 
 def emit_analysis_rows(smoke: bool) -> None:
@@ -182,9 +212,12 @@ def main(argv=()):
         pipe = _fixed_pipeline(base._replace(mode=mode, numerics="fixed"))
         prog = pipe.fixed_program()
         xq = fixed.quantize_signal(prog, x)
-        c = census_ir(lambda q: fixed.infer_q(prog, q), xq, tag=tag)
+        sig = Interval(int(prog.signal.qmin), int(prog.signal.qmax))
+        c, prog_ir = census_ir(lambda q: fixed.infer_q(prog, q), xq,
+                               tag=tag, in_intervals=[sig])
         assert_multiplierless(c, tag)
         emit_rows(tag, c, n)
+        emit_alloc_rows(tag, prog_ir)
         row(f"hw.{tag}.multiplierless_assert", None,
             "PASS (0 multiplies, 0 divides in the integer IR, counts "
             "pinned == jaxpr census)")
@@ -201,10 +234,12 @@ def main(argv=()):
         state = pipe.init_session(1)
         xq = fixed.quantize_signal(prog, jnp.zeros((1, chunk_len)))
         nv = jnp.full((1,), chunk_len, jnp.int32)
-        c = census_ir(lambda st, q, v: fixed.session_step_q(prog, st, q, v),
-                      state, xq, nv, tag=tag)
+        c, prog_ir = census_ir(
+            lambda st, q, v: fixed.session_step_q(prog, st, q, v),
+            state, xq, nv, tag=tag)
         assert_multiplierless(c, tag)
         emit_rows(tag, c, chunk_len)
+        emit_alloc_rows(tag, prog_ir)
         row(f"hw.{tag}.multiplierless_assert", None,
             f"PASS (0 mul/div in the per-chunk int32 streaming IR, "
             f"chunk={chunk_len}, counts pinned == jaxpr census)")
@@ -220,11 +255,12 @@ def main(argv=()):
     state = pipe.init_session(1)
     xq = fixed.quantize_signal(prog, jnp.zeros((1, chunk_len)))
     nv = jnp.full((1,), chunk_len, jnp.int32)
-    c = census_ir(
+    c, prog_ir = census_ir(
         lambda st, q, v: pipe._cascade_pallas_fixed(prog, st, q, v),
         state, xq, nv, tag=tag)
     assert_multiplierless(c, tag)
     emit_rows(tag, c, chunk_len)
+    emit_alloc_rows(tag, prog_ir)
     row(f"hw.{tag}.multiplierless_assert", None,
         f"PASS (0 mul/div in the Pallas-lowered per-chunk int32 IR, "
         f"chunk={chunk_len}, counts pinned == jaxpr census)")

@@ -26,4 +26,11 @@ python -m benchmarks.kernel_sweep --smoke
 # executes per sensor packet), AND the Pallas-lowered int streaming kernel
 # — and FAIL if any multiply/divide leaked in
 python -m benchmarks.hardware_cost --smoke
+# Verilog emit + simulate smoke (reduced config, tmp out-dir): exercises
+# the full netlist pipeline — emitter, register allocator, cycle
+# simulator, and the netlist==interpreter parity assertion inside
+# emit_ir.py — without touching the committed artifacts/ir tree
+ir_smoke_dir=$(mktemp -d)
+trap 'rm -rf "$ir_smoke_dir"' EXIT
+python scripts/emit_ir.py --smoke --out-dir "$ir_smoke_dir"
 echo "bench_smoke OK"

@@ -10,16 +10,28 @@ per executable target, the synthesizable artifact set under
                      two's-complement, shift/add/compare only; compiles
                      with any C99 compiler, ``main`` reads/writes raw
                      little-endian register images)
+    program.v     -- synthesizable Verilog netlist: one time-multiplexed
+                     FSM over interval-width registers, shift/add/compare
+                     datapath, ROMs loaded from rom/*.mem ($readmemh)
     rom/<n>.mem   -- one $readmemh init file per constant ROM (taps,
                      mu/sigma, shift tables, classifier weights)
+    alloc.json    -- the register allocation report: interval-proven
+                     widths vs the int32 carrier, ROM bits, datapath
+                     unit sites (the stand-in for the paper's slice count)
     ir.json       -- the machine-readable program: op census (pinned ==
                      the jaxpr-walk census), instruction/ROM totals, and
                      the full typed register table with proven worst-case
                      intervals and minimal two's-complement widths
 
-Pallas-grid targets have no sequential SSA execution, so they get only an
-``ir.json`` (census + register table) — their bit-exactness is covered by
-the kernel parity tests, their counts by the census pin here.
+Every executable target's netlist is verified here, at emit time, to
+replay the IR interpreter bit-for-bit on seeded interval-drawn inputs —
+through iverilog when installed, through the in-repo cycle simulator
+(``repro.ir.vsim``) otherwise.
+
+Pallas-grid targets have no sequential SSA execution, so they get only
+``ir.json`` + ``alloc.json`` (census + register table + widths) — their
+bit-exactness is covered by the kernel parity tests, their counts by the
+census pin here.
 
 Everything written is DETERMINISTIC (no timestamps, sorted keys, fixed
 target order): tier-1 regenerates the tree and fails on ``git diff``,
@@ -51,7 +63,9 @@ CENSUS_TARGETS = ("oneshot_q_pallas", "stream_pallas")
 def emit_target(t, out_dir: str) -> dict:
     from repro.analysis.legality import census_jaxpr
     from repro.ir import build_program, census_program
+    from repro.ir.alloc import allocate
     from repro.ir.cgen import emit_c, emit_rom_mem
+    from repro.ir.verilog import emit_verilog
 
     prog = build_program(t.jaxpr, name=t.name, in_intervals=t.in_intervals)
     c_ir = dict(census_program(prog))
@@ -65,14 +79,22 @@ def emit_target(t, out_dir: str) -> dict:
         shutil.rmtree(tdir)
     os.makedirs(tdir)
 
+    alloc = allocate(prog)
+    with open(os.path.join(tdir, "alloc.json"), "w") as f:
+        json.dump(alloc.report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
     if prog.executable:
         with open(os.path.join(tdir, "program.c"), "w") as f:
             f.write(emit_c(prog))
+        with open(os.path.join(tdir, "program.v"), "w") as f:
+            f.write(emit_verilog(prog, alloc))
         romdir = os.path.join(tdir, "rom")
         os.makedirs(romdir)
         for fname, text in sorted(emit_rom_mem(prog).items()):
             with open(os.path.join(romdir, fname), "w") as f:
                 f.write(text)
+        verify_netlist(t, prog, alloc, tdir)
 
     doc = {
         "name": t.name,
@@ -94,6 +116,52 @@ def emit_target(t, out_dir: str) -> dict:
     return {"name": t.name, "executable": prog.executable,
             "census": doc["census"], "num_instrs": doc["num_instrs"],
             "rom_bytes": doc["rom_bytes"]}
+
+
+def verify_netlist(t, prog, alloc, tdir: str) -> None:
+    """The netlist parity gate: the freshly written ``program.v`` must
+    replay the IR interpreter bit-for-bit on seeded random inputs drawn
+    from each input register's proven interval. Simulated with iverilog
+    when installed, with the in-repo cycle simulator otherwise; any
+    mismatch is localized to the first diverging instruction."""
+    import numpy as np
+    from repro.ir import interp as ir_interp
+    from repro.ir import vsim
+    from repro.ir.debug import first_divergence
+    from repro.ir.verilog import emit_testbench
+
+    rng = np.random.default_rng(0x1CF11)
+    inputs = []
+    for iv, reg_i in zip(t.in_intervals, prog.inputs):
+        r = prog.regs[reg_i]
+        arr = rng.integers(int(iv.lo), int(iv.hi) + 1,
+                           size=r.shape if r.shape else (),
+                           dtype=np.int64).astype(np.int32)
+        inputs.append(arr != 0 if r.dtype == "i1" else arr)
+
+    with open(os.path.join(tdir, "program.v")) as f:
+        text = f.read()
+    want = ir_interp.run(prog, inputs)
+    if vsim.have_iverilog():
+        got = vsim.run_iverilog(text, emit_testbench(prog, alloc),
+                                inputs, rom_dir=tdir)
+        how = "iverilog"
+    else:
+        got = vsim.run_netlist(text, inputs,
+                               vsim.rom_loader_from_dir(tdir))
+        how = "vsim"
+    for i, (g, w) in enumerate(zip(got, want)):
+        if not np.array_equal(np.asarray(g), np.asarray(w)):
+            detail = ""
+            if how == "vsim":
+                d = first_divergence(prog, text, inputs,
+                                     vsim.rom_loader_from_dir(tdir))
+                detail = f" ({d})"
+            raise AssertionError(
+                f"{t.name}: netlist output {i} diverges from the IR "
+                f"interpreter under {how}{detail}")
+    print(f"{t.name}: netlist == interpreter ({how}, "
+          f"{len(want)} outputs)")
 
 
 def main(argv=None) -> int:

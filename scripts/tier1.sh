@@ -45,11 +45,12 @@ group5=(tests/test_archs.py tests/test_checkpoint.py
         tests/test_distributed.py tests/test_filterbank.py
         tests/test_hlo_cost.py tests/test_kernel_machine.py
         tests/test_mp.py tests/test_system.py)
+group6=(tests/test_verilog.py tests/test_ir_artifacts.py)
 
 # coverage guard: every tests/test_*.py must appear in exactly one group,
 # so a new test file can't silently drop out of tier-1
 all_grouped=$(printf '%s\n' "${group1[@]}" "${group2[@]}" "${group3[@]}" \
-                     "${group4[@]}" "${group5[@]}" | sort)
+                     "${group4[@]}" "${group5[@]}" "${group6[@]}" | sort)
 all_files=$(ls tests/test_*.py | sort)
 if [ "$all_grouped" != "$all_files" ]; then
   echo "tier1: test group lists are out of sync with tests/test_*.py:" >&2
@@ -62,6 +63,7 @@ python -m pytest -x -q "${group2[@]}" "$@"
 python -m pytest -x -q "${group3[@]}" "$@"
 python -m pytest -x -q "${group4[@]}" "$@"
 python -m pytest -x -q "${group5[@]}" "$@"
+python -m pytest -x -q "${group6[@]}" "$@"
 
 # static verification gate: op-legality + worst-case interval proof +
 # determinism lint over the deployed integer programs (full config;
@@ -78,8 +80,11 @@ if git -C . rev-parse --is-inside-work-tree >/dev/null 2>&1 \
   exit 1
 fi
 
-# hardware-artifact drift gate: regenerate the IR-derived C/ROM/register
-# artifacts (full config, deterministic) and fail if they moved — a PR
+# hardware-artifact drift gate: regenerate the IR-derived C/Verilog/ROM/
+# register artifacts (full config, deterministic) and fail if they moved —
+# emit_ir.py also re-proves, per executable target, that the freshly
+# emitted netlist replays the IR interpreter bit-for-bit (iverilog when
+# installed, the in-repo cycle simulator otherwise) before writing — a PR
 # that changes the deployed datapath must commit the new artifacts/ir
 # tree, and artifact drift without a source change is a bug in the
 # emitters, not noise

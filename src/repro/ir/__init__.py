@@ -14,11 +14,20 @@ back half:
 * :mod:`repro.ir.cgen`   — synthesizable fixed-point C + ROM ``.mem``
   artifact emitter (deterministic bytes, drift-gated in tier-1)
 * :mod:`repro.ir.census` — the hardware-op census as an IR pass
+* :mod:`repro.ir.alloc`  — interval-proven register-width allocation +
+  hardware cost report (``alloc.json``)
+* :mod:`repro.ir.verilog`— synthesizable Verilog netlist emitter (one
+  time-multiplexed FSM, shift/add/compare datapath, $readmemh ROMs)
+* :mod:`repro.ir.vsim`   — cycle simulator for exactly the emitted
+  netlist subset (iverilog is used instead when present)
+* :mod:`repro.ir.debug`  — register-granular first-divergence locator
+  between interpreter and netlist traces
 
-All four consumers are bit-for-bit: interpreter, XLA emitter and compiled
-C reference reproduce ``fixed.infer_q`` exactly on the golden fixtures
-(tests/test_ir.py), and the IR census equals the jaxpr census exactly
-(pinned in benchmarks/hardware_cost.py).
+All five consumers are bit-for-bit: interpreter, XLA emitter, compiled C
+reference and the simulated Verilog netlist reproduce ``fixed.infer_q``
+exactly on the golden fixtures (tests/test_ir.py, tests/test_verilog.py),
+and the IR census equals the jaxpr census exactly (pinned in
+benchmarks/hardware_cost.py).
 """
 
 from repro.ir.build import BuildError, build_program

@@ -420,6 +420,14 @@ def _plain(v):
     return v
 
 
+class _InputRec:
+    """Record-shaped view of a declared input interval (ducks the interval
+    pass's RegisterRecord for ``_Builder.new_reg``)."""
+
+    def __init__(self, lo, hi, required_bits):
+        self.lo, self.hi, self.required_bits = lo, hi, required_bits
+
+
 def build_program(closed_jaxpr, *, name: str, in_intervals=None,
                   scan_unroll_limit: int = 64,
                   grid_unroll_limit: int = 4096) -> Program:
@@ -451,9 +459,18 @@ def build_program(closed_jaxpr, *, name: str, in_intervals=None,
 
     b = _Builder(records)
     jaxpr = closed_jaxpr.jaxpr
+    # input registers are typed straight from the DECLARED intervals (the
+    # interval pass records only equation outputs): the netlist register
+    # allocator sees the ADC input ports at their true width, not int32
+    in_recs: list = [None] * len(jaxpr.invars)
+    if in_intervals is not None:
+        from repro.analysis.intervals import carrier_bits
+        for i, iv in enumerate(list(in_intervals)[:len(in_recs)]):
+            in_recs[i] = _InputRec(lo=iv.lo, hi=iv.hi,
+                                   required_bits=carrier_bits(iv))
     in_regs = [b.new_reg(_shape_of(v.aval),
-                         getattr(v.aval, "dtype", np.int32))
-               for v in jaxpr.invars]
+                         getattr(v.aval, "dtype", np.int32), in_recs[i])
+               for i, v in enumerate(jaxpr.invars)]
     stream: list = []
     const_regs = [b.const_reg(c, "c") for c in closed_jaxpr.consts]
     outs = b.lower_jaxpr(jaxpr, const_regs + in_regs, "", stream)

@@ -121,8 +121,9 @@ def _clamped_starts(starts, shape, sizes):
 
 
 class _Machine:
-    def __init__(self, prog: Program):
+    def __init__(self, prog: Program, trace=None):
         self.prog = prog
+        self.trace = trace
         self.env: dict = {}
         for reg, rom in prog.rom_of_reg.items():
             self.env[reg] = prog.roms[rom].data
@@ -267,6 +268,9 @@ class _Machine:
         else:
             raise NotImplementedError(f"IR op {op!r}")
 
+        if self.trace is not None:
+            self.trace(ins, [self.env[d] for d in ins.dests])
+
     def _loop(self, ins) -> None:
         rg = ins.regions[0]
         nc = ins.attrs["num_consts"]
@@ -301,14 +305,20 @@ class _Machine:
                 self.set(d, np.stack(col, axis=0))
 
 
-def run(prog: Program, inputs) -> list:
+def run(prog: Program, inputs, trace=None) -> list:
     """Execute ``prog`` on numpy inputs; returns the output arrays in
-    program order (int32 / bool, exactly what ``fixed.infer_q`` yields)."""
+    program order (int32 / bool, exactly what ``fixed.infer_q`` yields).
+
+    ``trace``, when given, is called as ``trace(instr, dest_values)``
+    after EVERY executed instruction — loop bodies fire once per trip,
+    the ``loop`` instruction itself once after its last trip — in exactly
+    the dynamic order the Verilog FSM commits instructions, which is what
+    ``repro.ir.debug.first_divergence`` aligns against."""
     if not prog.executable:
         raise NotImplementedError(
             f"program {prog.name!r} contains a grid region and is not "
             "sequentially executable (census/verification surface only)")
-    m = _Machine(prog)
+    m = _Machine(prog, trace=trace)
     if len(inputs) != len(prog.inputs):
         raise ValueError(f"program {prog.name!r} takes {len(prog.inputs)} "
                          f"inputs, got {len(inputs)}")

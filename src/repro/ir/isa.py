@@ -111,6 +111,18 @@ class Reg:
             n *= int(d)
         return n
 
+    @property
+    def storage_bits(self) -> int:
+        """The width a netlist register allocator assigns this register:
+        1 for predicate wires, the proven minimal two's-complement width
+        when the program was typed by the interval pass, the full carrier
+        width otherwise. Never below 1."""
+        if self.dtype == "i1":
+            return 1
+        if self.required_bits is not None:
+            return max(1, int(self.required_bits))
+        return int(self.bits)
+
     def short(self) -> str:
         iv = "" if self.interval is None else \
             f" in [{self.interval[0]}, {self.interval[1]}]" \

@@ -1,0 +1,127 @@
+"""Cross-artifact consistency: the committed hardware artifacts must
+agree with each other and with the static-analysis report.
+
+Three generators write overlapping facts about the same programs:
+``scripts/analyze.py`` (ANALYSIS.json: worst-case intervals),
+``scripts/emit_ir.py`` (ir.json: the typed register table; alloc.json:
+the width allocation the netlist declares). Each is drift-gated against
+regeneration, but that only proves self-consistency — this file pins the
+artifacts AGAINST EACH OTHER, from the committed files alone, so a
+convention change in one generator (a different width rounding, a
+dropped register) fails loudly naming the register instead of shipping a
+netlist whose declared widths no longer match the proven intervals.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+IR_DIR = os.path.join(REPO, "artifacts", "ir")
+
+TARGETS = ("oneshot_q", "session_step_q", "oneshot_q_pallas",
+           "stream_pallas")
+EXECUTABLE = ("oneshot_q", "session_step_q")
+
+
+def _load(target, fname):
+    with open(os.path.join(IR_DIR, target, fname)) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def analysis():
+    with open(os.path.join(REPO, "ANALYSIS.json")) as f:
+        return json.load(f)
+
+
+def _min_signed_bits(lo, hi):
+    n_hi = hi.bit_length() + 1 if hi >= 0 else 1
+    n_lo = (-lo - 1).bit_length() + 1 if lo < 0 else 1
+    return max(n_lo, n_hi, 1)
+
+
+@pytest.mark.parametrize("target", TARGETS)
+def test_required_bits_are_the_interval_minima(target):
+    """Every typed register's committed ``required_bits`` is EXACTLY the
+    minimal two's-complement width of its committed interval — the
+    invariant the netlist's register declarations stand on."""
+    doc = _load(target, "ir.json")
+    checked = 0
+    for rec in doc["registers"]:
+        if rec["interval"] is None:
+            assert rec["required_bits"] is None, \
+                f"{target} r{rec['reg']}: width without an interval"
+            continue
+        lo, hi = rec["interval"]
+        want = _min_signed_bits(int(lo), int(hi))
+        assert rec["required_bits"] == want, (
+            f"{target} r{rec['reg']}: committed required_bits="
+            f"{rec['required_bits']} but interval [{lo}, {hi}] needs "
+            f"{want}")
+        checked += 1
+    assert checked > 0, f"{target}: no typed registers in ir.json"
+
+
+@pytest.mark.parametrize("target", TARGETS)
+def test_ir_json_consistent_with_analysis_json(target, analysis):
+    """The register table's worst case equals the static-analysis
+    gate's: same max width, same headroom."""
+    doc = _load(target, "ir.json")
+    gate = analysis["targets"][target]["intervals"]
+    widths = [r["required_bits"] for r in doc["registers"]
+              if r["required_bits"] is not None and r["dtype"] == "i32"]
+    assert max(widths) == gate["max_required_bits"], (
+        f"{target}: ir.json worst register needs {max(widths)} bits, "
+        f"ANALYSIS.json proves {gate['max_required_bits']}")
+    assert 32 - max(widths) == gate["min_headroom_bits"]
+
+
+@pytest.mark.parametrize("target", TARGETS)
+def test_alloc_json_consistent_with_ir_json(target):
+    """The allocator report prices exactly the registers ir.json
+    declares: element totals and width histogram close the books."""
+    doc = _load(target, "ir.json")
+    rep = _load(target, "alloc.json")
+    assert rep["program"] == target
+    regs = rep["registers"]
+    total_elems = sum(int(np.prod(r["shape"])) if r["shape"] else 1
+                      for r in doc["registers"])
+    rom_words = rep["roms"]["words"]
+    assert regs["elements"] + rom_words == total_elems, (
+        f"{target}: alloc.json prices {regs['elements']} register "
+        f"elements + {rom_words} ROM words but ir.json declares "
+        f"{total_elems}")
+    assert regs["count"] + rep["roms"]["count"] == doc["num_registers"]
+    assert sum(regs["width_histogram"].values()) == regs["count"]
+    assert rep["roms"]["count"] == doc["num_roms"]
+    assert rep["roms"]["bits_stored"] == 32 * rom_words
+    assert rep["roms"]["bits_minimal"] <= rep["roms"]["bits_stored"]
+    # widths never exceed the carrier; the histogram keys are widths
+    assert all(1 <= int(w) <= 32 for w in regs["width_histogram"])
+    assert regs["bits_allocated"] <= regs["bits_carrier"]
+
+
+@pytest.mark.parametrize("target", EXECUTABLE)
+def test_netlist_declares_the_allocated_widths(target):
+    """program.v's memory declarations carry the alloc.json histogram:
+    count the ``reg signed [W-1:0]`` declarations per width and compare
+    (i1 registers are the unsigned 1-bit memories)."""
+    import re
+    rep = _load(target, "alloc.json")
+    with open(os.path.join(IR_DIR, target, "program.v")) as f:
+        text = f.read()
+    decl = re.compile(
+        r"^\s*reg(?:\s+signed\s+\[(\d+):0\])?\s+(r\d+)\s*\[", re.M)
+    hist: dict = {}
+    for m in decl.finditer(text):
+        w = int(m.group(1)) + 1 if m.group(1) else 1
+        hist[str(w)] = hist.get(str(w), 0) + 1
+    want = dict(rep["registers"]["width_histogram"])
+    # ROM-backed registers are $readmemh memories, not r<i> declarations,
+    # so the netlist histogram must equal the allocator's exactly
+    assert hist == want, (
+        f"{target}: program.v declares widths {hist}, alloc.json "
+        f"allocated {want}")
